@@ -1,0 +1,161 @@
+"""Analytic roofline cost model (primary source for §Roofline).
+
+Why analytic: XLA-CPU ``cost_analysis()`` counts while-loop bodies ONCE,
+so any scanned model (all of ours — layers, microbatches, CE blocks,
+flash blocks are lax.scan) is undercounted by the trip product.  The
+dry-run JSONs keep the HLO per-iteration numbers for reference; the
+roofline terms below are computed from the architecture math and the
+sharding design — every formula is stated here and checkable.
+
+Conventions (per chip, per step):
+  FLOPs:
+    matmul fwd        2 * N_active * tokens
+    attention         4 * B * S * ctx_avg * H * hd * L_attn  (QK^T + PV)
+    train multiplier  fwd(1) + remat replays (1 for 1-level, 2 for 2-level)
+                      + bwd(2) -> 4x or 5x the fwd matmul term
+  HBM bytes:
+    weights           params_bytes / chips, read once per fwd replay
+    KV cache (decode) full cache read per emitted token (+ write of 1 tok)
+    activations       2 bytes * tokens * d * L * rw_factor
+    optimizer (train) read+write moments and params
+  Collective bytes (from the sharding design, ring algorithms):
+    FSDP all-gather   params_bytes / tp  per fwd replay
+    grad reduce+param scatter (train)  2 * params_bytes_fp32 / tp
+    MoE a2a           2 * 2bytes * tokens_local * d * topk (dispatch+combine)
+    decode seq-shard  per-layer (B_loc, H, hd) partial-softmax all-reduce
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+BF16 = 2
+
+
+def _mesh_dims(mesh: str):
+    if mesh == "2x16x16":
+        return 512, 32, 16          # chips, dp, tp
+    return 256, 16, 16
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    if cfg.family == "rwkv6":
+        return 0
+    if cfg.family == "rglru_hybrid":
+        return cfg.n_layers // 3
+    if cfg.family == "encdec":
+        return cfg.n_layers * 2 + cfg.encoder.n_layers   # self+cross+enc
+    return cfg.n_layers
+
+
+def _ctx_avg(cfg: ModelConfig, shape: ShapeSpec, window: int) -> float:
+    S = min(shape.seq_len, cfg.max_seq) if cfg.family == "encdec" \
+        else shape.seq_len
+    if shape.kind == "decode":
+        return min(S, window) if window else S
+    half = S / 2
+    return min(half, window) if window else half
+
+
+def _window(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    if cfg.family == "rglru_hybrid":
+        return cfg.rglru.window
+    if shape.name == "long_500k" and cfg.family in ("dense", "moe",
+                                                    "mla_moe", "vlm"):
+        return 8192
+    return 0
+
+
+def kv_bytes_total(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """Whole decode-cache bytes (bf16) across chips."""
+    S = min(shape.seq_len, cfg.max_seq) if cfg.family == "encdec" \
+        else shape.seq_len
+    per_tok = cfg.kv_bytes_per_token(BF16)
+    state = 0.0
+    if cfg.family == "rwkv6":
+        r = cfg.rwkv
+        state = cfg.n_layers * (cfg.n_heads * r.head_dim ** 2 * 4
+                                + 2 * cfg.d_model * BF16)
+    if cfg.family == "rglru_hybrid":
+        g = cfg.rglru
+        n_rec = cfg.n_layers - cfg.n_layers // 3
+        state = n_rec * (g.lru_width * 4 + (g.conv_width - 1)
+                         * g.lru_width * BF16)
+        S = min(S, g.window)  # ring cache is window-sized... full alloc:
+        S = shape.seq_len     # we allocate full length (spec-faithful)
+    return shape.global_batch * (S * per_tok + state)
+
+
+def analytic_cell(arch: str, shape_name: str, mesh: str = "16x16",
+                  n_micro: int = 1, remat_replays: int = 2) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips, dp, tp = _mesh_dims(mesh)
+    B = shape.global_batch
+    S = min(shape.seq_len, cfg.max_seq) if cfg.family == "encdec" \
+        else shape.seq_len
+    window = _window(cfg, shape)
+    N = cfg.active_param_count()
+    pbytes = cfg.param_count() * BF16
+
+    tokens = B if shape.kind == "decode" else B * S
+    # batch shards over dp; every tp chip sees its full dp-shard of tokens
+    tok_chip = tokens / dp
+
+    ctx = _ctx_avg(cfg, shape, window)
+    La = _attn_layers(cfg)
+    attn_fwd = 4.0 * tokens * ctx * cfg.n_heads * cfg.head_dim * La
+    mat_fwd = 2.0 * N * tokens
+
+    if shape.kind == "train":
+        mult = 1 + remat_replays + 2              # fwd + replays + bwd
+        flops_tot = (mat_fwd + attn_fwd) * mult
+        n_fwd_passes = (1 + remat_replays) * n_micro
+    else:
+        flops_tot = mat_fwd + attn_fwd
+        n_fwd_passes = 1
+    flops_chip = flops_tot / chips
+
+    # ---- HBM bytes / chip ------------------------------------------- #
+    w_chip = pbytes / chips
+    act = 2.0 * tok_chip / tp * cfg.d_model * max(cfg.n_layers, 1) * BF16
+    bytes_chip = w_chip * max(n_fwd_passes, 1) + act
+    if shape.kind == "decode":
+        bytes_chip += kv_bytes_total(cfg, shape) / chips
+    if shape.kind == "train":
+        opt_bytes = cfg.param_count() * (2 if True else 8)  # int8 m+v rw
+        bytes_chip += 2 * (opt_bytes + pbytes) / chips
+
+    # ---- collective bytes / chip -------------------------------------- #
+    coll = pbytes / tp * max(n_fwd_passes, 1) * (dp - 1) / dp   # FSDP AG
+    if shape.kind == "train":
+        coll += 2.0 * cfg.param_count() * 4 / tp                # grad RS+AG
+    if cfg.moe is not None:
+        coll += 2 * 2 * BF16 * tok_chip * cfg.d_model * cfg.moe.top_k \
+            * max(n_fwd_passes, 1)
+    if shape.kind == "decode":
+        # seq-sharded cache: per-layer partial-softmax combine
+        coll += La * (B / dp) * cfg.n_heads * cfg.head_dim * 4 * 2
+
+    t_comp = flops_chip / PEAK_FLOPS
+    t_mem = bytes_chip / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    model_f = (6.0 if shape.kind == "train" else 2.0) * N * tokens
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dom, "bound_s": terms[dom],
+        "roofline_frac": t_comp / terms[dom] if terms[dom] else 0.0,
+        "model_flops": model_f,
+        "useful_ratio": model_f / (flops_tot or 1),
+        "flops_chip": flops_chip, "bytes_chip": bytes_chip,
+        "coll_chip": coll,
+    }

@@ -1,0 +1,57 @@
+"""Paper Fig. 10: max active contexts under a switching-latency
+constraint, across memory budgets.  We sweep context counts per budget
+and report the largest count whose mean switch latency meets the
+constraint (linear interpolation between sweep points)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_events, csv_line, make_service, replay
+
+BUDGETS = (600_000, 1_200_000, 2_400_000)
+COUNTS = (2, 6, 12, 18)
+LIMITS_MS = (0.5, 2.0)
+
+
+def sweep(policy: str, budget: int, counts=COUNTS, max_ctx: int = 256,
+          scale: float = 0.06):
+    xs, ys = [], []
+    for n in counts:
+        events = bench_events(n, 3 * n, pattern="random", seed=n,
+                              scale=scale)
+        svc = make_service(policy, budget, max_ctx=max_ctx)
+        st = replay(svc, events)
+        svc.close()
+        xs.append(n)
+        ys.append(st["switch_mean_s"] * 1e3)
+    return np.asarray(xs, float), np.asarray(ys, float)
+
+
+def max_from_sweep(xs, ys, limit_ms: float) -> float:
+    if ys[0] > limit_ms:
+        return 0.0
+    ok = ys <= limit_ms
+    if ok.all():
+        return float(xs[-1])
+    i = int(np.argmax(~ok))
+    x0, x1, y0, y1 = xs[i - 1], xs[i], ys[i - 1], ys[i]
+    return float(x0 + (limit_ms - y0) * (x1 - x0) / max(y1 - y0, 1e-9))
+
+
+def run(quick: bool = False):
+    budgets = BUDGETS[:2] if quick else BUDGETS
+    counts = (2, 4, 8) if quick else COUNTS
+    rows = {}
+    for policy in ("llms", "vllm_sq"):
+        for budget in budgets:
+            xs, ys = sweep(policy, budget, counts)
+            for limit in LIMITS_MS[:1] if quick else LIMITS_MS:
+                n = max_from_sweep(xs, ys, limit)
+                rows[(policy, budget, limit)] = n
+                csv_line(f"fig10/{policy}/budget{budget}/limit{limit}ms",
+                         n * 1e6, f"max_contexts={n:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 11: max active contexts under a 0.5 ms switching constraint
+across maximal context lengths (fixed budget)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_line
+from benchmarks.fig10_budgets import max_from_sweep, sweep
+
+LENGTHS = (128, 256, 512)
+
+
+def run(quick: bool = False):
+    rows = {}
+    lens = LENGTHS[:2] if quick else LENGTHS
+    counts = (2, 4) if quick else (2, 6, 12)
+    for policy in ("llms", "vllm_sq"):
+        for max_ctx in lens:
+            xs, ys = sweep(policy, 1_200_000, counts=counts,
+                           max_ctx=max_ctx, scale=0.04 * max_ctx / 256)
+            n = max_from_sweep(xs, ys, 0.5)
+            rows[(policy, max_ctx)] = n
+            csv_line(f"fig11/{policy}/ctx{max_ctx}", n * 1e6,
+                     f"max_contexts={n:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

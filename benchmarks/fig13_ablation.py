@@ -1,0 +1,27 @@
+"""Paper Fig. 13: ablation — LLMS without each of its three techniques
+(tolerance-aware compression / swapping-recompute pipeline / chunk
+lifecycle management) on the same trace."""
+from __future__ import annotations
+
+from benchmarks.common import bench_events, csv_line, make_service, replay
+
+VARIANTS = ("llms", "llms_nocomp", "llms_nopipe", "llms_nolife")
+
+
+def run(quick: bool = False):
+    n_ctx, n_calls = (4, 12) if quick else (8, 28)
+    budget = 500_000            # tight enough that llms itself swaps
+    events = bench_events(n_ctx, n_calls, pattern="markov", seed=3)
+    rows = {}
+    for policy in VARIANTS:
+        svc = make_service(policy, budget)
+        st = replay(svc, events)
+        svc.close()
+        rows[policy] = st
+        csv_line(f"fig13/{policy}", st["switch_mean_s"] * 1e6,
+                 f"p99_us={st['switch_p99_s']*1e6:.0f};mem={st['mem_used']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 14: influence of chunk size on switching latency (too small
+wastes I/O bandwidth per op; too large swaps redundant data)."""
+from __future__ import annotations
+
+from benchmarks.common import bench_events, csv_line, make_service, replay
+
+SIZES = (4, 8, 16, 32, 64)
+
+
+def run(quick: bool = False):
+    sizes = (8, 16, 32) if quick else SIZES
+    n_ctx, n_calls = (4, 12) if quick else (6, 22)
+    budget = 500_000
+    events = bench_events(n_ctx, n_calls, pattern="markov", seed=5)
+    rows = {}
+    for cs in sizes:
+        svc = make_service("llms", budget, chunk_tokens=cs)
+        st = replay(svc, events)
+        svc.close()
+        rows[cs] = st
+        csv_line(f"fig14/chunk{cs}", st["switch_mean_s"] * 1e6,
+                 f"p99_us={st['switch_p99_s']*1e6:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

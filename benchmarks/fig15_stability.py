@@ -1,0 +1,45 @@
+"""Paper Fig. 15: service stability.
+(a) influence on LLM inference: per-call inference time with LLMS
+    managing contexts vs the uncompressed baseline (expect within ~5%).
+(b) sensitivity to calling frequency: switch latency at high vs low
+    Poisson rates — fast arrivals leave no idle time for the async AoT
+    writes to drain before the next switch-in contends for the disk.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import bench_events, csv_line, make_service, replay
+
+def run(quick: bool = False):
+    n_ctx, n_calls = (3, 10) if quick else (4, 20)
+    rows = {}
+
+    # (a) inference-time influence, generous budget (no swapping at all)
+    events = bench_events(n_ctx, n_calls, pattern="markov", seed=7)
+    infer = {}
+    for policy in ("llms", "vllm_s"):
+        svc = make_service(policy, budget=64 << 20)
+        replay(svc, events)
+        infer[policy] = float(np.mean([r["infer_s"] for r in svc.records]))
+        svc.close()
+    delta = (infer["llms"] - infer["vllm_s"]) / infer["vllm_s"]
+    rows["infer_delta"] = delta
+    csv_line("fig15a/llms_infer", infer["llms"] * 1e6,
+             f"vs_unmanaged={infer['vllm_s']*1e6:.0f}us;delta={delta:+.2%}")
+
+    # (b) calling-rate sensitivity under pressure
+    for rate, tag in ((1 / 300.0, "slow_5min"), (1 / 2.0, "fast_2s")):
+        events = bench_events(n_ctx, n_calls, pattern="markov", seed=8,
+                              rate_per_s=rate)
+        svc = make_service("llms", budget=500_000)
+        st = replay(svc, events, idle_flush_s=60.0)
+        svc.close()
+        rows[tag] = st
+        csv_line(f"fig15b/{tag}", st["switch_mean_s"] * 1e6,
+                 f"p99_us={st['switch_p99_s']*1e6:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 9: average context-switching latency, LLMS vs baselines
+(LMK / Swapping / VLLM-S / VLLM-SQ) across switching patterns.
+
+Scaled to the CPU container: reduced smollm, 6 active contexts, tight
+memory budget (~35% of the fp16 working-set) so swapping actually
+happens, markov + random patterns.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_events, csv_line, make_service, replay
+
+POLICIES = ("llms", "vllm_sq", "vllm_s", "swap", "lmk")
+
+
+def run(quick: bool = False):
+    n_ctx, n_calls = (4, 10) if quick else (6, 26)
+    budget = 1_200_000        # bytes: ~25% of the fp16 working set
+    rows = {}
+    for pattern in ("markov",) if quick else ("markov", "random"):
+        events = bench_events(n_ctx, n_calls, pattern=pattern)
+        for policy in POLICIES:
+            svc = make_service(policy, budget)
+            st = replay(svc, events)
+            svc.close()
+            rows[(pattern, policy)] = st
+            csv_line(f"fig9/{pattern}/{policy}",
+                     st["switch_mean_s"] * 1e6,
+                     f"p99_us={st['switch_p99_s']*1e6:.0f};"
+                     f"mem={st['mem_used']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

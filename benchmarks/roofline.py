@@ -1,0 +1,115 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell, from reports/dryrun_*_16x16.json:
+
+  compute term    = HLO_FLOPs_per_chip / 197e12        (bf16 peak / chip)
+  memory term     = HLO_bytes_per_chip / 819e9         (HBM bw / chip)
+  collective term = collective_bytes_per_chip / 50e9   (ICI / link)
+
+cost_analysis() on the post-SPMD module reports PER-PARTITION flops and
+bytes; collective bytes come from the HLO parse (ring multipliers, see
+launch/dryrun.py).  MODEL_FLOPS = 6*N(_active)*D for train (fwd+bwd) and
+2*N*D for inference cells; the ratio MODEL_FLOPS / (chips * HLO_FLOPs)
+flags remat/redundancy waste (>1x expected under 2-level remat: the
+recompute factor is visible, not hidden).
+
+Usage: PYTHONPATH=src:. python -m benchmarks.roofline [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.global_batch * min(shape.seq_len,
+                                        cfg.max_seq if cfg.family == "encdec"
+                                        else shape.seq_len)
+        return 2.0 * n_active * toks
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(rec: Dict) -> Optional[Dict]:
+    """Merge the analytic model (primary; see analytic.py for why) with
+    the HLO-derived reference numbers (per-scan-iteration on XLA-CPU)."""
+    if rec["status"] != "ok":
+        return None
+    from benchmarks.analytic import analytic_cell
+    from repro.launch.dryrun import micro_steps
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_micro = micro_steps(cfg, shape, rec["mesh"] == "2x16x16") \
+        if shape.kind == "train" else 1
+    replays = 2 if cfg.n_layers >= 16 else 1
+    row = analytic_cell(rec["arch"], rec["shape"], rec["mesh"],
+                        n_micro=n_micro, remat_replays=replays)
+    row["hlo_flops_periter"] = rec["flops"]
+    row["hlo_bytes_periter"] = rec["bytes_accessed"]
+    row["hlo_coll_periter"] = rec["collectives"]["total"]
+    row["temp_gib"] = rec["memory"]["temp_size_in_bytes"] / 2**30
+    row["args_gib"] = rec["memory"]["argument_size_in_bytes"] / 2**30
+    return row
+
+
+def load_all(mesh: str = "16x16", out_dir: str = "reports") -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir,
+                                           f"dryrun_*_{mesh}.json"))):
+        r = analyze(json.load(open(f)))
+        if r:
+            rows.append(r)
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | useful FLOP ratio | temp GiB/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        body += (f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} "
+                 f"| {r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} "
+                 f"| **{r['dominant']}** | {r['roofline_frac']:.3f} "
+                 f"| {r['useful_ratio']:.2f} | {r['temp_gib']:.2f} |\n")
+    return hdr + body
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--write", default=None,
+                    help="write markdown table to this file")
+    args = ap.parse_args()
+    rows = load_all(args.mesh)
+    table = markdown_table(rows)
+    print(table)
+    by_dom = {}
+    for r in rows:
+        by_dom.setdefault(r["dominant"], []).append(r)
+    for k, v in by_dom.items():
+        print(f"# {k}-bound cells: {len(v)}")
+    if args.write:
+        with open(args.write, "w") as f:
+            f.write(table)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Benchmark entry point: one module per paper figure + the roofline
+table from the dry-run artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.run [--quick] [--only fig9,...]
+
+Every line printed by a figure module is ``name,us_per_call,derived``.
+Results are also written to reports/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset, e.g. fig9,fig12")
+    args = ap.parse_args()
+
+    from benchmarks import (fig9_switching, fig10_budgets, fig11_ctxlen,
+                            fig12_compression, fig13_ablation,
+                            fig14_chunksize, fig15_stability)
+    modules = {
+        "fig9": fig9_switching, "fig10": fig10_budgets,
+        "fig11": fig11_ctxlen, "fig12": fig12_compression,
+        "fig13": fig13_ablation, "fig14": fig14_chunksize,
+        "fig15": fig15_stability,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    results, failures = {}, []
+    for name, mod in modules.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ({mod.__doc__.splitlines()[0].strip()}) ===")
+        try:
+            mod.run(quick=args.quick)
+            results[name] = {"wall_s": round(time.time() - t0, 1)}
+        except Exception as e:            # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.0f}s")
+
+    # roofline table (from dry-run artifacts, if present)
+    try:
+        from benchmarks.roofline import load_all
+        rows = load_all("16x16")
+        if rows:
+            print("# === roofline (16x16, from reports/) ===")
+            for r in rows:
+                print(f"roofline/{r['arch']}/{r['shape']},"
+                      f"{r['bound_s']*1e6:.1f},"
+                      f"dominant={r['dominant']};"
+                      f"frac={r['roofline_frac']:.3f}")
+            results["roofline_cells"] = len(rows)
+    except Exception as e:                # noqa: BLE001
+        failures.append(("roofline", repr(e)))
+
+    # §Perf hillclimb variants: before/after HLO collective bytes
+    try:
+        import glob as _glob
+        import json as _json
+        for vf in sorted(_glob.glob("reports/dryrun_*_16x16_*.json")):
+            v = _json.load(open(vf))
+            base_f = vf.replace(f"_{v['variant']}", "")
+            if v["status"] != "ok" or not os.path.exists(base_f):
+                continue
+            b = _json.load(open(base_f))
+            print(f"perf/{v['arch']}/{v['shape']}/{v['variant']},"
+                  f"{v['collectives']['total']/2**20*1e3:.0f},"
+                  f"coll_MiB={v['collectives']['total']/2**20:.1f};"
+                  f"baseline_MiB={b['collectives']['total']/2**20:.1f};"
+                  f"bytes={v['bytes_accessed']:.3g}")
+    except Exception as e:                # noqa: BLE001
+        failures.append(("perf-variants", repr(e)))
+
+    os.makedirs("reports", exist_ok=True)
+    with open("reports/bench_results.json", "w") as f:
+        json.dump({"results": results, "failures": failures}, f, indent=1)
+    if failures:
+        print("# FAILURES:", failures)
+        raise SystemExit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

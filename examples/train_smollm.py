@@ -1,0 +1,20 @@
+"""End-to-end training driver example: train the reduced smollm-360m on
+the synthetic Markov corpus for a few hundred steps with checkpointing
+and resume (fault-tolerance path).
+
+  PYTHONPATH=src python examples/train_smollm.py --steps 200
+  PYTHONPATH=src python examples/train_smollm.py --steps 300 --resume
+
+This is a thin veneer over ``repro.launch.train`` — the same driver the
+production mesh uses (the dry-run lowers its train_step on 256 chips).
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    if "--reduced" not in sys.argv:
+        sys.argv.append("--reduced")
+    if not any(a.startswith("--arch") for a in sys.argv):
+        sys.argv += ["--arch", "smollm-360m"]
+    main()

@@ -1,0 +1,21 @@
+"""deepseek-67b [dense] — llama-arch.
+
+95L d_model=8192 64H (GQA kv=8) d_ff=22016 vocab=102400.
+[arXiv:2401.02954; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    n_layers=95,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=22016,
+    vocab=102400,
+    head_dim=128,
+    rope_theta=10000.0,
+    max_seq=4096,
+    source="arXiv:2401.02954; hf",
+)

@@ -1,0 +1,29 @@
+"""whisper-base [audio] — enc-dec, conv frontend (stub).
+
+6L d_model=512 8H d_ff=2048 vocab=51865.
+[arXiv:2212.04356; unverified]
+
+The assignment specifies the transformer BACKBONE only: the conv/mel
+frontend is a stub; ``input_specs`` provides precomputed frame embeddings
+(batch, 1500, 512).  n_layers refers to the decoder; the encoder has 6
+layers as well.  The decoder's learned positional embedding is sized to
+the requested shape (the backbone is parameterizable; the real model caps
+at 448 positions — noted in DESIGN.md).
+"""
+from repro.configs.base import EncoderConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    d_model=512,
+    n_heads=8,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=51865,
+    head_dim=64,
+    max_seq=448,
+    norm_eps=1e-5,
+    encoder=EncoderConfig(n_layers=6, n_frames=1500),
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,10 @@
+"""LLMS core: the paper's contribution (chunked KV compression/swapping).
+
+Public surface:
+  LLMService / LLMSConfig / LLMCtxStub  (paper Table 1 API)
+  ChunkCodec / CompressedChunk          (chunk memory model, Fig. 4)
+  compression.plan_buckets              (tolerance-aware planner, Eq. 3)
+  pipeline.plan_split                   (swapping-recompute planner, Eq. 4)
+  lifecycle.LCTRUQueue                  (eviction order, §3.4)
+"""
+from repro.core.service import LLMService, LLMSConfig, LLMCtxStub  # noqa

@@ -1,0 +1,155 @@
+"""Chunked view of a context's KV cache (paper §3.1, Fig. 4).
+
+A chunk covers ``chunk_tokens`` consecutive tokens ACROSS ALL LAYERS
+(the paper's layout).  The codec canonicalizes each family's
+sequence-indexed cache leaves into (T, F) blocks — T chunk tokens,
+F = flattened (layers x heads x channels) — which is the layout the
+quantizer (kernels/ref.py, kernels/chunk_quant.py) operates on.
+
+Family applicability is data-driven: ``SEQ_LEAVES`` names the cache
+leaves that grow with the token axis.  rwkv6 has none (constant-size
+state) — its context degenerates to a single state blob, handled by the
+service directly (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+Array = jax.Array
+
+# cache leaves that carry a token axis (axis AFTER the (layer, batch) dims)
+SEQ_LEAVES = {
+    "dense": ("k", "v"),
+    "moe": ("k", "v"),
+    "mla_moe": ("ckv", "kpe"),
+    "vlm": ("k", "v"),            # xk/xv are image-resident (swap-only blob)
+    "rglru_hybrid": ("k", "v"),   # conv/lru are snapshot state blobs
+    "encdec": ("k", "v"),         # xk/xv resident
+    "rwkv6": (),                  # constant-size state: no sequence leaves
+}
+TOKEN_AXIS = 2                     # (L, B, S, ...) for every seq leaf
+
+
+@dataclass
+class CompressedChunk:
+    """One chunk's compressed payload: leaf -> (packed int8, scales)."""
+    bits: int
+    n_tokens: int
+    data: Dict[str, Tuple[np.ndarray, np.ndarray]]
+    shapes: Dict[str, Tuple[int, ...]]          # original leaf slice shapes
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes + s.nbytes for p, s in self.data.values())
+
+
+class ChunkCodec:
+    """Extract / insert / (de)quantize chunks of a cache pytree."""
+
+    def __init__(self, family: str, chunk_tokens: int = 16):
+        self.leaves = SEQ_LEAVES[family]
+        self.cs = chunk_tokens
+        if not self.leaves:
+            raise ValueError(f"family {family!r} has no sequence leaves; "
+                             "use whole-state management")
+        # jitted per-(bits, shape) quant/dequant
+        self._q = jax.jit(kops.chunk_quantize, static_argnames=("bits",))
+        self._dq = jax.jit(kops.chunk_dequantize,
+                           static_argnames=("bits", "n_tokens"))
+
+    # -- canonical (T, F) view ------------------------------------------ #
+    def extract(self, cache, lo: int, hi: int) -> Dict[str, Array]:
+        """Slice tokens [lo, hi) of each seq leaf -> (T, F) arrays."""
+        out = {}
+        for name in self.leaves:
+            a = cache[name]                        # (L, B, S, ...)
+            sl = jax.lax.slice_in_dim(a, lo, hi, axis=TOKEN_AXIS)
+            t = jnp.moveaxis(sl, TOKEN_AXIS, 0)    # (T, L, B, ...)
+            out[name] = t.reshape(t.shape[0], -1)
+        return out
+
+    def insert(self, cache, lo: int, blocks: Dict[str, Array]):
+        """Write (T, F) blocks back at token offset lo."""
+        new = dict(cache)
+        for name, blk in blocks.items():
+            a = cache[name]
+            T = blk.shape[0]
+            shp = list(a.shape)
+            shp[TOKEN_AXIS] = T
+            t = blk.reshape([T] + [s for i, s in enumerate(shp)
+                                   if i != TOKEN_AXIS])
+            t = jnp.moveaxis(t, 0, TOKEN_AXIS).astype(a.dtype)
+            idx = [0] * a.ndim
+            idx[TOKEN_AXIS] = lo
+            new[name] = jax.lax.dynamic_update_slice(a, t, tuple(idx))
+        return new
+
+    def scatter(self, cache, positions: Array, blocks: Dict[str, Array]):
+        """Write (T, F) blocks at arbitrary token ``positions`` (T,)."""
+        new = dict(cache)
+        for name, blk in blocks.items():
+            a = cache[name]
+            T = blk.shape[0]
+            shp = list(a.shape)
+            shp[TOKEN_AXIS] = T
+            t = blk.reshape([T] + [s for i, s in enumerate(shp)
+                                   if i != TOKEN_AXIS])
+            t = jnp.moveaxis(t, 0, TOKEN_AXIS).astype(a.dtype)
+            new[name] = a.at[:, :, positions].set(t)
+        return new
+
+    def leaf_slice_shape(self, cache_shapes: Dict[str, Tuple[int, ...]],
+                         name: str, T: int) -> Tuple[int, ...]:
+        shp = list(cache_shapes[name])
+        shp[TOKEN_AXIS] = T
+        return tuple(shp)
+
+    # -- compression ------------------------------------------------------ #
+    def compress(self, cache, lo: int, hi: int, bits: int) -> CompressedChunk:
+        blocks = self.extract(cache, lo, hi)
+        data, shapes = {}, {}
+        for name, blk in blocks.items():
+            packed, scale = self._q(blk, bits=bits)
+            data[name] = (np.asarray(packed), np.asarray(scale))
+            shapes[name] = blk.shape
+        return CompressedChunk(bits=bits, n_tokens=hi - lo, data=data,
+                               shapes=shapes)
+
+    def decompress(self, cc: CompressedChunk) -> Dict[str, Array]:
+        out = {}
+        for name, (packed, scale) in cc.data.items():
+            out[name] = self._dq(jnp.asarray(packed), jnp.asarray(scale),
+                                 bits=cc.bits, n_tokens=cc.n_tokens)
+        return out
+
+    def raw_chunk_bytes(self, cc_or_shapes, bytes_per_elem: int = 2) -> int:
+        """Uncompressed (bf16) footprint of a chunk with these shapes."""
+        shapes = cc_or_shapes.shapes if isinstance(cc_or_shapes,
+                                                   CompressedChunk) \
+            else cc_or_shapes
+        return sum(int(np.prod(s)) * bytes_per_elem for s in shapes.values())
+
+
+@dataclass
+class ChunkMeta:
+    """Lifecycle record for one chunk (paper §3.4)."""
+    idx: int
+    bits: int = 16                 # 16 = uncompressed (raw bf16)
+    density: float = float("inf")  # unmeasured => treated as most dense
+    last_access: float = 0.0
+    in_memory: bool = True
+    on_disk: bool = False
+    dirty: bool = True             # differs from the on-disk copy
+    nbytes: int = 0
+
+
+def chunk_ranges(n_tokens: int, cs: int) -> List[Tuple[int, int]]:
+    return [(i, min(i + cs, n_tokens)) for i in range(0, n_tokens, cs)]

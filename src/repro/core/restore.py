@@ -1,0 +1,254 @@
+"""Swapping-recompute pipelined restore (paper §3.3, Fig. 8).
+
+The paper overlaps disk I/O with recompute at LAYER granularity: "the
+computation thread proceeds to the next layer only after the I/O thread
+for the current layer has completed".  To make that real (not
+whole-chunk-then-compute), chunk files are written in a **layer-major
+segmented format**: a pickled header + per-layer raw segments, so the
+I/O thread can stream layer l of every swapped chunk, dequantize it in
+numpy, and publish it while layer l-1 is still being recomputed.  The
+jitted recompute scan pulls layer l's I/O data through an ordered
+``jax.experimental.io_callback`` (``LayerFeed.fetch``).
+
+Layout per chunk file:
+    [u64 header_len][pickle header][layer 0 segment][layer 1 segment]...
+    segment l  = for each leaf: packed[(F_l rows) x T'] bytes
+                 + scales[F_l] fp32 bytes
+where packed is stored TRANSPOSED (F, T') so a layer's rows are
+contiguous on disk.
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import struct
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.chunks import CompressedChunk
+
+# ----------------------------------------------------------------------- #
+# Disk throttle: benchmarks emulate a mobile storage tier (the paper's
+# UFS/SATA) since the container's page cache would make I/O free.  Sleeps
+# happen on the I/O threads, so pipeline overlap dynamics stay realistic.
+# ----------------------------------------------------------------------- #
+_BW = None          # bytes/sec, None = unthrottled
+_LAT = 0.0          # per-op seconds
+
+
+def set_disk_throttle(bw_bytes_per_s=None, lat_s=0.0):
+    global _BW, _LAT
+    _BW, _LAT = bw_bytes_per_s, lat_s
+
+
+def _throttle(nbytes: int):
+    if _BW:
+        import time as _t
+        _t.sleep(_LAT + nbytes / _BW)
+
+
+# --------------------------------------------------------------------- #
+# numpy codec (mirror of kernels/ref.py, for the I/O thread)
+# --------------------------------------------------------------------- #
+def np_dequantize(packed: np.ndarray, scale: np.ndarray, bits: int,
+                  n_tokens: int) -> np.ndarray:
+    """packed (T', F) int8 (or fp16 when bits=16) -> (T, F) fp32."""
+    if bits == 16:
+        return packed.astype(np.float32)
+    if bits == 8:
+        return packed.astype(np.float32) * scale
+    per = 8 // bits
+    u = packed.view(np.uint8)
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    outs = []
+    for j in range(per):
+        c = ((u >> (bits * j)) & mask).astype(np.int32)
+        c = np.where(c >= half, c - (1 << bits), c)
+        outs.append(c)
+    codes = np.stack(outs, axis=1).reshape(n_tokens, packed.shape[1])
+    return codes.astype(np.float32) * scale
+
+
+# --------------------------------------------------------------------- #
+# segmented chunk file format
+# --------------------------------------------------------------------- #
+def write_chunk_file(path: str, cc: CompressedChunk, n_layers: int) -> int:
+    """Serialize layer-major.  F must be layer-major (it is: the codec
+    flattens (L, B, heads, hd) with L outermost)."""
+    header = {"bits": cc.bits, "n_tokens": cc.n_tokens, "n_layers": n_layers,
+              "leaves": {}}
+    segs: List[bytes] = [b""] * n_layers
+    for name, (packed, scale) in cc.data.items():
+        Tp, F = packed.shape
+        assert F % n_layers == 0, (name, F, n_layers)
+        Fl = F // n_layers
+        isz = packed.dtype.itemsize
+        ssz = 0 if cc.bits == 16 else 4
+        header["leaves"][name] = {"Tp": Tp, "F": F, "Fl": Fl, "isz": isz,
+                                  "ssz": ssz, "shape": cc.shapes[name]}
+        pt = np.ascontiguousarray(packed.T)         # (F, T')
+        for l in range(n_layers):
+            segs[l] = segs[l] + pt[l * Fl:(l + 1) * Fl].tobytes()
+            if cc.bits != 16:
+                segs[l] = segs[l] + np.ascontiguousarray(
+                    scale[l * Fl:(l + 1) * Fl], dtype=np.float32).tobytes()
+    hdr = pickle.dumps(header, protocol=pickle.HIGHEST_PROTOCOL)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(struct.pack("<Q", len(hdr)))
+        f.write(hdr)
+        for s in segs:
+            f.write(s)
+    os.replace(tmp, path)
+    total = 8 + len(hdr) + sum(len(s) for s in segs)
+    _throttle(total)
+    return total
+
+
+def _read_header(f) -> Tuple[dict, int]:
+    (hlen,) = struct.unpack("<Q", f.read(8))
+    header = pickle.loads(f.read(hlen))
+    return header, 8 + hlen
+
+
+def _segment_size(header: dict) -> int:
+    return sum(m["Fl"] * m["Tp"] * m.get("isz", 1)
+               + m.get("ssz", 4) * m["Fl"]
+               for m in header["leaves"].values())
+
+
+def read_chunk_layer(f, header: dict, base: int, layer: int
+                     ) -> Dict[str, np.ndarray]:
+    """-> leaf -> dequantized (T, Fl) fp32 for one layer."""
+    seg = _segment_size(header)
+    f.seek(base + layer * seg)
+    buf = f.read(seg)
+    _throttle(seg)
+    out, off = {}, 0
+    bits, T = header["bits"], header["n_tokens"]
+    for name, m in header["leaves"].items():
+        dt = np.float16 if bits == 16 else np.int8
+        nb = m["Fl"] * m["Tp"] * m.get("isz", 1)
+        pt = np.frombuffer(buf[off:off + nb], dt).reshape(m["Fl"], m["Tp"])
+        off += nb
+        ns = m.get("ssz", 4) * m["Fl"]
+        sc = np.frombuffer(buf[off:off + ns], np.float32)
+        off += ns
+        out[name] = np_dequantize(np.ascontiguousarray(pt.T), sc, bits, T)
+    return out
+
+
+def read_chunk_file(path: str) -> CompressedChunk:
+    """Whole-chunk read (non-pipelined swap-in path)."""
+    with open(path, "rb") as f:
+        header, base = _read_header(f)
+        L = header["n_layers"]
+        data, shapes = {}, {}
+        per_leaf_packed = {n: [] for n in header["leaves"]}
+        per_leaf_scale = {n: [] for n in header["leaves"]}
+        seg = _segment_size(header)
+        f.seek(base)
+        buf = f.read(seg * L)
+        _throttle(seg * L)
+        dt = np.float16 if header["bits"] == 16 else np.int8
+        for l in range(L):
+            off = l * seg
+            for name, m in header["leaves"].items():
+                nb = m["Fl"] * m["Tp"] * m.get("isz", 1)
+                pt = np.frombuffer(buf[off:off + nb], dt
+                                   ).reshape(m["Fl"], m["Tp"])
+                off += nb
+                ns = m.get("ssz", 4) * m["Fl"]
+                sc = np.frombuffer(buf[off:off + ns], np.float32)
+                off += ns
+                per_leaf_packed[name].append(pt)
+                per_leaf_scale[name].append(sc)
+        for name, m in header["leaves"].items():
+            packed = np.concatenate(per_leaf_packed[name], axis=0).T
+            scale = np.concatenate(per_leaf_scale[name])
+            data[name] = (np.ascontiguousarray(packed),
+                          np.ascontiguousarray(scale))
+            shapes[name] = tuple(m["shape"])
+    return CompressedChunk(bits=header["bits"], n_tokens=header["n_tokens"],
+                           data=data, shapes=shapes)
+
+
+# --------------------------------------------------------------------- #
+# LayerFeed: the I/O thread publishing per-layer KV for the scan
+# --------------------------------------------------------------------- #
+class LayerFeed:
+    """Streams layer-l KV of every I/O chunk, one layer ahead of compute.
+
+    paths: chunk files in POSITION order; pad_chunks: extra zero chunks
+    appended so the assembled arrays match the jit bucket size.
+    """
+
+    def __init__(self, paths: Sequence[str], leaves: Sequence[str],
+                 n_layers: int, chunk_tokens: int,
+                 leaf_dims: Dict[str, Tuple[int, ...]],
+                 pad_chunks: int = 0,
+                 pool: Optional[ThreadPoolExecutor] = None):
+        self.paths = list(paths)
+        self.leaves = list(leaves)
+        self.n_layers = n_layers
+        self.cs = chunk_tokens
+        self.leaf_dims = leaf_dims          # leaf -> per-token dims e.g. (KV, hd)
+        self.pad = pad_chunks
+        self._ready: List[Optional[Dict[str, np.ndarray]]] = \
+            [None] * n_layers
+        self._events = [threading.Event() for _ in range(n_layers)]
+        self._pool = pool or ThreadPoolExecutor(max_workers=1)
+        self._own_pool = pool is None
+        self._fut = self._pool.submit(self._run)
+
+    def _run(self):
+        files, headers, bases = [], [], []
+        try:
+            for p in self.paths:
+                f = open(p, "rb")
+                h, b = _read_header(f)
+                files.append(f)
+                headers.append(h)
+                bases.append(b)
+            n_tok = (len(self.paths) + self.pad) * self.cs
+            for l in range(self.n_layers):
+                assembled = {
+                    name: np.zeros((n_tok,) + tuple(np.atleast_1d(
+                        self.leaf_dims[name])), np.float32)
+                    for name in self.leaves}
+                for ci, (f, h, b) in enumerate(zip(files, headers, bases)):
+                    got = read_chunk_layer(f, h, b, l)
+                    for name in self.leaves:
+                        blk = got[name]          # (T, Fl) layer-major slice
+                        shaped = blk.reshape(
+                            (self.cs,) + tuple(np.atleast_1d(
+                                self.leaf_dims[name])))
+                        assembled[name][ci * self.cs:(ci + 1) * self.cs] = \
+                            shaped
+                self._ready[l] = assembled
+                self._events[l].set()
+        finally:
+            for f in files:
+                f.close()
+            for e in self._events:           # unblock on failure
+                if not e.is_set():
+                    e.set()
+
+    def fetch(self, layer: int) -> Dict[str, np.ndarray]:
+        l = int(layer)
+        self._events[l].wait()
+        out = self._ready[l]
+        if out is None:
+            raise RuntimeError("LayerFeed I/O failed")
+        self._ready[l] = None                # free as consumed
+        return out
+
+    def close(self):
+        self._fut.result()
+        if self._own_pool:
+            self._pool.shutdown(wait=False)

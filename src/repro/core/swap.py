@@ -1,0 +1,130 @@
+"""Disk swap tier (paper §3.1 primitives; pickle-backed like the paper's
+prototype) with an async writer used by AoT swapping (§3.4).
+
+On a real TPU pod this is the host-DRAM/remote-store offload tier; the
+interface is the same (DESIGN.md §3).  All I/O happens on a dedicated
+thread pool so ``callLLM`` returns without waiting for swap-out — only
+``flush()`` (or a later read of the same key) synchronizes.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Dict, Optional, Tuple
+
+Key = Tuple[int, Any]              # (ctx_id, chunk_idx | "state")
+
+
+class DiskStore:
+    """Pickle-per-key chunk store with byte accounting."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._bytes: Dict[Key, int] = {}
+        self._lock = threading.Lock()
+
+    def _path(self, key: Key) -> str:
+        ctx, idx = key
+        return os.path.join(self.root, f"ctx{ctx}_chunk{idx}.pkl")
+
+    def write(self, key: Key, obj: Any) -> int:
+        from repro.core.restore import _throttle
+        blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        tmp = self._path(key) + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, self._path(key))          # atomic
+        _throttle(len(blob))
+        with self._lock:
+            self._bytes[key] = len(blob)
+        return len(blob)
+
+    def read(self, key: Key) -> Any:
+        from repro.core.restore import _throttle
+        with open(self._path(key), "rb") as f:
+            blob = f.read()
+        _throttle(len(blob))
+        return pickle.loads(blob)
+
+    def delete(self, key: Key):
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+        with self._lock:
+            self._bytes.pop(key, None)
+
+    def nbytes(self, key: Key) -> Optional[int]:
+        return self._bytes.get(key)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self._bytes.values())
+
+
+class AsyncSwapper:
+    """AoT swap-out executor + pipelined swap-in reads."""
+
+    def __init__(self, store: DiskStore, workers: int = 2):
+        self.store = store
+        self.pool = ThreadPoolExecutor(max_workers=workers,
+                                       thread_name_prefix="llms-io")
+        self._pending: Dict[Key, Future] = {}
+        self._lock = threading.Lock()
+
+    def submit(self, key: Key, fn, *args) -> Future:
+        """Track an arbitrary I/O job under ``key`` so flush() waits."""
+        with self._lock:
+            prev = self._pending.get(key)
+        if prev is not None:
+            prev.result()
+        fut = self.pool.submit(fn, *args)
+        with self._lock:
+            self._pending[key] = fut
+
+        def _done(_):
+            with self._lock:
+                if self._pending.get(key) is fut:
+                    del self._pending[key]
+        fut.add_done_callback(_done)
+        return fut
+
+    def write_async(self, key: Key, obj: Any) -> Future:
+        with self._lock:
+            prev = self._pending.get(key)
+        if prev is not None:
+            prev.result()                          # serialize same-key writes
+        fut = self.pool.submit(self.store.write, key, obj)
+        with self._lock:
+            self._pending[key] = fut
+
+        def _done(_):
+            with self._lock:
+                if self._pending.get(key) is fut:
+                    del self._pending[key]
+        fut.add_done_callback(_done)
+        return fut
+
+    def read(self, key: Key) -> Any:
+        with self._lock:
+            fut = self._pending.get(key)
+        if fut is not None:
+            fut.result()                           # wait for in-flight write
+        return self.store.read(key)
+
+    def read_async(self, key: Key) -> Future:
+        return self.pool.submit(self.read, key)
+
+    def flush(self):
+        with self._lock:
+            futs = list(self._pending.values())
+        for f in futs:
+            f.result()
+
+    def shutdown(self):
+        self.flush()
+        self.pool.shutdown(wait=True)

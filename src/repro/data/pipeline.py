@@ -1,0 +1,56 @@
+"""Deterministic, stateless synthetic data pipeline.
+
+Every batch is a pure function of (step, shard) — the straggler/elastic
+story depends on this: a replacement worker (or a different data-parallel
+world size) regenerates exactly the batches it owes, no data state to
+checkpoint (DESIGN.md §6).
+
+The corpus is a seeded first-order Markov language (each token has 8
+plausible successors) so models LEARN from it — the Fig.-12 compression
+benchmark needs a model whose perplexity means something.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+def markov_table(vocab: int, branch: int = 8, seed: int = 1234
+                 ) -> np.ndarray:
+    """(vocab, branch) successor table, deterministic in seed."""
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, vocab, size=(vocab, branch)).astype(np.int32)
+
+
+def markov_sample(table: np.ndarray, length: int, rng: np.random.RandomState
+                  ) -> np.ndarray:
+    vocab, branch = table.shape
+    out = np.empty(length, np.int32)
+    t = rng.randint(vocab)
+    choices = rng.randint(0, branch, size=length)
+    for i in range(length):
+        out[i] = t
+        t = table[t, choices[i]]
+    return out
+
+
+@dataclass
+class SyntheticLM:
+    vocab: int
+    seq: int
+    batch: int
+    n_shards: int = 1
+    shard: int = 0
+    branch: int = 8
+    seed: int = 1234
+
+    def __post_init__(self):
+        self.table = markov_table(self.vocab, self.branch, self.seed)
+
+    def batch_for_step(self, step: int):
+        rng = np.random.RandomState(
+            (step * 1_000_003 + self.shard * 7919 + self.seed) % (2**31 - 1))
+        toks = np.stack([markov_sample(self.table, self.seq + 1, rng)
+                         for _ in range(self.batch)])
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}

@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: flash-attention forward fused with the paper's
+Eq.-1 information-density statistic.
+
+The paper's prototype reads attention matrices off the accelerator to
+estimate per-token density — impossible at 32k context on TPU (the
+(B,H,Sq,Sk) matrix would be terabytes).  Here the density (per-key
+attention mass) is accumulated inside the online-softmax loop:
+
+  pass 1 (kernel `_fwd`):  classic flash forward; emits out, row max m,
+          row sum l (grid: B x H x nQ x nK, k innermost, VMEM scratch).
+  pass 2 (kernel `_mass`): re-walks the score blocks with the final
+          (m, l) and accumulates sum_q p[q,k] per key block
+          (grid: B x H x nK x nQ, q innermost).
+
+Both passes stream K/V through VMEM tiles; nothing (B,H,Sq,Sk)-sized is
+ever materialized.  The wrapper normalizes by per-key visible-query
+counts and head count (Eq. 1).  Oracle: kernels/ref.py::attn_density_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _mask(iq, ik, bq, bk, sq_valid, sk_valid, window, n_sinks):
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    m = (k_pos <= q_pos) & (k_pos < sk_valid) & (q_pos < sq_valid)
+    if window > 0:
+        m = m & ((k_pos > q_pos - window) | (k_pos < n_sinks))
+    return m
+
+
+def _fwd(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+         acc, mx, lx, *, bq, bk, nk, scale, sq, sk, window, n_sinks):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mx[...] = jnp.full_like(mx, NEG_INF)
+        lx[...] = jnp.zeros_like(lx)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T) * scale                               # (bq, bk)
+    s = jnp.where(_mask(iq, ik, bq, bk, sq, sk, window, n_sinks), s,
+                  NEG_INF)
+    m_prev = mx[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    lx[...] = lx[...] * alpha + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * alpha[:, None] + p @ v
+    mx[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _done():
+        l = lx[...]
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+        m_ref[0, 0] = mx[...]
+        l_ref[0, 0] = l
+
+
+def _mass(q_ref, k_ref, m_ref, l_ref, mass_ref, macc,
+          *, bq, bk, nq, scale, sq, sk, window, n_sinks):
+    iq = pl.program_id(3)
+    ik = pl.program_id(2)
+
+    @pl.when(iq == 0)
+    def _init():
+        macc[...] = jnp.zeros_like(macc)
+
+    q = q_ref[0, 0].astype(jnp.float32)
+    k = k_ref[0, 0].astype(jnp.float32)
+    s = (q @ k.T) * scale
+    valid = _mask(iq, ik, bq, bk, sq, sk, window, n_sinks)
+    s = jnp.where(valid, s, NEG_INF)
+    m = m_ref[0, 0]
+    l = jnp.maximum(l_ref[0, 0], 1e-30)
+    p = jnp.exp(s - m[:, None]) / l[:, None]
+    p = jnp.where(valid, p, 0.0)
+    macc[...] = macc[...] + jnp.sum(p, axis=0)          # (bk,)
+
+    @pl.when(iq == nq - 1)
+    def _done():
+        mass_ref[0, 0] = macc[...]
+
+
+def attn_density(q: Array, k: Array, v: Array, window: int = 0,
+                 n_sinks: int = 0, interpret: bool = False,
+                 bq: int = 128, bk: int = 128) -> Tuple[Array, Array]:
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd) -> (out (B,Sq,H,hd),
+    density (B,Sk))."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / float(np.sqrt(hd))
+    bq = min(bq, max(Sq, 8))
+    bk = min(bk, max(Sk, 8))
+    nq = (Sq + bq - 1) // bq
+    nk = (Sk + bk - 1) // bk
+    Sqp, Skp = nq * bq, nk * bk
+
+    qt = jnp.moveaxis(q, 2, 1)                           # (B,H,Sq,hd)
+    kt = jnp.moveaxis(k, 2, 1)                           # (B,KV,Sk,hd)
+    vt = jnp.moveaxis(v, 2, 1)
+    if Sqp != Sq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sqp - Sq), (0, 0)))
+    if Skp != Sk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skp - Sk), (0, 0)))
+
+    kw = dict(bq=bq, bk=bk, scale=scale, sq=Sq, sk=Sk, window=window,
+              n_sinks=n_sinks)
+    out, m, l = pl.pallas_call(
+        functools.partial(_fwd, nk=nk, **kw),
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, i, j: (b, h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, Sqp, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, H, Sqp), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, Sqp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+
+    mass = pl.pallas_call(
+        functools.partial(_mass, nq=nq, **kw),
+        grid=(B, H, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, j, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, j, i, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, j, i: (b, h, i)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, j, i: (b, h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bk), lambda b, h, j, i: (b, h, j)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Skp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bk,), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, m, l)
+
+    out = jnp.moveaxis(out[:, :, :Sq], 1, 2)             # (B,Sq,H,hd)
+    # Eq.-1 normalization: per key, divide by (H * visible query count)
+    k_pos = jnp.arange(Sk)
+    nvalid = jnp.asarray(Sq - k_pos if window <= 0 else None) \
+        if window <= 0 else None
+    if window > 0:
+        q_pos = jnp.arange(Sq)
+        vis = (k_pos[None, :] <= q_pos[:, None]) & \
+              ((k_pos[None, :] > q_pos[:, None] - window)
+               | (k_pos[None, :] < n_sinks))
+        nvalid = jnp.sum(vis, axis=0)
+    else:
+        nvalid = jnp.maximum(Sq - k_pos, 0)
+    nvalid = jnp.maximum(nvalid, 1)
+    density = jnp.sum(mass[:, :, :Sk], axis=1) / (H * nvalid[None, :])
+    return out, density.astype(jnp.float32)

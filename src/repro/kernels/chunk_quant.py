@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: chunk-wise KV quantization codec (paper §3.2/§4).
+
+The paper packs sub-byte codes "with parallel bit-shift operations" on a
+phone CPU; the TPU-native version tiles (chunk-tokens x channels) blocks
+into VMEM, computes per-channel symmetric scales on the VPU, and packs
+2/4-bit codes into int8 lanes with shifts.  Channel tiles are 128-lane
+aligned; the token axis (16 by default) sits on sublanes.
+
+Matches kernels/ref.py bit-exactly (tests sweep shapes/dtypes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import qmax_for
+
+Array = jax.Array
+LANES = 128
+
+
+def _quant_kernel(x_ref, packed_ref, scale_ref, *, bits: int, T: int):
+    x = x_ref[...].astype(jnp.float32)                 # (T, BF)
+    qm = qmax_for(bits)
+    s = jnp.max(jnp.abs(x), axis=0) / qm               # (BF,)
+    s = jnp.maximum(s, 1e-8)
+    scale_ref[...] = s
+    codes = jnp.clip(jnp.round(x / s[None, :]), -qm, qm).astype(jnp.int32)
+    if bits == 8:
+        packed_ref[...] = codes.astype(jnp.int8)
+        return
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    u = (codes & mask).astype(jnp.int32)               # two's complement
+    acc = u[0::per]
+    for j in range(1, per):
+        acc = acc | (u[j::per] << (bits * j))
+    packed_ref[...] = acc.astype(jnp.int8)
+
+
+def _dequant_kernel(packed_ref, scale_ref, o_ref, *, bits: int, T: int,
+                    dtype):
+    p = packed_ref[...]
+    s = scale_ref[...]
+    if bits == 8:
+        o_ref[...] = (p.astype(jnp.float32) * s[None, :]).astype(dtype)
+        return
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    u = p.astype(jnp.int32) & 0xFF                     # as unsigned byte
+    rows = []
+    for j in range(per):
+        c = (u >> (bits * j)) & mask
+        c = jnp.where(c >= half, c - (1 << bits), c)
+        rows.append(c)
+    # interleave back to (T, BF): token t = rows[t % per][t // per]
+    cat = jnp.stack(rows, axis=1).reshape(T, p.shape[1])
+    o_ref[...] = (cat.astype(jnp.float32) * s[None, :]).astype(dtype)
+
+
+def _pad_to(x: Array, mult: int, axis: int) -> Tuple[Array, int]:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def quantize(x: Array, bits: int, interpret: bool = False
+             ) -> Tuple[Array, Array]:
+    """x: (T, F) -> (packed (T*bits//8, F) int8, scales (F,) fp32)."""
+    assert bits in (8, 4, 2)
+    T, F = x.shape
+    assert T % (8 // bits) == 0, (T, bits)
+    xp, pad = _pad_to(x, LANES, 1)
+    Fp = xp.shape[1]
+    bf = min(Fp, 512)
+    while Fp % bf:
+        bf //= 2
+    Tp = T * bits // 8
+    packed, scale = pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits, T=T),
+        grid=(Fp // bf,),
+        in_specs=[pl.BlockSpec((T, bf), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((Tp, bf), lambda i: (0, i)),
+                   pl.BlockSpec((bf,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((Tp, Fp), jnp.int8),
+                   jax.ShapeDtypeStruct((Fp,), jnp.float32)],
+        interpret=interpret,
+    )(xp)
+    if pad:
+        packed, scale = packed[:, :F], scale[:F]
+    return packed, scale
+
+
+def dequantize(packed: Array, scale: Array, bits: int, n_tokens: int,
+               dtype=jnp.bfloat16, interpret: bool = False) -> Array:
+    assert bits in (8, 4, 2)
+    Tp, F = packed.shape
+    pp, pad = _pad_to(packed, LANES, 1)
+    sp, _ = _pad_to(scale, LANES, 0)
+    Fp = pp.shape[1]
+    bf = min(Fp, 512)
+    while Fp % bf:
+        bf //= 2
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, bits=bits, T=n_tokens,
+                          dtype=dtype),
+        grid=(Fp // bf,),
+        in_specs=[pl.BlockSpec((Tp, bf), lambda i: (0, i)),
+                  pl.BlockSpec((bf,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((n_tokens, bf), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n_tokens, Fp), dtype),
+        interpret=interpret,
+    )(pp, sp)
+    return out[:, :F] if pad else out

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: single-token decode attention over an INT8 KV
+cache with FUSED dequantization.
+
+The serving hot path for LLMS: resident chunks live compressed (int8 +
+per-(token, kv-head) scales); attention dequantizes inside VMEM instead
+of materializing a bf16 cache in HBM.  This halves the decode roofline's
+HBM term — the dominant term for every decode_* dry-run cell
+(EXPERIMENTS.md §Roofline).
+
+Layout: q (B,H,hd); caches (B,S,KV,hd) int8; scales (B,S,KV) fp32.
+Grid (B, KV, nS) — S innermost, online softmax in VMEM scratch, G=H/KV
+query heads processed together as the matmul M dimension.
+
+Oracle: kernels/ref.py::decode_qattn_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+NEG_INF = -0.7 * float(np.finfo(np.float32).max)
+
+
+def _kernel(q_ref, kq_ref, vq_ref, ks_ref, vs_ref, nv_ref, o_ref,
+            acc, mx, lx, *, bs, ns, scale, S, window, n_sinks):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mx[...] = jnp.full_like(mx, NEG_INF)
+        lx[...] = jnp.zeros_like(lx)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+    k = kq_ref[0, :, 0].astype(jnp.float32) * ks_ref[0, :, 0][:, None]
+    v = vq_ref[0, :, 0].astype(jnp.float32) * vs_ref[0, :, 0][:, None]
+    s = (q @ k.T) * scale                               # (G, bs)
+    k_pos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    nv = nv_ref[0, 0]
+    valid = (k_pos < nv) & (k_pos < S)
+    if window > 0:
+        valid = valid & ((k_pos >= nv - window) | (k_pos < n_sinks))
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = mx[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    lx[...] = lx[...] * alpha + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * alpha[:, None] + p @ v
+    mx[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(lx[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_qattn(q: Array, k_q: Array, v_q: Array, k_scale: Array,
+                 v_scale: Array, n_valid, window: int = 0, n_sinks: int = 0,
+                 interpret: bool = False, bs: int = 256) -> Array:
+    """q (B,H,hd); k_q/v_q (B,S,KV,hd) int8; scales (B,S,KV) fp32;
+    n_valid () or (B,).  Returns (B,H,hd) in q.dtype."""
+    B, H, hd = q.shape
+    S, KV = k_q.shape[1], k_q.shape[2]
+    G = H // KV
+    bs = min(bs, max(S, 8))
+    ns = (S + bs - 1) // bs
+    Sp = ns * bs
+    if Sp != S:
+        padw = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        k_q = jnp.pad(k_q, padw)
+        v_q = jnp.pad(v_q, padw)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, Sp - S), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, Sp - S), (0, 0)))
+    qg = q.reshape(B, KV, G, hd)
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1),
+                          (B,)).reshape(B, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, ns=ns,
+                          scale=1.0 / float(np.sqrt(hd)), S=S,
+                          window=window, n_sinks=n_sinks),
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, j: (b, n, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, n, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, n, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, n, j: (b, j, n)),
+            pl.BlockSpec((1, bs, 1), lambda b, n, j: (b, j, n)),
+            pl.BlockSpec((1, 1), lambda b, n, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, n, j: (b, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k_q, v_q, k_scale, v_scale, nv)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,136 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics of record: the Pallas kernels in this package
+must match them (tests sweep shapes/dtypes and assert_allclose), and the
+LLMS core uses them directly on CPU where interpret-mode Pallas would be
+needlessly slow.
+
+Quantization codec (paper §3.2, "channel-wise linear quantization"):
+  * canonical layout (T, F): T tokens (the chunk axis), F flattened
+    channels (layers x kv-heads x head-dim),
+  * symmetric per-channel scales over the token axis: s_f = max_t|x| / qmax,
+  * codes clipped to [-qmax, qmax] with qmax = 2^(bits-1) - 1,
+  * sub-byte codes are PACKED along the token axis into int8 lanes
+    (4-bit: 2 codes/byte, 2-bit: 4 codes/byte) -- the TPU-friendly
+    version of the paper's "parallel bit-shift" packing.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def qmax_for(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+# --------------------------------------------------------------------- #
+# chunk_quant oracle
+# --------------------------------------------------------------------- #
+def quantize_ref(x: Array, bits: int) -> Tuple[Array, Array]:
+    """x: (T, F) float -> (packed int8 (T*bits//8, F), scales fp32 (F,))."""
+    assert bits in (8, 4, 2), bits
+    T, F = x.shape
+    qm = qmax_for(bits)
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=0) / qm                 # (F,)
+    scale = jnp.maximum(scale, 1e-8)
+    codes = jnp.clip(jnp.round(xf / scale), -qm, qm).astype(jnp.int32)
+    if bits == 8:
+        return codes.astype(jnp.int8), scale
+    per = 8 // bits                                           # codes per byte
+    assert T % per == 0, (T, bits)
+    u = (codes & ((1 << bits) - 1)).astype(jnp.uint8)         # two's complement
+    u = u.reshape(T // per, per, F)
+    packed = jnp.zeros((T // per, F), jnp.uint8)
+    for j in range(per):
+        packed = packed | (u[:, j] << (bits * j)).astype(jnp.uint8)
+    return packed.astype(jnp.int8), scale
+
+
+def dequantize_ref(packed: Array, scale: Array, bits: int, T: int,
+                   dtype=jnp.bfloat16) -> Array:
+    """Inverse of quantize_ref -> (T, F)."""
+    assert bits in (8, 4, 2), bits
+    if bits == 8:
+        return (packed.astype(jnp.float32) * scale).astype(dtype)
+    per = 8 // bits
+    rows, F = packed.shape
+    assert rows * per == T
+    u = packed.astype(jnp.uint8)
+    outs = []
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    for j in range(per):
+        c = ((u >> (bits * j)) & mask).astype(jnp.int32)
+        c = jnp.where(c >= half, c - (1 << bits), c)          # sign-extend
+        outs.append(c)
+    codes = jnp.stack(outs, axis=1).reshape(T, F)
+    return (codes.astype(jnp.float32) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
+# attn_density oracle: flash attention fwd + Eq.-1 per-key mass
+# --------------------------------------------------------------------- #
+def attn_density_ref(q: Array, k: Array, v: Array,
+                     window: int = 0, n_sinks: int = 0
+                     ) -> Tuple[Array, Array]:
+    """q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd); causal (q_i sees k_j, j<=i,
+    with optional sliding window + sinks).  Returns (out (B,Sq,H,hd),
+    density (B,Sk)) where density is Eq. (1): per key, mean normalized
+    attention mass over the queries that can see it, averaged over heads.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqngd,bknd->bngqk", qg, kf) / np.sqrt(hd)
+    q_pos = jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    m = k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        m = m & ((k_pos[None, :] > q_pos[:, None] - window)
+                 | (k_pos[None, :] < n_sinks))
+    s = jnp.where(m[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngqk,bknd->bqngd", p, v.astype(jnp.float32))
+    out = out.reshape(B, Sq, H, hd).astype(q.dtype)
+    mass = jnp.sum(p, axis=(1, 2, 3))                          # (B, Sk)
+    nvalid = jnp.maximum(jnp.sum(m, axis=0), 1)                # (Sk,)
+    density = (mass / (H * nvalid[None, :])).astype(jnp.float32)
+    return out, density
+
+
+# --------------------------------------------------------------------- #
+# decode_qattn oracle: one-step attention over an int8 KV cache
+# --------------------------------------------------------------------- #
+def decode_qattn_ref(q: Array, k_q: Array, v_q: Array,
+                     k_scale: Array, v_scale: Array,
+                     n_valid, window: int = 0, n_sinks: int = 0) -> Array:
+    """q: (B,H,hd); k_q/v_q: (B,S,KV,hd) int8; scales: (B,S,KV) fp32.
+    n_valid: () or (B,) number of valid cache entries.  Fused dequant +
+    online-softmax attention.  Returns (B,H,hd) in q.dtype."""
+    B, H, hd = q.shape
+    S, KV = k_q.shape[1], k_q.shape[2]
+    G = H // KV
+    k = k_q.astype(jnp.float32) * k_scale[..., None]
+    v = v_q.astype(jnp.float32) * v_scale[..., None]
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bngd,bknd->bngk", qg, k) / np.sqrt(hd)
+    k_pos = jnp.arange(S)
+    nv = jnp.asarray(n_valid)
+    nv = nv[None].repeat(B, 0) if nv.ndim == 0 else nv
+    valid = k_pos[None, :] < nv[:, None]
+    if window > 0:
+        valid = valid & ((k_pos[None, :] >= nv[:, None] - window)
+                         | (k_pos[None, :] < n_sinks))
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngk,bknd->bngd", p, v)
+    return out.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the model + ShapeDtypeStruct inputs (input_specs — zero
+     allocation),
+  2. jits the right entry point (train_step / prefill / decode_step)
+     with the production in_shardings,
+  3. ``.lower().compile()`` on the 16x16 (single-pod) or 2x16x16
+     (multi-pod) mesh,
+  4. records memory_analysis(), cost_analysis(), and the per-device
+     collective bytes parsed from the post-SPMD HLO,
+and writes a JSON report consumed by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, SHAPES, get_config, shape_applicability
+from repro.launch.mesh import data_axes, make_production_mesh
+from repro.models import common as mcommon
+from repro.launch.train import make_train_step
+from repro.models.registry import build_model
+from repro.sharding.rules import (batch_pspecs, cache_pspecs, param_pspecs,
+                                  state_pspecs)
+from repro.train.optimizer import OptConfig, init_state
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+# ring-algorithm byte multipliers per collective kind (per device)
+_COLL_FACTOR = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved through collectives, from post-SPMD HLO."""
+    out = {k: 0.0 for k in _COLL_FACTOR}
+    n_ops = 0
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] += n * _DTYPE_BYTES[dtype] * _COLL_FACTOR[kind]
+        n_ops += 1
+    out["total"] = sum(out.values())
+    out["n_ops"] = n_ops
+    return out
+
+
+def big_arch(cfg) -> bool:
+    return cfg.param_count() > 2e10
+
+
+def micro_steps(cfg, shape, multi_pod: bool) -> int:
+    """Gradient-accumulation factor: keep per-microbatch activation
+    residency ~<= a few GiB/chip.  Heuristic: one sequence per device per
+    microstep for d_model >= 4096, else split by activation volume."""
+    n_data = 32 if multi_pod else 16
+    seqs_per_dev = max(shape.global_batch // n_data, 1)
+    S = shape.seq_len
+    # per-sequence residency: saved-x (bf16, ~L/sqrt spread) + flash-bwd
+    # block transients (fp32 p/ds at block=1024 across heads)
+    per_seq = 2 * cfg.d_model * S + 8 * cfg.n_heads * S * 1024
+    target = 4 << 30
+    micro_seqs = max(1, min(seqs_per_dev, target // max(per_seq, 1)))
+    while seqs_per_dev % micro_seqs:
+        micro_seqs -= 1
+    return max(1, seqs_per_dev // micro_seqs)
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               decode_sharding: str = "fsdp", kv_dtype: str = "bf16",
+               train_sharding: str = "fsdp"):
+    """-> (fn, example_args tuple of SDS, in_shardings, out_shardings)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, note = shape_applicability(cfg, shape)
+    if not ok:
+        return None, note
+    model = build_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = data_axes(multi_pod)
+    mcommon.set_batch_axes(dp)
+    entry, kwargs = model.input_specs(shape)
+    ns = lambda spec: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))
+
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_pspecs(cfg, params_struct)
+
+    window, sinks = model.streaming_window(shape)
+
+    if entry == "train":
+        opt = OptConfig(quantized=big_arch(cfg))
+        state_struct = jax.eval_shape(
+            functools.partial(init_state, cfg=opt), params_struct)
+        mode = "train_expert2d" if train_sharding == "expert2d" else "train"
+        s_specs = state_pspecs(cfg, state_struct, mode=mode)
+        b_specs = batch_pspecs(kwargs["batch"], dp)
+        n_micro = micro_steps(cfg, shape, multi_pod)
+        fn = make_train_step(model, opt, n_micro=n_micro, dp=dp)
+        return (fn, (state_struct, kwargs["batch"]),
+                (ns(s_specs), ns(b_specs)), (ns(s_specs), None)), note
+    if entry == "prefill":
+        want_density = cfg.family != "rwkv6"
+        fn = functools.partial(model.prefill, want_density=want_density,
+                               window=window, n_sinks=sinks)
+        b_specs = batch_pspecs(kwargs["batch"], dp)
+        return (fn, (params_struct, kwargs["batch"]),
+                (ns(p_specs), ns(b_specs)), None), note
+    # decode
+    fn = functools.partial(model.decode_step, window=window, n_sinks=sinks)
+    n_data = 32 if multi_pod else 16
+    tok_spec = P(dp, None) if shape.global_batch >= n_data else P(None, None)
+    if decode_sharding == "stationary":
+        p_specs = param_pspecs(cfg, params_struct, mode="decode")
+    cache_struct = kwargs["cache"]
+    if kv_dtype == "int8" and cfg.family in ("dense", "moe", "vlm"):
+        cache_struct = model.cache_specs(shape, dtype=jnp.int8)
+    c_specs = cache_pspecs(cfg, cache_struct, shape, dp)
+    return (fn, (params_struct, kwargs["tokens"], cache_struct),
+            (ns(p_specs), NamedSharding(mesh, tok_spec), ns(c_specs)),
+            None), note
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = "reports",
+             decode_sharding: str = "fsdp", kv_dtype: str = "bf16",
+             tag: str = "", train_sharding: str = "fsdp") -> Dict[str, Any]:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_name, "variant": tag or "baseline"}
+    t0 = time.time()
+    try:
+        built, note = build_cell(arch, shape_name, multi_pod,
+                                 decode_sharding, kv_dtype, train_sharding)
+        rec["note"] = note
+        if built is None:
+            rec["status"] = "skipped"
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+                  f"SKIP ({note})")
+            if out_dir:
+                os.makedirs(out_dir, exist_ok=True)
+                fname = f"dryrun_{arch}_{shape_name}_{mesh_name}.json"
+                with open(os.path.join(out_dir, fname), "w") as f:
+                    json.dump(rec, f, indent=1)
+            return rec
+        fn, args, in_sh, out_sh = built
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shape = SHAPES[shape_name]
+        donate = (2,) if shape.kind == "decode" else ()
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        with mesh:
+            lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                k: int(getattr(mem, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes")
+            },
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+        })
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"args={rec['memory']['argument_size_in_bytes']/2**30:.2f}GiB "
+              f"temp={rec['memory']['temp_size_in_bytes']/2**30:.2f}GiB "
+              f"flops={rec['flops']:.3g} coll={coll['total']/2**20:.1f}MiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis: flops=%.4g bytes=%.4g" %
+              (rec["flops"], rec["bytes_accessed"]))
+    except Exception as e:          # noqa: BLE001 — report failures per cell
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"dryrun_{arch}_{shape_name}_{mesh_name}{suffix}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="reports")
+    ap.add_argument("--decode-sharding", default="fsdp",
+                    choices=("fsdp", "stationary"))
+    ap.add_argument("--train-sharding", default="fsdp",
+                    choices=("fsdp", "expert2d"))
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"))
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ASSIGNED) if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None \
+        else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+    results = [run_cell(a, s, args.multi_pod, args.out,
+                        args.decode_sharding, args.kv_dtype, args.tag,
+                        args.train_sharding)
+               for a, s in cells]
+    ok = sum(r["status"] == "ok" for r in results)
+    skip = sum(r["status"] == "skipped" for r in results)
+    fail = sum(r["status"] == "fail" for r in results)
+    print(f"[dryrun] done: {ok} ok / {skip} skipped / {fail} failed "
+          f"of {len(results)}")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

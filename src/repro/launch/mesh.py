@@ -1,0 +1,44 @@
+"""Production mesh factory.
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis composes with "data" for batch/context sharding and gradient
+reduction (DCN-ish), "model" stays intra-pod (ICI).
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)}; run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    from jax.sharding import AxisType
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devs[:n])
+
+
+def data_axes(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    devs = jax.devices()[:n_data * n_model]
+    return jax.make_mesh((len(devs) // n_model, n_model),
+                         ("data", "model"),
+                         devices=np.asarray(devs).reshape(-1, n_model))

@@ -1,0 +1,128 @@
+"""Uniform model protocol consumed by the trainer, the server, the LLMS
+context manager, and the dry-run driver.
+
+Every family implements:
+
+  init(key) -> params                        (pytree of stacked-layer arrays)
+  loss(params, batch) -> (scalar, metrics)   (next-token CE; remat inside)
+  prefill(params, batch, want_density) -> PrefillOut
+  decode_step(params, tokens, cache) -> DecodeOut
+  init_cache(batch, seq, dtype) -> cache     (pytree incl. integer 'pos')
+  input_specs(shape) -> (entry_name, kwargs of ShapeDtypeStruct)
+
+Layer parameters are STACKED on a leading axis and consumed by
+``jax.lax.scan`` so the lowered HLO stays one-layer-sized regardless of
+depth (95-layer deepseek compiles as fast as 6-layer whisper).
+
+Caches are plain pytrees with an integer ``pos`` leaf; ``decode_step``
+returns the cache with ``pos + 1``. This makes the cache a first-class
+jit argument: the dry-run lowers ``decode_step`` against a
+ShapeDtypeStruct cache without allocating it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+Array = jax.Array
+PyTree = Any
+
+
+class PrefillOut(NamedTuple):
+    logits: Array                  # (B, vocab) -- last position only
+    cache: PyTree
+    density: Optional[PyTree]      # per-token Eq.-1 density, family-specific
+
+
+class DecodeOut(NamedTuple):
+    logits: Array                  # (B, vocab)
+    cache: PyTree
+
+
+def cross_entropy(logits: Array, targets: Array, mask: Optional[Array] = None
+                  ) -> Tuple[Array, Dict[str, Array]]:
+    """Token-mean CE in fp32. logits (B,S,V), targets (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * mask) / denom
+    return loss, {"loss": loss, "acc": acc}
+
+
+class ModelBase:
+    """Common plumbing; families override the layer stack."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- entry points ------------------------------------------------- #
+    def init(self, key) -> PyTree:
+        raise NotImplementedError
+
+    def loss(self, params, batch) -> Tuple[Array, Dict[str, Array]]:
+        raise NotImplementedError
+
+    def prefill(self, params, batch, want_density: bool = False) -> PrefillOut:
+        raise NotImplementedError
+
+    def decode_step(self, params, tokens, cache) -> DecodeOut:
+        raise NotImplementedError
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16) -> PyTree:
+        raise NotImplementedError
+
+    # -- dry-run specs ------------------------------------------------- #
+    def batch_specs(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for the data batch of this shape."""
+        B, S = shape.global_batch, self.clamp_seq(shape.seq_len)
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return {"tokens": tok, "targets": tok}
+
+    def clamp_seq(self, seq: int) -> int:
+        return min(seq, self.cfg.max_seq) if self.cfg.family == "encdec" else seq
+
+    def decode_seq(self, shape: ShapeSpec) -> int:
+        return self.clamp_seq(shape.seq_len)
+
+    def cache_specs(self, shape: ShapeSpec, dtype=jnp.bfloat16) -> PyTree:
+        cache = jax.eval_shape(
+            lambda: self.init_cache(shape.global_batch, self.decode_seq(shape),
+                                    dtype))
+        return cache
+
+    def input_specs(self, shape: ShapeSpec
+                    ) -> Tuple[str, Dict[str, Any]]:
+        """(entry_point_name, kwargs-of-ShapeDtypeStruct) for the dry-run."""
+        if shape.kind == "train":
+            return "train", dict(batch=self.batch_specs(shape))
+        if shape.kind == "prefill":
+            b = self.batch_specs(shape)
+            b.pop("targets")
+            return "prefill", dict(batch=b)
+        # decode: one new token against a seq_len-deep cache
+        B = shape.global_batch
+        return "decode", dict(
+            tokens=jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            cache=self.cache_specs(shape),
+        )
+
+    # -- streaming (paper §4: sliding window + attention sinks) -------- #
+    def streaming_window(self, shape: ShapeSpec) -> Tuple[int, int]:
+        """(window, n_sinks) for this shape; (0, 0) = full attention."""
+        cfg = self.cfg
+        if shape.name == "long_500k" and cfg.family in (
+                "dense", "moe", "mla_moe", "vlm"):
+            return 8192, cfg.n_sink_tokens
+        if cfg.sliding_window:
+            return cfg.sliding_window, cfg.n_sink_tokens
+        return 0, 0

@@ -1,0 +1,241 @@
+"""Whisper-style encoder-decoder (audio frontend STUBBED per assignment).
+
+The conv/mel frontend is a stub: the batch provides precomputed frame
+embeddings ``frames`` of shape (B, n_frames, d_model).  The encoder adds
+sinusoidal positions and runs pre-LN self-attention blocks; the decoder
+uses learned positions (capped at cfg.max_seq = 448), causal self-attn,
+and cross-attn over the encoder output.
+
+LLMS applicability: decoder self-attn KV is chunk-managed; the encoder
+output (and the cross K/V derived from it) is a single resident block.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.models import common as C
+from repro.models.api import DecodeOut, ModelBase, PrefillOut, cross_entropy
+from repro.models.dense import blockwise_ce
+
+Array = jax.Array
+
+
+class EncDecModel(ModelBase):
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        enc = cfg.encoder
+        d, ff, H, hd = cfg.d_model, cfg.d_ff, cfg.n_heads, cfg.head_dim
+        Le, Ld = enc.n_layers, cfg.n_layers
+        ks = jax.random.split(key, 24)
+        lin = C.init_linear
+
+        def attn_block(k0, L):
+            kk = jax.random.split(k0, 4)
+            return {
+                "wq": lin(kk[0], (L, d, H * hd)),
+                "wk": lin(kk[1], (L, d, H * hd)),
+                "wv": lin(kk[2], (L, d, H * hd)),
+                "wo": lin(kk[3], (L, H * hd, d)),
+                "bq": jnp.zeros((L, H * hd), jnp.float32),
+                "bv": jnp.zeros((L, H * hd), jnp.float32),
+                "bo": jnp.zeros((L, d), jnp.float32),
+            }
+
+        def mlp_block(k0, L):
+            kk = jax.random.split(k0, 2)
+            return {
+                "w1": lin(kk[0], (L, d, ff)), "b1": jnp.zeros((L, ff), jnp.float32),
+                "w2": lin(kk[1], (L, ff, d)), "b2": jnp.zeros((L, d), jnp.float32),
+            }
+
+        def norms(L, n):
+            return {f"ln{i}": jnp.ones((L, d), jnp.float32) for i in range(n)} | \
+                   {f"ln{i}_b": jnp.zeros((L, d), jnp.float32) for i in range(n)}
+
+        enc_layers = {"attn": attn_block(ks[0], Le), "mlp": mlp_block(ks[1], Le)}
+        enc_layers.update(norms(Le, 2))
+        dec_layers = {"self": attn_block(ks[2], Ld),
+                      "cross": attn_block(ks[3], Ld),
+                      "mlp": mlp_block(ks[4], Ld)}
+        dec_layers.update(norms(Ld, 3))
+        return {
+            "embed": lin(ks[5], (cfg.vocab, d)),
+            "pos_dec": lin(ks[6], (cfg.max_seq, d)),
+            "ln_enc": jnp.ones((d,), jnp.float32),
+            "ln_enc_b": jnp.zeros((d,), jnp.float32),
+            "ln_dec": jnp.ones((d,), jnp.float32),
+            "ln_dec_b": jnp.zeros((d,), jnp.float32),
+            "enc": enc_layers,
+            "dec": dec_layers,
+        }
+
+    def head_weight(self, params):
+        return params["embed"].T          # whisper ties output to embedding
+
+    # -- attention helpers -------------------------------------------------- #
+    def _proj_qkv(self, pa, hq, hkv):
+        cfg = self.cfg
+        B, Sq, _ = hq.shape
+        Sk = hkv.shape[1]
+        H, hd = cfg.n_heads, cfg.head_dim
+        q = (hq @ pa["wq"] + pa["bq"].astype(hq.dtype)).reshape(B, Sq, H, hd)
+        k = (hkv @ pa["wk"]).reshape(B, Sk, H, hd)
+        v = (hkv @ pa["wv"] + pa["bv"].astype(hkv.dtype)).reshape(B, Sk, H, hd)
+        return q, k, v
+
+    def _attn_out(self, pa, x, out):
+        B, S = x.shape[:2]
+        return x + (out.reshape(B, S, -1) @ pa["wo"]
+                    + pa["bo"].astype(x.dtype))
+
+    def _mlp(self, pm, lns, lnb, x):
+        h = C.layer_norm(x, lns, lnb, self.cfg.norm_eps)
+        h = jax.nn.gelu(h @ pm["w1"] + pm["b1"].astype(x.dtype),
+                        approximate=True)
+        return x + (h @ pm["w2"] + pm["b2"].astype(x.dtype))
+
+    # -- encoder ------------------------------------------------------------ #
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = C.constrain_batch(frames.astype(jnp.bfloat16))
+        x = x + C.sinusoidal_positions(x.shape[1], cfg.d_model
+                                       ).astype(x.dtype)[None]
+
+        def body(x, pl):
+            h = C.layer_norm(x, pl["ln0"], pl["ln0_b"], cfg.norm_eps)
+            q, k, v = self._proj_qkv(pl["attn"], h, h)
+            S = x.shape[1]
+            mask = jnp.ones((S, S), bool)
+            ao = C.gqa_attention(q, k, v, mask)
+            x = self._attn_out(pl["attn"], x, ao.out)
+            x = C.constrain_batch(
+                self._mlp(pl["mlp"], pl["ln1"], pl["ln1_b"], x))
+            return x, None
+
+        x, _ = jax.lax.scan(body, x, params["enc"])
+        return C.layer_norm(x, params["ln_enc"], params["ln_enc_b"],
+                            cfg.norm_eps)
+
+    # -- decoder (full sequence) --------------------------------------------- #
+    def _decode_full(self, params, tokens, enc_out, want_density=False,
+                     return_kv=False, remat=False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = C.constrain_batch(params["embed"][tokens].astype(jnp.bfloat16))
+        x = x + params["pos_dec"][:S].astype(x.dtype)[None]
+        positions = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+
+        def body(x, pl):
+            # causal self-attention
+            h = C.layer_norm(x, pl["ln0"], pl["ln0_b"], cfg.norm_eps)
+            q, k, v = self._proj_qkv(pl["self"], h, h)
+            mask = C.causal_window_mask(positions, positions)
+            ao = C.gqa_attention(q, k, v, mask, want_density=want_density)
+            x = self._attn_out(pl["self"], x, ao.out)
+            # cross-attention
+            h = C.layer_norm(x, pl["ln1"], pl["ln1_b"], cfg.norm_eps)
+            qx, kx, vx = self._proj_qkv(pl["cross"], h, enc_out)
+            maskx = jnp.ones((S, enc_out.shape[1]), bool)
+            aox = C.gqa_attention(qx, kx, vx, maskx)
+            x = self._attn_out(pl["cross"], x, aox.out)
+            x = C.constrain_batch(
+                self._mlp(pl["mlp"], pl["ln2"], pl["ln2_b"], x))
+            extras = {}
+            if want_density:
+                extras["density"] = ao.key_density
+            if return_kv:
+                extras["k"], extras["v"] = k, v
+                extras["xk"], extras["xv"] = kx, vx
+            return x, extras
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, extras = jax.lax.scan(body, x, params["dec"])
+        x = C.layer_norm(x, params["ln_dec"], params["ln_dec_b"], cfg.norm_eps)
+        return x, extras
+
+    # -- entry points --------------------------------------------------------- #
+    def loss(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x, _ = self._decode_full(params, batch["tokens"], enc_out, remat=True)
+        return blockwise_ce(x, self.head_weight(params), batch["targets"],
+                            batch.get("mask"))
+
+    def prefill(self, params, batch, want_density=False, window=0, n_sinks=0):
+        enc_out = self.encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        x, extras = self._decode_full(params, tokens, enc_out,
+                                      want_density=want_density,
+                                      return_kv=True)
+        logits = (x[:, -1] @ self.head_weight(params)).astype(jnp.float32)
+        cache = {"k": extras["k"], "v": extras["v"],
+                 "xk": extras["xk"], "xv": extras["xv"],
+                 "pos": jnp.int32(tokens.shape[1])}
+        density = None
+        if want_density:
+            density = jnp.mean(extras["density"], axis=0)
+        return PrefillOut(logits, cache, density)
+
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        pos = cache["pos"]
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        x = x + jnp.take(params["pos_dec"], pos[None], axis=0
+                         ).astype(x.dtype)[None]
+
+        def body(x, inp):
+            pl, k_c, v_c, xk, xv = inp
+            h = C.layer_norm(x, pl["ln0"], pl["ln0_b"], cfg.norm_eps)
+            q, k, v = self._proj_qkv(pl["self"], h, h)
+            k_c = C.ring_update(k_c, k, pos)
+            v_c = C.ring_update(v_c, v, pos)
+            out = C.decode_attention(q, k_c, v_c, pos + 1)
+            x = self._attn_out(pl["self"], x, out)
+            h = C.layer_norm(x, pl["ln1"], pl["ln1_b"], cfg.norm_eps)
+            H, hd = cfg.n_heads, cfg.head_dim
+            qx = (h @ pl["cross"]["wq"] + pl["cross"]["bq"].astype(h.dtype)
+                  ).reshape(B, 1, H, hd)
+            outx = C.decode_attention(qx, xk, xv, xk.shape[1])
+            x = self._attn_out(pl["cross"], x, outx)
+            x = C.constrain_batch(
+                self._mlp(pl["mlp"], pl["ln2"], pl["ln2_b"], x))
+            return x, (k_c, v_c)
+
+        x, (k_new, v_new) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        x = C.layer_norm(x, params["ln_dec"], params["ln_dec_b"], cfg.norm_eps)
+        logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        return DecodeOut(logits, {"k": k_new, "v": v_new, "xk": cache["xk"],
+                                  "xv": cache["xv"], "pos": pos + 1})
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        seq = min(seq, cfg.max_seq)
+        L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
+        F = cfg.encoder.n_frames
+        return {
+            "k": jnp.zeros((L, batch, seq, H, hd), dtype),
+            "v": jnp.zeros((L, batch, seq, H, hd), dtype),
+            "xk": jnp.zeros((L, batch, F, H, hd), dtype),
+            "xv": jnp.zeros((L, batch, F, H, hd), dtype),
+            "pos": jnp.int32(0),
+        }
+
+    # -- dry-run specs: audio frames + clamped decoder length ---------------- #
+    def batch_specs(self, shape: ShapeSpec):
+        cfg = self.cfg
+        B = shape.global_batch
+        T = min(shape.seq_len, cfg.max_seq)
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                (B, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, T), jnp.int32),
+            "targets": jax.ShapeDtypeStruct((B, T), jnp.int32),
+        }

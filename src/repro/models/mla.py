@@ -1,0 +1,227 @@
+"""DeepSeek-V2 style Multi-head Latent Attention + MoE (deepseek-v2-lite).
+
+MLA caches a single compressed latent per token — ``ckv`` (kv_lora_rank)
+plus a shared roped key ``kpe`` (qk_rope_head_dim) — instead of per-head
+K/V.  Prefill uses the naive up-projection form (efficient when S tokens
+share the up-projection); decode uses the **absorbed** form (q is folded
+through W_uk, attention runs directly against the rank-512 latent), the
+standard MLA serving trick.
+
+LLMS applicability: chunks store (ckv, kpe) slices — the paper's
+compression/swapping applies to the latent directly, and ``recompute``
+restores missing latent chunks exactly (global RoPE on kpe).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.api import DecodeOut, PrefillOut
+from repro.models.dense import DenseModel
+from repro.models.moe_layer import init_moe_params, moe_ffn
+
+Array = jax.Array
+
+
+class MLAModel(DenseModel):
+
+    def init(self, key):
+        cfg = self.cfg
+        m, moe = cfg.mla, cfg.moe
+        assert m is not None and moe is not None
+        d, H, L = cfg.d_model, cfg.n_heads, cfg.n_layers
+        qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        ks = jax.random.split(key, 12)
+        lin = C.init_linear
+        layers = {
+            "ln_attn": jnp.ones((L, d), jnp.float32),
+            "ln_ffn": jnp.ones((L, d), jnp.float32),
+            "ln_kv": jnp.ones((L, m.kv_lora_rank), jnp.float32),
+            "wq": lin(ks[0], (L, d, H * qk_hd)),
+            "w_dkv": lin(ks[1], (L, d, m.kv_lora_rank + m.qk_rope_head_dim)),
+            "w_uk": lin(ks[2], (L, m.kv_lora_rank, H * m.qk_nope_head_dim)),
+            "w_uv": lin(ks[3], (L, m.kv_lora_rank, H * m.v_head_dim)),
+            "wo": lin(ks[4], (L, H * m.v_head_dim, d)),
+        }
+        layers.update(init_moe_params(jax.random.fold_in(key, 7),
+                                      d, moe, n_layers=L))
+        return {
+            "embed": lin(ks[5], (cfg.vocab, d)),
+            "head": lin(ks[6], (d, cfg.vocab)),
+            "ln_f": jnp.ones((d,), jnp.float32),
+            "layers": layers,
+        }
+
+    def _ffn(self, pl, x):
+        h = C.rms_norm(x, pl["ln_ffn"], self.cfg.norm_eps)
+        moe_keys = ("router", "w_gate", "w_up", "w_down", "s_gate", "s_up",
+                    "s_down")
+        y, _ = moe_ffn(h, {k: pl[k] for k in moe_keys if k in pl},
+                       self.cfg.moe)
+        return x + y
+
+    # -- latent computation shared by prefill / recompute --------------- #
+    def _latents(self, pl, h, positions):
+        """h: (B,S,d) -> (ckv (B,S,rank), kpe (B,S,rope)) roped."""
+        m = self.cfg.mla
+        kv = h @ pl["w_dkv"]
+        ckv, kpe = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+        ckv = C.rms_norm(ckv, pl["ln_kv"], self.cfg.norm_eps)
+        cos, sin = C.rope_angles(positions, m.qk_rope_head_dim, self.cfg.rope_theta)
+        kpe = C.apply_rope(kpe[..., None, :], cos, sin)[..., 0, :]
+        return ckv, kpe
+
+    def _queries(self, pl, h, positions):
+        m, cfg = self.cfg.mla, self.cfg
+        B, S, _ = h.shape
+        qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+        q = (h @ pl["wq"]).reshape(B, S, cfg.n_heads, qk_hd)
+        q_nope, q_pe = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+        cos, sin = C.rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+        q_pe = C.apply_rope(q_pe, cos, sin)
+        return q_nope, q_pe
+
+    def _expand_kv(self, pl, ckv, kpe):
+        """Latent -> per-head K (nope+rope) and V.  ckv (B,S,rank)."""
+        m, H = self.cfg.mla, self.cfg.n_heads
+        B, S, _ = ckv.shape
+        k_nope = (ckv @ pl["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+        v = (ckv @ pl["w_uv"]).reshape(B, S, H, m.v_head_dim)
+        kpe_h = jnp.broadcast_to(kpe[:, :, None, :],
+                                 (B, S, H, m.qk_rope_head_dim))
+        k = jnp.concatenate([k_nope, kpe_h.astype(k_nope.dtype)], axis=-1)
+        return k, v
+
+    # -- full-sequence layer -------------------------------------------- #
+    def _layer_full(self, pl, x, positions, window, n_sinks, want_density,
+                    return_kv):
+        h = C.rms_norm(x, pl["ln_attn"], self.cfg.norm_eps)
+        q_nope, q_pe = self._queries(pl, h, positions)
+        q = jnp.concatenate([q_nope, q_pe], axis=-1)
+        ckv, kpe = self._latents(pl, h, positions)
+        k, v = self._expand_kv(pl, ckv, kpe)
+        S = x.shape[1]
+        if (S > 2048 or window) and not want_density:
+            out = C.flash_attention(q, k, v, 0, 1024, window, n_sinks)
+            ao = C.AttnOut(out, None)
+        elif S > 2048 or window:
+            ao = C.blocked_causal_attention(q, k, v, block=1024, window=window,
+                                            n_sinks=n_sinks,
+                                            want_density=want_density)
+        else:
+            mask = C.causal_window_mask(positions, positions, window, n_sinks)
+            ao = C.gqa_attention(q, k, v, mask, want_density=want_density)
+        x = x + ao.out.reshape(*x.shape[:2], -1) @ pl["wo"]
+        x = self._ffn(pl, x)
+        extras = {}
+        if want_density:
+            extras["density"] = ao.key_density
+        if return_kv:
+            extras["ckv"], extras["kpe"] = ckv, kpe
+        return x, extras
+
+    def prefill(self, params, batch, want_density=False, window=0, n_sinks=0):
+        tokens = batch["tokens"]
+        x, extras = self._stack_full(
+            params, tokens, window=window, n_sinks=n_sinks,
+            want_density=want_density, return_kv=True)
+        logits = (x[:, -1] @ self.head_weight(params)).astype(jnp.float32)
+        cache = {"ckv": extras["ckv"], "kpe": extras["kpe"],
+                 "pos": jnp.int32(tokens.shape[1])}
+        density = None
+        if want_density:
+            density = jnp.mean(extras["density"], axis=0)
+        return PrefillOut(logits, cache, density)
+
+    # -- absorbed decode ------------------------------------------------- #
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+        cfg, m = self.cfg, self.cfg.mla
+        H = cfg.n_heads
+        x = C.constrain_batch(
+            params["embed"][tokens].astype(jnp.bfloat16))      # (B,1,d)
+        pos = cache["pos"]
+        positions = pos[None]
+        qk_scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim
+                                              + m.qk_rope_head_dim))
+
+        def body(x, layer_in):
+            pl, ckv_c, kpe_c = layer_in
+            h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+            q_nope, q_pe = self._queries(pl, h, positions)      # (B,1,H,*)
+            ckv_t, kpe_t = self._latents(pl, h, positions)
+            ckv_c = C.ring_update(ckv_c, ckv_t, pos)            # (B,S,rank)
+            kpe_c = C.ring_update(kpe_c, kpe_t, pos)
+            # absorb W_uk into q:  q_abs (B,1,H,rank)
+            w_uk = pl["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+            q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+            s = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv_c,
+                            preferred_element_type=jnp.float32)
+                 + jnp.einsum("bqhr,bsr->bhqs", q_pe, kpe_c,
+                              preferred_element_type=jnp.float32)) * qk_scale
+            S = ckv_c.shape[1]
+            k_pos = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+            valid = k_pos[None, :] < (pos + 1)
+            if window:
+                valid = valid & ((k_pos[None, :] >= pos + 1 - window)
+                                 | (k_pos[None, :] < n_sinks))
+            s = jnp.where(valid[:, None, None, :], s, C.NEG_INF)
+            p = jax.nn.softmax(s, axis=-1)
+            ctx = jnp.einsum("bhqs,bsr->bqhr", p.astype(ckv_c.dtype), ckv_c)
+            w_uv = pl["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+            out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)
+            x = x + out.reshape(*x.shape[:2], -1) @ pl["wo"]
+            x = C.constrain_batch(self._ffn(pl, x))
+            return x, (ckv_c, kpe_c)
+
+        x, (ckv_new, kpe_new) = jax.lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["kpe"]))
+        x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        return DecodeOut(logits,
+                         {"ckv": ckv_new, "kpe": kpe_new, "pos": pos + 1})
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        cfg, m = self.cfg, self.cfg.mla
+        return {
+            "ckv": jnp.zeros((cfg.n_layers, batch, seq, m.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((cfg.n_layers, batch, seq, m.qk_rope_head_dim),
+                             dtype),
+            "pos": jnp.int32(0),
+        }
+
+    # -- Fig. 7 recompute over latent chunks ----------------------------- #
+    def recompute(self, params, miss_tokens, miss_pos, cache, seq_len,
+                  window: int = 0, n_sinks: int = 0, want_density=False):
+        cfg = self.cfg
+        x = C.constrain_batch(
+            params["embed"][miss_tokens].astype(jnp.bfloat16))
+        S = cache["ckv"].shape[2]
+        k_pos_all = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+
+        def body(x, layer_in):
+            pl, ckv_c, kpe_c = layer_in
+            h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+            q_nope, q_pe = self._queries(pl, h, miss_pos)
+            q = jnp.concatenate([q_nope, q_pe], axis=-1)
+            ckv_t, kpe_t = self._latents(pl, h, miss_pos)
+            ckv_c = ckv_c.at[:, miss_pos].set(ckv_t.astype(ckv_c.dtype))
+            kpe_c = kpe_c.at[:, miss_pos].set(kpe_t.astype(kpe_c.dtype))
+            k, v = self._expand_kv(pl, ckv_c.astype(x.dtype),
+                                   kpe_c.astype(x.dtype))
+            mask = C.causal_window_mask(miss_pos, k_pos_all, window, n_sinks)
+            mask = mask & (k_pos_all < seq_len)[None, :]
+            ao = C.gqa_attention(q, k, v, mask, want_density=want_density)
+            x = x + ao.out.reshape(*x.shape[:2], -1) @ pl["wo"]
+            x = C.constrain_batch(self._ffn(pl, x))
+            ys = {"ckv": ckv_c, "kpe": kpe_c}
+            if want_density:
+                ys["density"] = ao.key_density
+            return x, ys
+
+        x, ys = jax.lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["kpe"]))
+        x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        density = jnp.mean(ys["density"], axis=0) if want_density else None
+        return ({"ckv": ys["ckv"], "kpe": ys["kpe"], "pos": cache["pos"]},
+                x, density)

@@ -1,0 +1,39 @@
+"""MoE decoder-only transformer (llama4-maverick family).
+
+Dense attention stack (GQA + RoPE) with every FFN replaced by a routed
+MoE (top-1 over 128 experts for llama4) plus one always-on shared expert.
+Inherits all attention / cache / recompute machinery from DenseModel —
+only ``init`` and ``_ffn`` change.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.dense import DenseModel
+from repro.models.moe_layer import init_moe_params, moe_ffn
+
+
+class MoEModel(DenseModel):
+
+    def init(self, key):
+        cfg = self.cfg
+        assert cfg.moe is not None
+        base = super().init(key)
+        layers = base["layers"]
+        # drop the dense FFN weights; install MoE ones
+        for name in ("w_gate", "w_up", "w_down"):
+            del layers[name]
+        kmoe = jax.random.fold_in(key, 1337)
+        layers.update(init_moe_params(kmoe, cfg.d_model, cfg.moe,
+                                      n_layers=cfg.n_layers))
+        return base
+
+    def _ffn(self, pl, x):
+        h = C.rms_norm(x, pl["ln_ffn"], self.cfg.norm_eps)
+        moe_keys = ("router", "w_gate", "w_up", "w_down", "s_gate", "s_up",
+                    "s_down")
+        p = {k: pl[k] for k in moe_keys if k in pl}
+        y, _ = moe_ffn(h, p, self.cfg.moe)
+        return x + y

@@ -1,0 +1,122 @@
+"""Mixture-of-experts FFN with grouped, capacity-based top-k dispatch.
+
+GSPMD-friendly formulation: tokens are processed in groups (the group
+axis shards over "data"), experts dispatch via one-hot einsums (the
+expert axis shards over "model"), so XLA lowers the dispatch/combine to
+all-to-all-style collectives on the production mesh.
+
+Capacity C = ceil(group_size * top_k * capacity_factor / n_experts);
+overflowing tokens are dropped (their combine weight is zero) — the
+standard Mesh-TF/GShard discipline.  The auxiliary load-balancing loss
+follows Switch-Transformer: E * mean_e(frac_tokens_e * mean_prob_e).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+Array = jax.Array
+
+
+def capacity(gs: int, moe: MoEConfig) -> int:
+    c = math.ceil(gs * moe.top_k * moe.capacity_factor / moe.n_experts)
+    return max(4, min(c, gs))
+
+
+def moe_dispatch(gates: Array, top_k: int, cap: int
+                 ) -> Tuple[Array, Array, Array]:
+    """gates: (G, gs, E) router probabilities.
+
+    Returns (dispatch (G,gs,E,C) bool-ish, combine (G,gs,E,C), aux_loss).
+    """
+    G, gs, E = gates.shape
+    remaining = gates
+    # per-expert running token count across the k iterations
+    count_so_far = jnp.zeros((G, 1, E), jnp.float32)
+    dispatch = jnp.zeros((G, gs, E, cap), jnp.float32)
+    combine = jnp.zeros((G, gs, E, cap), jnp.float32)
+    frac_routed = jnp.zeros((G, E), jnp.float32)
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)                     # (G, gs)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)       # (G, gs, E)
+        gate_k = jnp.sum(remaining * onehot, axis=-1)            # (G, gs)
+        remaining = remaining * (1.0 - onehot)
+        pos = jnp.cumsum(onehot, axis=1) - onehot + count_so_far  # (G, gs, E)
+        count_so_far = count_so_far + jnp.sum(onehot, axis=1, keepdims=True)
+        pos_in_e = jnp.sum(pos * onehot, axis=-1)                # (G, gs)
+        keep = (pos_in_e < cap).astype(jnp.float32)
+        slot = jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap,
+                              dtype=jnp.float32)                 # (G, gs, C)
+        d_k = onehot[..., None] * slot[..., None, :] * keep[..., None, None]
+        dispatch = dispatch + d_k
+        combine = combine + d_k * gate_k[..., None, None]
+        frac_routed = frac_routed + jnp.mean(onehot, axis=1)
+    # Switch aux loss: E * sum_e frac_e * mean-prob_e (averaged over groups)
+    mean_prob = jnp.mean(gates, axis=1)                           # (G, E)
+    aux = E * jnp.mean(jnp.sum((frac_routed / top_k) * mean_prob, axis=-1))
+    return dispatch, combine, aux
+
+
+def moe_ffn(x: Array, p: Dict[str, Array], moe: MoEConfig
+            ) -> Tuple[Array, Dict[str, Array]]:
+    """x: (..., d).  p: router (d,E), w_gate/w_up (E,d,fe), w_down (E,fe,d),
+    optional s_gate/s_up (d,ds), s_down (ds,d) fused shared expert.
+    Returns (out (..., d), metrics)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)
+    T = xt.shape[0]
+    gs = min(moe.group_size, T)
+    G = (T + gs - 1) // gs
+    pad = G * gs - T
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    xg = xt.reshape(G, gs, d)
+
+    logits = (xg.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    gates = jax.nn.softmax(logits, axis=-1)                      # (G, gs, E)
+    cap = capacity(gs, moe)
+    dispatch, combine, aux = moe_dispatch(gates, moe.top_k, cap)
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])) \
+        * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), out_e)
+    y = y.reshape(G * gs, d)
+    if pad:
+        y = y[:T]
+    y = y.reshape(orig_shape)
+    if "s_gate" in p:
+        y = y + (jax.nn.silu(x @ p["s_gate"]) * (x @ p["s_up"])) @ p["s_down"]
+    metrics = {"moe_aux": aux}
+    return y, metrics
+
+
+def init_moe_params(key, d: int, moe: MoEConfig, dtype=jnp.bfloat16,
+                    n_layers: int = 1) -> Dict[str, Array]:
+    """Stacked (L, ...) MoE FFN params."""
+    ks = jax.random.split(key, 6)
+    E, fe = moe.n_experts, moe.d_expert
+    L = n_layers
+    scale = 0.02
+
+    def lin(k, shape):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    p = {
+        "router": lin(ks[0], (L, d, E)).astype(jnp.float32),
+        "w_gate": lin(ks[1], (L, E, d, fe)),
+        "w_up": lin(ks[2], (L, E, d, fe)),
+        "w_down": lin(ks[3], (L, E, fe, d)),
+    }
+    if moe.d_shared:
+        p["s_gate"] = lin(ks[4], (L, d, moe.d_shared))
+        p["s_up"] = lin(ks[5], (L, d, moe.d_shared))
+        p["s_down"] = lin(ks[4], (L, moe.d_shared, d))
+    return p

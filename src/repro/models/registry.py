@@ -1,0 +1,27 @@
+"""Family -> model-class registry.  ``build_model(cfg)`` is the single
+construction point used by the trainer, server, dry-run and tests."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.api import ModelBase
+from repro.models.dense import DenseModel
+from repro.models.encdec import EncDecModel
+from repro.models.mla import MLAModel
+from repro.models.moe import MoEModel
+from repro.models.rglru import RGLRUModel
+from repro.models.rwkv6 import RWKV6Model
+from repro.models.vlm import VLMModel
+
+FAMILY_CLASSES = {
+    "dense": DenseModel,
+    "moe": MoEModel,
+    "mla_moe": MLAModel,
+    "rglru_hybrid": RGLRUModel,
+    "rwkv6": RWKV6Model,
+    "encdec": EncDecModel,
+    "vlm": VLMModel,
+}
+
+
+def build_model(cfg: ModelConfig) -> ModelBase:
+    return FAMILY_CLASSES[cfg.family](cfg)

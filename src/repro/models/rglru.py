@@ -1,0 +1,360 @@
+"""RecurrentGemma (Griffin) — RG-LRU recurrent blocks + local MQA, 1:2.
+
+Block pattern (rec, rec, attn) repeating; 26 layers = 8 triples + 2
+trailing recurrent layers.  Every block is followed by a GeGLU MLP.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(blockdiag(x_t; W_a))          recurrence gate
+    i_t = sigmoid(blockdiag(x_t; W_x))          input gate
+    log a_t = -c * softplus(lambda) * r_t       c = 8.0
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill evaluates the linear recurrence with ``jax.lax.associative_scan``
+(parallel over sequence); decode is the single-step form.  Both support
+an incoming state h0, which is what lets LLMS snapshot/restore contexts
+for this family (DESIGN.md §Arch-applicability).
+
+Attention layers use a 2048-token local window with a single KV head
+(MQA).  Their KV is cache-managed by LLMS like any dense model's.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as C
+from repro.models.api import DecodeOut, ModelBase, PrefillOut
+from repro.models.dense import blockwise_ce
+
+Array = jax.Array
+RG_C = 8.0
+
+
+def _block_counts(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    """(n_rec, n_attn, n_triples, n_trailing_rec)."""
+    pat = cfg.rglru.block_pattern
+    kinds = [pat[i % len(pat)] for i in range(cfg.n_layers)]
+    n_rec = sum(1 for k in kinds if k == "rec")
+    n_attn = len(kinds) - n_rec
+    n_triples = cfg.n_layers // 3
+    n_trail = cfg.n_layers - 3 * n_triples
+    assert n_trail in (0, 2), "pattern assumes rec,rec,attn triples"
+    return n_rec, n_attn, n_triples, n_trail
+
+
+def block_diag_apply(x: Array, w: Array, b: Array) -> Array:
+    """x (..., w_total); w (nb, blk, blk); b (nb, blk)."""
+    nb, blk, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, blk)
+    y = jnp.einsum("...nk,nkj->...nj", xs, w) + b
+    return y.reshape(*x.shape)
+
+
+class RGLRUModel(ModelBase):
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        g = cfg.rglru
+        d, w, ff = cfg.d_model, g.lru_width, cfg.d_ff
+        n_rec, n_attn, _, _ = _block_counts(cfg)
+        nb = cfg.n_heads                     # block-diag groups for gates
+        blk = w // nb
+        ks = jax.random.split(key, 20)
+        lin = C.init_linear
+        rec = {
+            "ln": jnp.ones((n_rec, d), jnp.float32),
+            "w_x": lin(ks[0], (n_rec, d, w)),
+            "w_gate": lin(ks[1], (n_rec, d, w)),
+            "conv_k": lin(ks[2], (n_rec, g.conv_width, w), 0.1),
+            "conv_b": jnp.zeros((n_rec, w), jnp.float32),
+            "gate_a_w": lin(ks[3], (n_rec, nb, blk, blk)),
+            "gate_a_b": jnp.zeros((n_rec, nb, blk), jnp.float32),
+            "gate_x_w": lin(ks[4], (n_rec, nb, blk, blk)),
+            "gate_x_b": jnp.zeros((n_rec, nb, blk), jnp.float32),
+            # lambda init so that a^c in (0.9, 0.999) at r=1 (Griffin)
+            "lam": jnp.full((n_rec, w), 0.7, jnp.float32),
+            "w_out": lin(ks[5], (n_rec, w, d)),
+        }
+        attn = {
+            "ln": jnp.ones((n_attn, d), jnp.float32),
+            "wq": lin(ks[6], (n_attn, d, cfg.n_heads * cfg.head_dim)),
+            "wk": lin(ks[7], (n_attn, d, cfg.n_kv_heads * cfg.head_dim)),
+            "wv": lin(ks[8], (n_attn, d, cfg.n_kv_heads * cfg.head_dim)),
+            "wo": lin(ks[9], (n_attn, cfg.n_heads * cfg.head_dim, d)),
+        }
+        mlp = {
+            "ln": jnp.ones((cfg.n_layers, d), jnp.float32),
+            "w_gate": lin(ks[10], (cfg.n_layers, d, ff)),
+            "w_up": lin(ks[11], (cfg.n_layers, d, ff)),
+            "w_down": lin(ks[12], (cfg.n_layers, ff, d)),
+        }
+        return {
+            "embed": lin(ks[13], (cfg.vocab, d)),
+            "ln_f": jnp.ones((d,), jnp.float32),
+            "rec": rec, "attn": attn, "mlp": mlp,
+        }
+
+    def head_weight(self, params):
+        return params["embed"].T            # gemma ties embeddings
+
+    # -- pieces ---------------------------------------------------------- #
+    def _mlp(self, pm, x):
+        h = C.rms_norm(x, pm["ln"], self.cfg.norm_eps)
+        h = jax.nn.gelu(h @ pm["w_gate"], approximate=True) * (h @ pm["w_up"])
+        return x + h @ pm["w_down"]
+
+    def _rglru_gates(self, pr, xc):
+        """xc: conv output (..., w) -> (log_a, gated_input)."""
+        r = jax.nn.sigmoid(block_diag_apply(xc.astype(jnp.float32),
+                                            pr["gate_a_w"], pr["gate_a_b"]))
+        i = jax.nn.sigmoid(block_diag_apply(xc.astype(jnp.float32),
+                                            pr["gate_x_w"], pr["gate_x_b"]))
+        log_a = -RG_C * jax.nn.softplus(pr["lam"]) * r
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+        return log_a, beta * (i * xc.astype(jnp.float32))
+
+    def _rec_block_full(self, pr, x, conv_state, h0):
+        """Full-sequence recurrent block.  x (B,S,d); conv_state (B,cw-1,w);
+        h0 (B,w) fp32.  Returns (x', new_conv_state, new_h)."""
+        g = self.cfg.rglru
+        h = C.rms_norm(x, pr["ln"], self.cfg.norm_eps)
+        xb = h @ pr["w_x"]                                     # (B,S,w)
+        gate = jax.nn.gelu(h @ pr["w_gate"], approximate=True)
+        # causal depthwise conv over time, seeded with conv_state
+        ext = jnp.concatenate([conv_state.astype(xb.dtype), xb], axis=1)
+        cw = g.conv_width
+        xc = sum(ext[:, i:i + xb.shape[1]] * pr["conv_k"][cw - 1 - i]
+                 .astype(xb.dtype) for i in range(cw))
+        xc = xc + pr["conv_b"].astype(xb.dtype)
+        new_conv = ext[:, ext.shape[1] - (cw - 1):]
+        log_a, b = self._rglru_gates(pr, xc)                   # (B,S,w) fp32
+        # linear recurrence via associative scan (+ h0 contribution)
+        a = jnp.exp(log_a)
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, h_seq = jax.lax.associative_scan(op, (a, b), axis=1)
+        h_seq = h_seq + a_cum * h0[:, None, :]
+        new_h = h_seq[:, -1]
+        y = (h_seq.astype(x.dtype) * gate) @ pr["w_out"]
+        return x + y, new_conv, new_h
+
+    def _rec_block_step(self, pr, x, conv_state, h0):
+        """One-token recurrent block.  x (B,1,d)."""
+        g = self.cfg.rglru
+        h = C.rms_norm(x, pr["ln"], self.cfg.norm_eps)
+        xb = h @ pr["w_x"]                                     # (B,1,w)
+        gate = jax.nn.gelu(h @ pr["w_gate"], approximate=True)
+        cw = g.conv_width
+        ext = jnp.concatenate([conv_state.astype(xb.dtype), xb], axis=1)
+        taps = [ext[:, -(i + 1)] * pr["conv_k"][cw - 1 - i].astype(xb.dtype)
+                for i in range(cw)]
+        xc = (sum(taps) + pr["conv_b"].astype(xb.dtype))[:, None]
+        new_conv = ext[:, 1:]
+        log_a, b = self._rglru_gates(pr, xc)
+        new_h = jnp.exp(log_a[:, 0]) * h0 + b[:, 0]
+        y = (new_h[:, None].astype(x.dtype) * gate) @ pr["w_out"]
+        return x + y, new_conv, new_h
+
+    def _attn_block(self, pa, x, positions, k_ctx, v_ctx, want_density):
+        """Full-seq local attention.  k_ctx/v_ctx: caches to return."""
+        cfg = self.cfg
+        g = cfg.rglru
+        h = C.rms_norm(x, pa["ln"], cfg.norm_eps)
+        B, S, _ = x.shape
+        q = (h @ pa["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        k = (h @ pa["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        v = (h @ pa["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+        cos, sin = C.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        q, k = C.apply_rope(q, cos, sin), C.apply_rope(k, cos, sin)
+        if S > 2048 and not want_density:
+            out = C.flash_attention(q, k, v, 0, 1024, g.window, 0)
+            ao = C.AttnOut(out, None)
+        elif S > 2048:
+            ao = C.blocked_causal_attention(q, k, v, window=g.window,
+                                            want_density=want_density)
+        else:
+            mask = C.causal_window_mask(positions, positions, g.window)
+            ao = C.gqa_attention(q, k, v, mask, want_density=want_density)
+        x = x + ao.out.reshape(B, S, -1) @ pa["wo"]
+        return x, k, v, ao.key_density
+
+    # -- stacked forward -------------------------------------------------- #
+    def _forward_full(self, params, tokens, want_density=False,
+                      return_cache=False, remat=False, state=None):
+        cfg = self.cfg
+        n_rec, n_attn, n_tri, n_trail = _block_counts(cfg)
+        B, S = tokens.shape
+        d = cfg.d_model
+        x = C.constrain_batch(
+            params["embed"][tokens].astype(jnp.bfloat16)
+            * jnp.sqrt(jnp.bfloat16(d)))
+        positions = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+        g = self.cfg.rglru
+        if state is None:
+            conv0 = jnp.zeros((n_rec, B, g.conv_width - 1, g.lru_width),
+                              jnp.bfloat16)
+            lru0 = jnp.zeros((n_rec, B, g.lru_width), jnp.float32)
+        else:
+            conv0, lru0 = state
+
+        take = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        rec_p, attn_p, mlp_p = params["rec"], params["attn"], params["mlp"]
+        # stage triples for scan
+        tri_rec = jax.tree.map(
+            lambda a: a[:2 * n_tri].reshape(n_tri, 2, *a.shape[1:]), rec_p)
+        tri_attn = jax.tree.map(lambda a: a[:n_tri], attn_p)
+        tri_mlp = jax.tree.map(
+            lambda a: a[:3 * n_tri].reshape(n_tri, 3, *a.shape[1:]), mlp_p)
+        tri_conv = conv0[:2 * n_tri].reshape(n_tri, 2, *conv0.shape[1:])
+        tri_lru = lru0[:2 * n_tri].reshape(n_tri, 2, *lru0.shape[1:])
+
+        def triple(x, inp):
+            pr2, pa, pm3, cv2, lr2 = inp
+            outs_cv, outs_lr = [], []
+            for j in range(2):
+                x, cv, lr = self._rec_block_full(take(pr2, j), x, cv2[j],
+                                                 lr2[j])
+                x = self._mlp(take(pm3, j), x)
+                outs_cv.append(cv)
+                outs_lr.append(lr)
+            x, k, v, dens = self._attn_block(pa, x, positions, None, None,
+                                             want_density)
+            x = C.constrain_batch(self._mlp(take(pm3, 2), x))
+            ys = {"conv": jnp.stack(outs_cv), "lru": jnp.stack(outs_lr)}
+            if return_cache:
+                ys["k"], ys["v"] = k, v
+            if want_density:
+                ys["density"] = dens
+            return x, ys
+
+        if remat:
+            triple = jax.checkpoint(triple)
+        x, ys = jax.lax.scan(triple, x,
+                             (tri_rec, tri_attn, tri_mlp, tri_conv, tri_lru))
+        convs = ys["conv"].reshape(2 * n_tri, B, g.conv_width - 1, g.lru_width)
+        lrus = ys["lru"].reshape(2 * n_tri, B, g.lru_width)
+        # trailing rec layers
+        trail_cv, trail_lr = [], []
+        for t in range(n_trail):
+            i_rec = 2 * n_tri + t
+            i_mlp = 3 * n_tri + t
+            x, cv, lr = self._rec_block_full(take(rec_p, i_rec), x,
+                                             conv0[i_rec], lru0[i_rec])
+            x = self._mlp(take(mlp_p, i_mlp), x)
+            trail_cv.append(cv)
+            trail_lr.append(lr)
+        if n_trail:
+            convs = jnp.concatenate([convs, jnp.stack(trail_cv)])
+            lrus = jnp.concatenate([lrus, jnp.stack(trail_lr)])
+        x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        out = {"x": x, "conv": convs, "lru": lrus}
+        if return_cache:
+            out["k"], out["v"] = ys["k"], ys["v"]
+        if want_density:
+            out["density"] = jnp.mean(ys["density"], axis=0)
+        return out
+
+    # -- entry points ------------------------------------------------------ #
+    def loss(self, params, batch):
+        out = self._forward_full(params, batch["tokens"], remat=True)
+        return blockwise_ce(out["x"], self.head_weight(params),
+                            batch["targets"], batch.get("mask"))
+
+    def prefill(self, params, batch, want_density=False, window=0, n_sinks=0):
+        tokens = batch["tokens"]
+        out = self._forward_full(params, tokens, want_density=want_density,
+                                 return_cache=True)
+        logits = (out["x"][:, -1] @ self.head_weight(params)).astype(jnp.float32)
+        cache = {"k": out["k"], "v": out["v"], "conv": out["conv"],
+                 "lru": out["lru"], "pos": jnp.int32(tokens.shape[1])}
+        return PrefillOut(logits, cache, out.get("density"))
+
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+        cfg = self.cfg
+        g = cfg.rglru
+        n_rec, n_attn, n_tri, n_trail = _block_counts(cfg)
+        x = C.constrain_batch(
+            params["embed"][tokens].astype(jnp.bfloat16)
+            * jnp.sqrt(jnp.bfloat16(cfg.d_model)))
+        pos = cache["pos"]
+        positions = pos[None]
+        take = lambda t, i: jax.tree.map(lambda a: a[i], t)
+        rec_p, attn_p, mlp_p = params["rec"], params["attn"], params["mlp"]
+
+        tri_rec = jax.tree.map(
+            lambda a: a[:2 * n_tri].reshape(n_tri, 2, *a.shape[1:]), rec_p)
+        tri_attn = jax.tree.map(lambda a: a[:n_tri], attn_p)
+        tri_mlp = jax.tree.map(
+            lambda a: a[:3 * n_tri].reshape(n_tri, 3, *a.shape[1:]), mlp_p)
+        cv = cache["conv"]
+        lr = cache["lru"]
+        tri_cv = cv[:2 * n_tri].reshape(n_tri, 2, *cv.shape[1:])
+        tri_lr = lr[:2 * n_tri].reshape(n_tri, 2, *lr.shape[1:])
+
+        def triple(x, inp):
+            pr2, pa, pm3, cv2, lr2, k_c, v_c = inp
+            new_cv, new_lr = [], []
+            for j in range(2):
+                x, c2, l2 = self._rec_block_step(take(pr2, j), x, cv2[j],
+                                                 lr2[j])
+                x = self._mlp(take(pm3, j), x)
+                new_cv.append(c2)
+                new_lr.append(l2)
+            # local attention decode
+            h = C.rms_norm(x, pa["ln"], cfg.norm_eps)
+            B = x.shape[0]
+            q = (h @ pa["wq"]).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            k = (h @ pa["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+            v = (h @ pa["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+            cos, sin = C.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+            q, k = C.apply_rope(q, cos, sin), C.apply_rope(k, cos, sin)
+            k_c = C.ring_update(k_c, k, pos)
+            v_c = C.ring_update(v_c, v, pos)
+            out = C.decode_attention(q, k_c, v_c, pos + 1, window=g.window)
+            x = x + out.reshape(B, 1, -1) @ pa["wo"]
+            x = C.constrain_batch(self._mlp(take(pm3, 2), x))
+            return x, {"conv": jnp.stack(new_cv), "lru": jnp.stack(new_lr),
+                       "k": k_c, "v": v_c}
+
+        x, ys = jax.lax.scan(
+            triple, x, (tri_rec, tri_attn, tri_mlp, tri_cv, tri_lr,
+                        cache["k"], cache["v"]))
+        convs = ys["conv"].reshape(2 * n_tri, *cv.shape[1:])
+        lrus = ys["lru"].reshape(2 * n_tri, *lr.shape[1:])
+        trail_cv, trail_lr = [], []
+        for t in range(n_trail):
+            i_rec, i_mlp = 2 * n_tri + t, 3 * n_tri + t
+            x, c2, l2 = self._rec_block_step(take(rec_p, i_rec), x,
+                                             cv[i_rec], lr[i_rec])
+            x = self._mlp(take(mlp_p, i_mlp), x)
+            trail_cv.append(c2)
+            trail_lr.append(l2)
+        if n_trail:
+            convs = jnp.concatenate([convs, jnp.stack(trail_cv)])
+            lrus = jnp.concatenate([lrus, jnp.stack(trail_lr)])
+        x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        return DecodeOut(logits, {"k": ys["k"], "v": ys["v"], "conv": convs,
+                                  "lru": lrus, "pos": pos + 1})
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        g = cfg.rglru
+        n_rec, n_attn, _, _ = _block_counts(cfg)
+        return {
+            "k": jnp.zeros((n_attn, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "v": jnp.zeros((n_attn, batch, seq, cfg.n_kv_heads, cfg.head_dim),
+                           dtype),
+            "conv": jnp.zeros((n_rec, batch, g.conv_width - 1, g.lru_width),
+                              jnp.bfloat16),
+            "lru": jnp.zeros((n_rec, batch, g.lru_width), jnp.float32),
+            "pos": jnp.int32(0),
+        }

@@ -1,0 +1,274 @@
+"""RWKV-6 "Finch": attention-free, data-dependent per-channel decay.
+
+Recurrence per head (state S: (hd_k, hd_v) fp32):
+    o_t = r_t . (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with w_t = exp(-exp(w0 + LoRA_w(x_t))) a data-dependent decay, and
+token-shift "ddlerp" mixes (mu + LoRA) producing r,k,v,g,w inputs.
+
+Prefill runs the **chunked-parallel** form: within a chunk of length
+``chunk_len`` the contribution is a decay-weighted triangular matmul;
+across chunks the state is carried by a scan.  Numerical safety: the
+factorized intra-chunk decay uses exp(+L) terms bounded by clamping the
+per-step log-decay at LOG_DECAY_FLOOR = -5.0 (a decay < e^-5 per step is
+indistinguishable from 0 after two steps); with chunk_len = 16 the
+largest exponent is 80 < fp32 max (~88).  DESIGN.md records this.
+
+LLMS applicability: the context state is CONSTANT-size (one blob), so the
+paper's chunk-granularity techniques degenerate to whole-state
+swap/quantize + recompute-from-text (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as C
+from repro.models.api import DecodeOut, ModelBase, PrefillOut
+from repro.models.dense import blockwise_ce
+
+Array = jax.Array
+LOG_DECAY_FLOOR = -5.0
+
+
+class RWKV6Model(ModelBase):
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        r = cfg.rwkv
+        d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+        H = cfg.n_heads
+        hd = r.head_dim
+        assert H * hd == d
+        ks = jax.random.split(key, 24)
+        lin = C.init_linear
+        layers = {
+            "ln1": jnp.ones((L, d), jnp.float32),
+            "ln1_b": jnp.zeros((L, d), jnp.float32),
+            "ln2": jnp.ones((L, d), jnp.float32),
+            "ln2_b": jnp.zeros((L, d), jnp.float32),
+            # ddlerp token-shift mixes
+            "mu_x": jnp.full((L, d), 0.5, jnp.float32),
+            "mix_w1": lin(ks[0], (L, d, 5 * r.mix_lora), 0.01),
+            "mix_w2": lin(ks[1], (L, 5, r.mix_lora, d), 0.01),
+            "mu_rkvgw": jnp.full((L, 5, d), 0.5, jnp.float32),
+            # decay
+            "w0": jnp.full((L, d), -0.6, jnp.float32),   # exp(-exp(-0.6))~.58
+            "w_a": lin(ks[2], (L, d, r.decay_lora), 0.01),
+            "w_b": lin(ks[3], (L, r.decay_lora, d), 0.01),
+            "u": lin(ks[4], (L, H, hd), 0.3),
+            # time-mix projections
+            "wr": lin(ks[5], (L, d, d)),
+            "wk": lin(ks[6], (L, d, d)),
+            "wv": lin(ks[7], (L, d, d)),
+            "wg": lin(ks[8], (L, d, d)),
+            "wo": lin(ks[9], (L, d, d)),
+            "lnx": jnp.ones((L, d), jnp.float32),
+            "lnx_b": jnp.zeros((L, d), jnp.float32),
+            # channel-mix
+            "mu_ck": jnp.full((L, d), 0.5, jnp.float32),
+            "mu_cr": jnp.full((L, d), 0.5, jnp.float32),
+            "wck": lin(ks[10], (L, d, ff)),
+            "wcv": lin(ks[11], (L, ff, d)),
+            "wcr": lin(ks[12], (L, d, d)),
+        }
+        return {
+            "embed": lin(ks[13], (cfg.vocab, d)),
+            "head": lin(ks[14], (d, cfg.vocab)),
+            "ln_f": jnp.ones((d,), jnp.float32),
+            "ln_f_b": jnp.zeros((d,), jnp.float32),
+            "layers": layers,
+        }
+
+    def head_weight(self, params):
+        return params["head"]
+
+    # -- ddlerp token shift ---------------------------------------------- #
+    def _ddlerp(self, pl, x, x_prev):
+        """x, x_prev: (B,S,d) -> five mixed inputs (5,B,S,d)."""
+        xx = x_prev - x
+        x_x = x + xx * pl["mu_x"].astype(x.dtype)
+        lora = jnp.tanh(x_x @ pl["mix_w1"])                      # (B,S,5*ml)
+        B, S, _ = x.shape
+        ml = pl["mix_w2"].shape[1]
+        lora = lora.reshape(B, S, 5, ml).transpose(2, 0, 1, 3)   # (5,B,S,ml)
+        mix = jnp.einsum("fbsm,fmd->fbsd", lora, pl["mix_w2"])
+        mix = mix + pl["mu_rkvgw"].astype(x.dtype)[:, None, None]
+        return x[None] + xx[None] * mix                          # (5,B,S,d)
+
+    def _time_mix_inputs(self, pl, x, x_prev):
+        cfg, rw = self.cfg, self.cfg.rwkv
+        H, hd = cfg.n_heads, rw.head_dim
+        B, S, d = x.shape
+        xr, xk, xv, xg, xw = self._ddlerp(pl, x, x_prev)
+        r = (xr @ pl["wr"]).reshape(B, S, H, hd)
+        k = (xk @ pl["wk"]).reshape(B, S, H, hd)
+        v = (xv @ pl["wv"]).reshape(B, S, H, hd)
+        g = xg @ pl["wg"]
+        logw = pl["w0"].astype(jnp.float32) + \
+            jnp.tanh(xw.astype(jnp.float32) @ pl["w_a"].astype(jnp.float32)) \
+            @ pl["w_b"].astype(jnp.float32)
+        log_decay = jnp.maximum(-jnp.exp(logw), LOG_DECAY_FLOOR)
+        log_decay = log_decay.reshape(B, S, H, hd)
+        return r, k, v, g, log_decay
+
+    # -- chunked-parallel wkv --------------------------------------------- #
+    def _wkv_chunked(self, r, k, v, log_decay, u, state0):
+        """r/k/v/log_decay: (B,S,H,hd) ; u: (H,hd); state0: (B,H,hd,hd) fp32.
+        Returns (out (B,S,H,hd) fp32, state (B,H,hd,hd))."""
+        B, S, H, hd = r.shape
+        c = min(self.cfg.rwkv.chunk_len, S)
+        nc = (S + c - 1) // c
+        pad = nc * c - S
+        f32 = jnp.float32
+        if pad:
+            zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            r, k, v = zpad(r), zpad(k), zpad(v)
+            # pad decay with 0 (= decay 1.0): padded steps are the
+            # IDENTITY on the carried state (k=v=0 contribute nothing)
+            log_decay = jnp.pad(log_decay,
+                                ((0, 0), (0, pad), (0, 0), (0, 0)))
+        resh = lambda a: a.astype(f32).reshape(B, nc, c, H, hd) \
+                          .transpose(1, 0, 2, 3, 4)              # (nc,B,c,H,hd)
+        rc, kc, vc, ldc = resh(r), resh(k), resh(v), resh(log_decay)
+
+        def chunk_step(S0, inp):
+            rb, kb, vb, ld = inp                                 # (B,c,H,hd)
+            L = jnp.cumsum(ld, axis=1)                           # inclusive
+            L_prev = L - ld                                      # exclusive
+            L_last = L[:, -1:]                                   # (B,1,H,hd)
+            r_in = rb * jnp.exp(L_prev)                          # <= |r|
+            k_out = kb * jnp.exp(L_last - L)                     # <= |k|
+            k_in = kb * jnp.exp(-L)                              # bounded: c*5<88
+            # inter-chunk: queries read the incoming state
+            out = jnp.einsum("bchk,bhkv->bchv", r_in, S0)
+            # intra-chunk strict-lower-triangular attention
+            scores = jnp.einsum("bihk,bjhk->bhij", r_in, k_in)
+            ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+            jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+            scores = jnp.where((jj < ii)[None, None], scores, 0.0)
+            out = out + jnp.einsum("bhij,bjhv->bihv", scores, vb)
+            # diagonal bonus term
+            diag = jnp.einsum("bchk,hk,bchk->bch", rb, u, kb)
+            out = out + diag[..., None] * vb
+            # state update
+            S1 = jnp.exp(L_last[:, 0, :, :, None]) * S0 \
+                + jnp.einsum("bjhk,bjhv->bhkv", k_out, vb)
+            return S1, out
+
+        state, outs = jax.lax.scan(chunk_step, state0.astype(f32),
+                                   (rc, kc, vc, ldc))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nc * c, H, hd)
+        return out[:, :S], state
+
+    def _time_mix_full(self, pl, x, tm_prev, state0):
+        """Full-sequence time-mix.  tm_prev: (B,d) last token before x."""
+        cfg, rw = self.cfg, self.cfg.rwkv
+        B, S, d = x.shape
+        xs = C.layer_norm(x, pl["ln1"], pl["ln1_b"], cfg.norm_eps)
+        x_prev = jnp.concatenate([tm_prev[:, None].astype(xs.dtype),
+                                  xs[:, :-1]], axis=1)
+        r, k, v, g, ld = self._time_mix_inputs(pl, xs, x_prev)
+        out, state = self._wkv_chunked(r, k, v, ld, pl["u"].astype(jnp.float32),
+                                       state0)
+        out = out.reshape(B, S, d)
+        out = C.group_norm_heads(out.astype(x.dtype), pl["lnx"], pl["lnx_b"],
+                                 cfg.n_heads)
+        out = (out * jax.nn.silu(g)) @ pl["wo"]
+        return x + out, xs[:, -1], state
+
+    def _channel_mix_full(self, pl, x, cm_prev):
+        cfg = self.cfg
+        xs = C.layer_norm(x, pl["ln2"], pl["ln2_b"], cfg.norm_eps)
+        x_prev = jnp.concatenate([cm_prev[:, None].astype(xs.dtype),
+                                  xs[:, :-1]], axis=1)
+        xx = x_prev - xs
+        xk = xs + xx * pl["mu_ck"].astype(xs.dtype)
+        xr = xs + xx * pl["mu_cr"].astype(xs.dtype)
+        kk = jnp.square(jax.nn.relu(xk @ pl["wck"]))
+        out = jax.nn.sigmoid(xr @ pl["wcr"]) * (kk @ pl["wcv"])
+        return x + out, xs[:, -1]
+
+    def _forward_full(self, params, tokens, state=None, remat=False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = C.constrain_batch(params["embed"][tokens].astype(jnp.bfloat16))
+        L = cfg.n_layers
+        if state is None:
+            H, hd = cfg.n_heads, cfg.rwkv.head_dim
+            wkv0 = jnp.zeros((L, B, H, hd, hd), jnp.float32)
+            tm0 = jnp.zeros((L, B, cfg.d_model), jnp.bfloat16)
+            cm0 = jnp.zeros((L, B, cfg.d_model), jnp.bfloat16)
+        else:
+            wkv0, tm0, cm0 = state["wkv"], state["tm"], state["cm"]
+
+        def body(x, inp):
+            pl, w0, t0, c0 = inp
+            x, tm_new, w_new = self._time_mix_full(pl, x, t0, w0)
+            x, cm_new = self._channel_mix_full(pl, x, c0)
+            return C.constrain_batch(x), {"wkv": w_new, "tm": tm_new,
+                                          "cm": cm_new}
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, ys = jax.lax.scan(body, x, (params["layers"], wkv0, tm0, cm0))
+        x = C.layer_norm(x, params["ln_f"], params["ln_f_b"], cfg.norm_eps)
+        return x, ys
+
+    # -- entry points ------------------------------------------------------ #
+    def loss(self, params, batch):
+        x, _ = self._forward_full(params, batch["tokens"], remat=True)
+        return blockwise_ce(x, self.head_weight(params), batch["targets"],
+                            batch.get("mask"))
+
+    def prefill(self, params, batch, want_density=False, window=0, n_sinks=0):
+        tokens = batch["tokens"]
+        x, ys = self._forward_full(params, tokens)
+        logits = (x[:, -1] @ self.head_weight(params)).astype(jnp.float32)
+        cache = {"wkv": ys["wkv"], "tm": ys["tm"], "cm": ys["cm"],
+                 "pos": jnp.int32(tokens.shape[1])}
+        return PrefillOut(logits, cache, None)   # attention-free: no Eq.-1
+
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+        cfg, rw = self.cfg, self.cfg.rwkv
+        H, hd, d = cfg.n_heads, rw.head_dim, cfg.d_model
+        x = C.constrain_batch(
+            params["embed"][tokens].astype(jnp.bfloat16))     # (B,1,d)
+
+        def body(x, inp):
+            pl, S0, t0, c0 = inp
+            xs = C.layer_norm(x, pl["ln1"], pl["ln1_b"], cfg.norm_eps)
+            x_prev = t0[:, None].astype(xs.dtype)
+            r, k, v, g, ld = self._time_mix_inputs(pl, xs, x_prev)
+            B = x.shape[0]
+            rf, kf, vf = (a.astype(jnp.float32)[:, 0] for a in (r, k, v))
+            kv = jnp.einsum("bhk,bhv->bhkv", kf, vf)
+            att = S0 + pl["u"].astype(jnp.float32)[None, :, :, None] * kv
+            out = jnp.einsum("bhk,bhkv->bhv", rf, att).reshape(B, 1 * d)
+            S1 = jnp.exp(ld.astype(jnp.float32))[:, 0, :, :, None] * S0 + kv
+            out = C.group_norm_heads(out.astype(x.dtype), pl["lnx"],
+                                     pl["lnx_b"], H).reshape(B, 1, d)
+            out = (out * jax.nn.silu(g)) @ pl["wo"]
+            x = x + out
+            x, cm_new = self._channel_mix_full(pl, x, c0)
+            return C.constrain_batch(x), {"wkv": S1, "tm": xs[:, -1],
+                                          "cm": cm_new}
+
+        x, ys = jax.lax.scan(body, x, (params["layers"], cache["wkv"],
+                                       cache["tm"], cache["cm"]))
+        x = C.layer_norm(x, params["ln_f"], params["ln_f_b"], cfg.norm_eps)
+        logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        return DecodeOut(logits, {"wkv": ys["wkv"], "tm": ys["tm"],
+                                  "cm": ys["cm"], "pos": cache["pos"] + 1})
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        cfg, rw = self.cfg, self.cfg.rwkv
+        L, H, hd, d = cfg.n_layers, cfg.n_heads, rw.head_dim, cfg.d_model
+        return {
+            "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
+            "tm": jnp.zeros((L, batch, d), jnp.bfloat16),
+            "cm": jnp.zeros((L, batch, d), jnp.bfloat16),
+            "pos": jnp.int32(0),
+        }

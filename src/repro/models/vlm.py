@@ -1,0 +1,233 @@
+"""Llama-3.2-Vision style VLM: dense text backbone with tanh-gated
+cross-attention layers every ``cross_attn_every`` layers.
+
+The vision tower is a STUB per the assignment: the batch provides
+precomputed patch embeddings ``patches`` (B, n_image_tokens, d_vision);
+the model owns only the projector and cross-attention layers.
+
+Layer layout (100 layers, cross every 5th): 20 blocks of
+[4 self-attn layers -> 1 gated cross-attn layer]; both scanned.
+
+LLMS applicability: self-attn KV chunks get the full treatment; the
+cross-attn KV depends on image embeddings (not recomputable from text),
+so its chunks are swap-only — see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ShapeSpec
+from repro.models import common as C
+from repro.models.api import DecodeOut, PrefillOut
+from repro.models.dense import DenseModel, blockwise_ce
+
+Array = jax.Array
+
+
+class VLMModel(DenseModel):
+
+    def _counts(self):
+        cfg = self.cfg
+        every = cfg.vision.cross_attn_every
+        n_cross = cfg.n_layers // every
+        n_self = cfg.n_layers - n_cross
+        per_block = every - 1
+        return n_self, n_cross, per_block
+
+    def init(self, key) -> Dict:
+        cfg = self.cfg
+        vis = cfg.vision
+        n_self, n_cross, _ = self._counts()
+        d, H, KV, hd, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim, cfg.d_ff)
+        ks = jax.random.split(key, 20)
+        lin = C.init_linear
+        self_layers = {
+            "ln_attn": jnp.ones((n_self, d), jnp.float32),
+            "ln_ffn": jnp.ones((n_self, d), jnp.float32),
+            "wq": lin(ks[0], (n_self, d, H * hd)),
+            "wk": lin(ks[1], (n_self, d, KV * hd)),
+            "wv": lin(ks[2], (n_self, d, KV * hd)),
+            "wo": lin(ks[3], (n_self, H * hd, d)),
+            "w_gate": lin(ks[4], (n_self, d, ff)),
+            "w_up": lin(ks[5], (n_self, d, ff)),
+            "w_down": lin(ks[6], (n_self, ff, d)),
+        }
+        cross_layers = {
+            "ln_attn": jnp.ones((n_cross, d), jnp.float32),
+            "ln_ffn": jnp.ones((n_cross, d), jnp.float32),
+            "wq": lin(ks[7], (n_cross, d, H * hd)),
+            "wk": lin(ks[8], (n_cross, d, KV * hd)),
+            "wv": lin(ks[9], (n_cross, d, KV * hd)),
+            "wo": lin(ks[10], (n_cross, H * hd, d)),
+            "q_norm": jnp.ones((n_cross, hd), jnp.float32),
+            "k_norm": jnp.ones((n_cross, hd), jnp.float32),
+            "gate_attn": jnp.zeros((n_cross,), jnp.float32),
+            "gate_ffn": jnp.zeros((n_cross,), jnp.float32),
+            "w_gate": lin(ks[11], (n_cross, d, ff)),
+            "w_up": lin(ks[12], (n_cross, d, ff)),
+            "w_down": lin(ks[13], (n_cross, ff, d)),
+        }
+        return {
+            "embed": lin(ks[14], (cfg.vocab, d)),
+            "head": lin(ks[15], (d, cfg.vocab)),
+            "ln_f": jnp.ones((d,), jnp.float32),
+            "projector": lin(ks[16], (vis.d_vision, d)),
+            "self_layers": self_layers,
+            "cross_layers": cross_layers,
+        }
+
+    # -- cross-attention layer ------------------------------------------- #
+    def _cross_kv(self, pc, img):
+        """img: (B, I, d) projected patches -> K/V (B, I, KV, hd)."""
+        cfg = self.cfg
+        B, I, _ = img.shape
+        k = (img @ pc["wk"]).reshape(B, I, cfg.n_kv_heads, cfg.head_dim)
+        v = (img @ pc["wv"]).reshape(B, I, cfg.n_kv_heads, cfg.head_dim)
+        k = C.rms_norm(k, pc["k_norm"], cfg.norm_eps)
+        return k, v
+
+    def _cross_layer(self, pc, x, xk, xv):
+        cfg = self.cfg
+        B, S, _ = x.shape
+        h = C.rms_norm(x, pc["ln_attn"], cfg.norm_eps)
+        q = (h @ pc["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+        q = C.rms_norm(q, pc["q_norm"], cfg.norm_eps)
+        mask = jnp.ones((S, xk.shape[1]), bool)
+        ao = C.gqa_attention(q, xk, xv, mask)
+        x = x + jnp.tanh(pc["gate_attn"]).astype(x.dtype) * (
+            ao.out.reshape(B, S, -1) @ pc["wo"])
+        h = C.rms_norm(x, pc["ln_ffn"], cfg.norm_eps)
+        y = C.swiglu(h, pc["w_gate"], pc["w_up"], pc["w_down"])
+        return x + jnp.tanh(pc["gate_ffn"]).astype(x.dtype) * y
+
+    # -- stacked forward --------------------------------------------------- #
+    def _forward_full(self, params, tokens, patches, *, window=0, n_sinks=0,
+                      want_density=False, return_kv=False, remat=False):
+        cfg = self.cfg
+        n_self, n_cross, per = self._counts()
+        x = C.constrain_batch(params["embed"][tokens].astype(jnp.bfloat16))
+        img = C.constrain_batch(
+            patches.astype(jnp.bfloat16) @ params["projector"])
+        S = tokens.shape[1]
+        positions = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+        sp = jax.tree.map(
+            lambda a: a.reshape(n_cross, per, *a.shape[1:]),
+            params["self_layers"])
+
+        def block(x, inp):
+            ps, pc = inp
+            extras_k, extras_v, dens = [], [], []
+            for j in range(per):
+                pl = jax.tree.map(lambda a: a[j], ps)
+                x, ex = self._layer_full(pl, x, positions, window, n_sinks,
+                                         want_density, return_kv)
+                if return_kv:
+                    extras_k.append(ex["k"])
+                    extras_v.append(ex["v"])
+                if want_density:
+                    dens.append(ex["density"])
+            xk, xv = self._cross_kv(pc, img)
+            x = C.constrain_batch(self._cross_layer(pc, x, xk, xv))
+            ys = {}
+            if return_kv:
+                ys["k"] = jnp.stack(extras_k)
+                ys["v"] = jnp.stack(extras_v)
+                ys["xk"], ys["xv"] = xk, xv
+            if want_density:
+                ys["density"] = jnp.stack(dens)
+            return x, ys
+
+        if remat:
+            block = jax.checkpoint(block)
+        x, ys = jax.lax.scan(block, x, (sp, params["cross_layers"]))
+        x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        return x, ys
+
+    # -- entry points -------------------------------------------------------- #
+    def loss(self, params, batch):
+        x, _ = self._forward_full(params, batch["tokens"], batch["patches"],
+                                  remat=True)
+        return blockwise_ce(x, self.head_weight(params), batch["targets"],
+                            batch.get("mask"))
+
+    def prefill(self, params, batch, want_density=False, window=0, n_sinks=0):
+        tokens = batch["tokens"]
+        x, ys = self._forward_full(params, tokens, batch["patches"],
+                                   window=window, n_sinks=n_sinks,
+                                   want_density=want_density, return_kv=True)
+        logits = (x[:, -1] @ self.head_weight(params)).astype(jnp.float32)
+        n_self, n_cross, per = self._counts()
+        k = ys["k"].reshape(n_self, *ys["k"].shape[2:])
+        v = ys["v"].reshape(n_self, *ys["v"].shape[2:])
+        cache = {"k": k, "v": v, "xk": ys["xk"], "xv": ys["xv"],
+                 "pos": jnp.int32(tokens.shape[1])}
+        density = None
+        if want_density:
+            density = jnp.mean(ys["density"], axis=(0, 1))
+        return PrefillOut(logits, cache, density)
+
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+        cfg = self.cfg
+        n_self, n_cross, per = self._counts()
+        x = C.constrain_batch(params["embed"][tokens].astype(jnp.bfloat16))
+        pos = cache["pos"]
+        positions = pos[None]
+        sp = jax.tree.map(
+            lambda a: a.reshape(n_cross, per, *a.shape[1:]),
+            params["self_layers"])
+        kb = cache["k"].reshape(n_cross, per, *cache["k"].shape[1:])
+        vb = cache["v"].reshape(n_cross, per, *cache["v"].shape[1:])
+
+        def block(x, inp):
+            ps, pc, k_cb, v_cb, xk, xv = inp
+            k_out, v_out = [], []
+            for j in range(per):
+                pl = jax.tree.map(lambda a: a[j], ps)
+                h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
+                q, k, v = self._qkv(pl, h)
+                q, k = self._rope(q, k, positions)
+                k_c = C.ring_update(k_cb[j], k, pos)
+                v_c = C.ring_update(v_cb[j], v, pos)
+                out = C.decode_attention(q, k_c, v_c, pos + 1,
+                                         window=window, n_sinks=n_sinks)
+                x = x + out.reshape(*x.shape[:2], -1) @ pl["wo"]
+                x = self._ffn(pl, x)
+                k_out.append(k_c)
+                v_out.append(v_c)
+            x = C.constrain_batch(self._cross_layer(pc, x, xk, xv))
+            return x, (jnp.stack(k_out), jnp.stack(v_out))
+
+        x, (k_new, v_new) = jax.lax.scan(
+            block, x, (sp, params["cross_layers"], kb, vb,
+                       cache["xk"], cache["xv"]))
+        x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
+        cache_out = {
+            "k": k_new.reshape(n_self, *cache["k"].shape[1:]),
+            "v": v_new.reshape(n_self, *cache["v"].shape[1:]),
+            "xk": cache["xk"], "xv": cache["xv"], "pos": pos + 1,
+        }
+        return DecodeOut(logits, cache_out)
+
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        n_self, n_cross, _ = self._counts()
+        vis = cfg.vision
+        shape = (n_self, batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        xshape = (n_cross, batch, vis.n_image_tokens, cfg.n_kv_heads,
+                  cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "xk": jnp.zeros(xshape, dtype), "xv": jnp.zeros(xshape, dtype),
+                "pos": jnp.int32(0)}
+
+    def batch_specs(self, shape: ShapeSpec):
+        cfg = self.cfg
+        specs = super().batch_specs(shape)
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.vision.n_image_tokens,
+             cfg.vision.d_vision), jnp.bfloat16)
+        return specs

@@ -1,0 +1,195 @@
+"""GSPMD sharding rules for every family, keyed by parameter leaf name.
+
+Strategy (DESIGN.md §6):
+  * 2D weight sharding: tensor-parallel over "model" on the output
+    (heads / ffn-hidden / vocab / experts) and FSDP over "data" on the
+    contracting d_model dim — XLA inserts the per-layer all-gathers.
+  * Batch over ("pod","data"); KV caches shard the SEQUENCE over "model"
+    for decode (flash-decoding style partial-softmax reductions are tiny:
+    the B=128 decode_32k cell's per-layer all-reduce is (B,H,1) scalars,
+    not (B,H,S) scores).
+  * long-context (batch < data axis) shards the cache sequence over ALL
+    axes.
+
+Rules are name-based over the param pytree (`jax.tree_util` paths); any
+leaf without a rule replicates — small norms/biases, exactly what you
+want.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# production axis sizes (kept in sync with launch/mesh.py); used to DROP
+# a sharded axis whose dim isn't divisible (e.g. whisper's 51865 vocab)
+AXIS_SIZE = {"pod": 2, "data": 16, "model": 16}
+
+
+def _axsize(entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for e in entry:
+            n *= AXIS_SIZE[e]
+        return n
+    return AXIS_SIZE[entry]
+
+
+def sanitize(spec: P, shape) -> P:
+    entries = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+    out = []
+    for dim, e in zip(shape, entries):
+        out.append(e if dim % _axsize(e) == 0 else None)
+    return P(*out)
+
+# leaves whose LAST dim is the "wide" output (shard model), second-to-last
+# is d_model-like (shard data/fsdp)
+IN_PROJ = {"wq", "wk", "wv", "w_gate", "w_up", "w_x", "wck", "wcr", "wr",
+           "wg", "w1", "s_gate", "s_up", "w_dkv", "embed_proj"}
+# leaves whose LAST dim is d_model-like (shard data), second-to-last wide
+OUT_PROJ = {"wo", "w_down", "w_out", "wcv", "w2", "s_down"}
+
+
+def _leaf_name(path) -> str:
+    for e in reversed(path):
+        if isinstance(e, jax.tree_util.DictKey):
+            return e.key
+    return ""
+
+
+def param_pspecs(cfg: ModelConfig, params_tree, *, fsdp: str = "data",
+                 tp: str = "model", mode: str = "train"):
+    """params_tree: pytree of arrays or ShapeDtypeStructs -> pytree of P.
+
+    mode="train"/"prefill": 2D FSDPxTP weights — per-layer weight
+    all-gathers amortize over many tokens.
+    mode="decode": WEIGHT-STATIONARY — dense projections are TP-sharded
+    and replicated over the data axis (no per-token weight gathers; the
+    collectives become activation-sized partial-sum all-reduces), and
+    MoE experts shard 2D as (experts x ffn-hidden) over (model x data).
+    This is the §Perf fix for the collective-bound decode cells
+    (EXPERIMENTS.md §Perf iteration 1)."""
+    decode = mode == "decode"
+    expert2d = mode == "train_expert2d"
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        lead = (None,) * (nd - 2)
+        if name == "embed":
+            return P(tp, fsdp)
+        if name == "head":
+            return P(fsdp, tp)
+        if name == "projector":
+            return P(fsdp, tp)
+        if name == "pos_dec":
+            return P(None, fsdp)
+        if name in ("w_gate", "w_up") and nd == 4:      # MoE experts
+            return P(None, tp, None, fsdp) if (decode or expert2d) \
+                else P(None, tp, fsdp, None)
+        if name == "w_down" and nd == 4:
+            return P(None, tp, fsdp, None) if (decode or expert2d) \
+                else P(None, tp, None, fsdp)
+        if name in ("w_uk", "w_uv"):
+            return P(None, None, tp)
+        if name in ("gate_a_w", "gate_x_w"):
+            return P(None, None, None, tp)
+        if name == "conv_k":
+            return P(None, None, tp)
+        if name in ("conv_b", "lam"):
+            return P(None, tp)
+        if name == "w_a":
+            return P(None, fsdp, None)
+        if name == "w_b":
+            return P(None, None, fsdp)
+        if name == "mix_w1":
+            return P(None, fsdp, None)
+        if name == "mix_w2":
+            return P(None, None, None, fsdp)
+        if name == "router":
+            return P()                                   # small, replicated
+        if name in IN_PROJ and nd >= 2:
+            return P(*lead, None, tp) if decode else P(*lead, fsdp, tp)
+        if name in OUT_PROJ and nd >= 2:
+            return P(*lead, tp, None) if decode else P(*lead, tp, fsdp)
+        return P()                                       # norms, biases, u
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize(rule(path, leaf), leaf.shape),
+        params_tree)
+
+
+def batch_pspecs(batch_tree, dp: Tuple[str, ...]):
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        return P(dp, *(None,) * (nd - 1))
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+def cache_pspecs(cfg: ModelConfig, cache_tree, shape: ShapeSpec,
+                 dp: Tuple[str, ...], tp: str = "model"):
+    """Decode-cache shardings.  Leaves are (L, B, S, ...) for seq caches,
+    family-specific for states.  B >= |dp| => batch over dp + seq over tp;
+    tiny batch (long_500k) => seq over (dp..., tp)."""
+    dp_size = 1
+    for d in jax.devices()[:0]:
+        pass
+    # |dp| isn't known here without the mesh; use the shape heuristic:
+    big_batch = shape.global_batch >= 16
+
+    seq_shard = (tp,) if big_batch else tuple(dp) + (tp,)
+    bspec = dp if big_batch else None
+
+    def rule(path, leaf):
+        name = _leaf_name(path)
+        nd = len(leaf.shape)
+        if name == "pos":
+            return P()
+        if name in ("k", "v", "ckv", "kpe", "k_scale", "v_scale"):
+            rest = (None,) * (nd - 3)                     # (L,B,S,...)
+            return P(None, bspec, seq_shard, *rest)
+        if name in ("xk", "xv"):                          # (L,B,F,H,hd)
+            return P(None, bspec, None, None, tp)
+        if name == "wkv":                                 # (L,B,H,hk,hv)
+            return P(None, bspec, tp, None, None)
+        if name in ("tm", "cm"):                          # (L,B,d)
+            return P(None, bspec, tp)
+        if name == "conv":                                # (L,B,cw-1,w)
+            return P(None, bspec, None, tp)
+        if name == "lru":                                 # (L,B,w)
+            return P(None, bspec, tp)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: sanitize(rule(path, leaf), leaf.shape),
+        cache_tree)
+
+
+def state_pspecs(cfg: ModelConfig, state_tree, *, fsdp: str = "data",
+                 tp: str = "model", mode: str = "train"):
+    """Train state: params + optimizer moments share the param rules.
+
+    state = {"params": ..., "mu": ..., "nu": ..., (quantized variants),
+             "step": scalar}.  Moment trees mirror params, so reuse
+    param_pspecs leaf-wise by name.
+    """
+    p_specs = param_pspecs(cfg, state_tree["params"], fsdp=fsdp, tp=tp,
+                           mode=mode)
+    out = {}
+    for k, sub in state_tree.items():
+        if k == "step":
+            out[k] = P()
+        elif k in ("mu_scale", "nu_scale"):
+            # per-row scales: the param's spec minus its last dim
+            out[k] = jax.tree_util.tree_map(
+                lambda s: P(*tuple(s)[:-1]), p_specs,
+                is_leaf=lambda x: isinstance(x, P))
+        else:
+            out[k] = p_specs
+    return out

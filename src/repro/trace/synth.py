@@ -1,0 +1,83 @@
+"""Context-switching trace synthesis (paper §4, Eq. 5 + Table 3).
+
+Trace = {(Time_i, CtxtID_i, Prompt_i, groundTruth_i)} with Poisson
+arrivals and three switching patterns:
+
+  Random    uniform over active contexts
+  Markov    first-order chain favouring recently-used contexts
+  Gaussian  preference for contexts with moderate delta-length workload
+
+The paper derives prompts from 6 public datasets; offline we synthesize
+token sequences from the same seeded Markov language as the training
+pipeline, with each "dataset" keeping Table 3's delta-length range.
+Traces are deterministic in (seed, pattern, n_contexts, calls).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.data.pipeline import markov_sample, markov_table
+
+# Table 3: dataset -> (delta_lo, delta_hi) in tokens.  Scaled by
+# ``scale`` for reduced-model benchmarks (the paper's are 0.01k-2k).
+TABLE3 = {
+    "agnews": (200, 500),
+    "xsum": (1000, 2000),
+    "samsum": (100, 300),
+    "cnn_dailymail": (500, 1000),
+    "wmt17_de_en": (100, 500),
+    "sst2": (10, 100),
+}
+PATTERNS = ("random", "markov", "gaussian")
+
+
+@dataclass
+class TraceEvent:
+    time: float
+    ctx_id: int
+    prompt: np.ndarray          # int32 tokens
+    ground_truth: np.ndarray    # int32 tokens (ideal output)
+    dataset: str
+
+
+def synthesize(n_contexts: int, n_calls: int, vocab: int,
+               pattern: str = "random", rate_per_s: float = 1 / 300.0,
+               scale: float = 1.0, seed: int = 0,
+               datasets: Tuple[str, ...] = tuple(TABLE3)) -> List[TraceEvent]:
+    """rate_per_s: Poisson calling rate (paper default: 1 per 5 min)."""
+    assert pattern in PATTERNS, pattern
+    rng = np.random.RandomState(seed)
+    table = markov_table(vocab, seed=seed + 77)
+    ctx_dataset = [datasets[i % len(datasets)] for i in range(n_contexts)]
+    # per-context mean delta (for the gaussian preference pattern)
+    deltas = np.array([np.mean(TABLE3[d]) * scale for d in ctx_dataset])
+    target = np.median(deltas)
+    gauss_w = np.exp(-0.5 * ((deltas - target) / (deltas.std() + 1e-9)) ** 2)
+    gauss_w /= gauss_w.sum()
+
+    events: List[TraceEvent] = []
+    t = 0.0
+    prev = rng.randint(n_contexts)
+    for _ in range(n_calls):
+        t += rng.exponential(1.0 / rate_per_s)
+        if pattern == "random":
+            cid = rng.randint(n_contexts)
+        elif pattern == "gaussian":
+            cid = rng.choice(n_contexts, p=gauss_w)
+        else:  # markov: stay with recently-used w.p. 0.5, else uniform
+            if rng.rand() < 0.5:
+                cid = prev
+            else:
+                cid = rng.randint(n_contexts)
+        prev = cid
+        lo, hi = TABLE3[ctx_dataset[cid]]
+        n = max(2, int(rng.randint(int(lo * scale), int(hi * scale) + 1)))
+        n_prompt = max(1, int(n * 0.8))
+        seqtoks = markov_sample(table, n, rng)
+        events.append(TraceEvent(
+            time=t, ctx_id=cid, prompt=seqtoks[:n_prompt],
+            ground_truth=seqtoks[n_prompt:], dataset=ctx_dataset[cid]))
+    return events

@@ -1,0 +1,47 @@
+import os
+import sys
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# XLA_FLAGS before any jax import; never set it globally here)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED, REGISTRY, get_config, reduced
+from repro.models.registry import build_model
+
+_PARAMS_CACHE = {}
+
+
+def tiny_model(name: str):
+    """(cfg, model, params) for the reduced config of an arch, cached."""
+    if name not in _PARAMS_CACHE:
+        cfg = reduced(get_config(name))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _PARAMS_CACHE[name] = (cfg, model, params)
+    return _PARAMS_CACHE[name]
+
+
+def make_batch(cfg, B=2, S=24, seed=1):
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(seed)
+    tok = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": tok, "targets": tok}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            key, (B, cfg.vision.n_image_tokens, cfg.vision.d_vision),
+            jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="session")
+def bench_service_model():
+    from benchmarks.common import bench_model
+    return bench_model()

@@ -1,0 +1,82 @@
+"""Property tests for the tolerance-aware compression planner (Eq. 1-3)
+and the chunk codec."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as comp
+from repro.kernels import ref
+
+RATIO = {8: 1.0, 4: 0.5, 2: 0.25}
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=40),
+       st.sampled_from([0.3, 0.5, 0.75]))
+@settings(max_examples=60, deadline=None)
+def test_plan_buckets_constraint(ds, ratio_global):
+    D = np.asarray(ds)
+    bits = comp.plan_buckets(D, ratio_global)
+    assert len(bits) == len(D)
+    avg = sum(RATIO[int(b)] for b in bits) / len(bits)
+    assert avg <= ratio_global + 1e-9
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=7))
+@settings(max_examples=40, deadline=None)
+def test_plan_buckets_optimal_vs_bruteforce(ds):
+    D = np.asarray(ds)
+    bits = comp.plan_buckets(D, 0.5)
+    _, best_info = comp.plan_buckets_brute(D, 0.5)
+    info = sum(RATIO[int(b)] * d for b, d in zip(bits, D))
+    assert info >= best_info - 1e-9
+
+
+def test_plan_buckets_density_monotone():
+    """Denser chunks never get FEWER bits (the paper's intent)."""
+    D = np.asarray([9.0, 5.0, 4.0, 1.0, 0.5, 0.1])
+    bits = comp.plan_buckets(D, 0.5)
+    order = np.argsort(-D)
+    b_sorted = bits[order]
+    assert all(b_sorted[i] >= b_sorted[i + 1]
+               for i in range(len(b_sorted) - 1))
+
+
+def test_unmeasured_chunks_treated_densest():
+    dens = np.zeros(128)
+    cnt = np.zeros(128)
+    cnt[:96] = 1                               # chunks 6,7 unmeasured
+    D = comp.chunk_density(dens, cnt, 128, 16)
+    assert np.isinf(D[6]) and np.isinf(D[7])
+    bits = comp.plan_buckets(D, 0.5)           # n=8: two 8-bit slots fit
+    assert bits[6] == 8 and bits[7] == 8       # unmeasured stay precise
+
+
+@given(st.integers(2, 5).map(lambda k: 2 ** k),      # T in {4..32}
+       st.integers(1, 20).map(lambda k: k * 8),      # F multiple of 8
+       st.sampled_from([8, 4, 2]),
+       st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_quant_roundtrip_error_bound(T, F, bits, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (T, F),
+                          jnp.float32) * 2.0
+    packed, scale = ref.quantize_ref(x, bits)
+    out = ref.dequantize_ref(packed, scale, bits, T, jnp.float32)
+    err = np.abs(np.asarray(out) - np.asarray(x))
+    bound = np.asarray(scale)[None, :] * 0.51 + 1e-6
+    assert (err <= bound).all()
+
+
+@given(st.sampled_from([8, 4, 2]), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_quant_idempotent(bits, seed):
+    """quant(dequant(quant(x))) == quant(x): re-encoding at the same
+    level is lossless (matters when the service re-plans levels)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (16, 64), jnp.float32)
+    p1, s1 = ref.quantize_ref(x, bits)
+    y = ref.dequantize_ref(p1, s1, bits, 16, jnp.float32)
+    p2, s2 = ref.quantize_ref(y, bits)
+    y2 = ref.dequantize_ref(p2, s2, bits, 16, jnp.float32)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y),
+                               rtol=1e-5, atol=1e-6)

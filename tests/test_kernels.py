@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import chunk_quant, decode_qattn as kdq, ref
+from repro.kernels import attn_density as kad
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("shape", [(16, 128), (16, 384), (32, 100),
+                                   (8, 512), (4, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_chunk_quant_matches_ref(bits, shape, dtype):
+    T, F = shape
+    x = (jax.random.normal(jax.random.PRNGKey(T * F + bits), shape,
+                           jnp.float32) * 3).astype(dtype)
+    p_ref, s_ref = ref.quantize_ref(x, bits)
+    p_k, s_k = chunk_quant.quantize(x, bits, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_k), rtol=1e-6)
+    if dtype == jnp.float32:
+        # bit-exact in fp32; bf16 inputs can differ by 1 code at rounding
+        # boundaries (1-ulp reduction-order differences in interpret mode)
+        np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_k))
+    d_ref = ref.dequantize_ref(p_ref, s_ref, bits, T, jnp.float32)
+    d_k = chunk_quant.dequantize(p_k, s_k, bits, T, jnp.float32,
+                                 interpret=True)
+    tol = float(np.max(np.asarray(s_k))) * (0.0 if dtype == jnp.float32
+                                            else 1.01)
+    np.testing.assert_allclose(np.asarray(d_ref), np.asarray(d_k),
+                               rtol=1e-6, atol=tol + 1e-7)
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, Sq=64, Sk=64, H=4, KV=2, hd=32, window=0, n_sinks=0),
+    dict(B=1, Sq=100, Sk=100, H=8, KV=8, hd=64, window=0, n_sinks=0),
+    dict(B=1, Sq=128, Sk=128, H=4, KV=1, hd=16, window=48, n_sinks=8),
+    dict(B=2, Sq=48, Sk=48, H=6, KV=3, hd=8, window=0, n_sinks=0),
+])
+def test_attn_density_matches_ref(case):
+    c = case
+    ks = jax.random.split(jax.random.PRNGKey(sum(c.values())), 3)
+    q = jax.random.normal(ks[0], (c["B"], c["Sq"], c["H"], c["hd"]),
+                          jnp.float32)
+    k = jax.random.normal(ks[1], (c["B"], c["Sk"], c["KV"], c["hd"]),
+                          jnp.float32)
+    v = jax.random.normal(ks[2], (c["B"], c["Sk"], c["KV"], c["hd"]),
+                          jnp.float32)
+    o_ref, d_ref = ref.attn_density_ref(q, k, v, c["window"], c["n_sinks"])
+    o_k, d_k = kad.attn_density(q, k, v, c["window"], c["n_sinks"],
+                                interpret=True, bq=32, bk=32)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_ref),
+                               rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, S=96, H=8, KV=2, hd=32, nv=50, window=0, n_sinks=0),
+    dict(B=1, S=200, H=4, KV=4, hd=64, nv=200, window=0, n_sinks=0),
+    dict(B=3, S=128, H=8, KV=1, hd=16, nv=100, window=40, n_sinks=4),
+])
+def test_decode_qattn_matches_ref(case):
+    c = case
+    ks = jax.random.split(jax.random.PRNGKey(c["S"] + c["H"]), 5)
+    q = jax.random.normal(ks[0], (c["B"], c["H"], c["hd"]), jnp.float32)
+    kq = jax.random.randint(ks[1], (c["B"], c["S"], c["KV"], c["hd"]),
+                            -127, 128, jnp.int32).astype(jnp.int8)
+    vq = jax.random.randint(ks[2], (c["B"], c["S"], c["KV"], c["hd"]),
+                            -127, 128, jnp.int32).astype(jnp.int8)
+    kscale = jax.random.uniform(ks[3], (c["B"], c["S"], c["KV"]),
+                                jnp.float32, 0.001, 0.02)
+    vscale = jax.random.uniform(ks[4], (c["B"], c["S"], c["KV"]),
+                                jnp.float32, 0.001, 0.02)
+    o_ref = ref.decode_qattn_ref(q, kq, vq, kscale, vscale, c["nv"],
+                                 c["window"], c["n_sinks"])
+    o_k = kdq.decode_qattn(q, kq, vq, kscale, vscale, c["nv"], c["window"],
+                           c["n_sinks"], interpret=True, bs=32)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_ops_dispatch_ref_on_cpu():
+    from repro.kernels import ops
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
+    p, s = ops.chunk_quantize(x, bits=4)
+    y = ops.chunk_dequantize(p, s, bits=4, n_tokens=16)
+    assert y.shape == x.shape

@@ -1,0 +1,155 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + decode/prefill
+and recompute parity for the cache-bearing families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_model
+from repro.configs import ASSIGNED, REGISTRY
+
+ALL_ARCHS = sorted(REGISTRY)
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_train_step(name):
+    cfg, model, params = tiny_model(name)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss)), name
+    assert 0 < float(loss) < 20
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_smoke_prefill_decode_parity(name):
+    cfg, model, params = tiny_model(name)
+    B, S = 2, 24
+    batch = make_batch(cfg, B, S)
+    pb = dict(batch)
+    pb.pop("targets")
+    want_density = cfg.family != "rwkv6"
+    pf = jax.jit(lambda p, b: model.prefill(p, b, want_density=want_density)
+                 )(params, pb)
+    assert pf.logits.shape == (B, cfg.vocab)
+    assert np.isfinite(np.asarray(pf.logits)).all()
+    if want_density:
+        assert pf.density.shape == (B, S)
+        assert np.isfinite(np.asarray(pf.density)).all()
+
+    cache = model.init_cache(B, S)
+    if cfg.family in ("encdec", "vlm"):
+        cache["xk"], cache["xv"] = pf.cache["xk"], pf.cache["xv"]
+    dec = jax.jit(model.decode_step)
+    for i in range(S):
+        out = dec(params, batch["tokens"][:, i:i + 1], cache)
+        cache = out.cache
+    np.testing.assert_allclose(np.asarray(out.logits), np.asarray(pf.logits),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("name", ["smollm-360m", "llama2-7b",
+                                  "deepseek-v2-lite-16b"])
+def test_recompute_exact(name):
+    """Paper Fig. 7: interleaved-chunk recompute restores KV exactly."""
+    cfg, model, params = tiny_model(name)
+    B, S = 1, 32
+    batch = make_batch(cfg, B, S)
+    pf = jax.jit(lambda p, b: model.prefill(p, b))(params,
+                                                   {"tokens": batch["tokens"]})
+    leaves = ("ckv", "kpe") if cfg.family == "mla_moe" else ("k", "v")
+    miss = jnp.array([3, 4, 10, 11, 20, 21])
+    holey = dict(pf.cache)
+    for lf in leaves:
+        holey[lf] = holey[lf].at[:, :, miss].set(0)
+    cache2, hidden, dens = jax.jit(
+        lambda p, t, q, c: model.recompute(p, t, q, c, S, want_density=True)
+    )(params, batch["tokens"][:, miss], miss, holey)
+    for lf in leaves:
+        np.testing.assert_allclose(np.asarray(cache2[lf]),
+                                   np.asarray(pf.cache[lf]),
+                                   rtol=2e-2, atol=2e-2)
+    assert hidden.shape[1] == len(miss)
+    assert np.isfinite(np.asarray(dens)).all()
+
+
+def test_extend_is_prefill_append():
+    """recompute with a contiguous suffix == prefill of the whole seq."""
+    cfg, model, params = tiny_model("smollm-360m")
+    B, S0, T = 1, 16, 8
+    batch = make_batch(cfg, B, S0 + T)
+    toks = batch["tokens"]
+    pf_full = jax.jit(lambda p, b: model.prefill(p, b))(
+        params, {"tokens": toks})
+    pf_half = jax.jit(lambda p, b: model.prefill(p, b))(
+        params, {"tokens": toks[:, :S0]})
+    cache = {k: (jnp.pad(v, ((0, 0), (0, 0), (0, T), (0, 0), (0, 0)))
+                 if k != "pos" else v)
+             for k, v in pf_half.cache.items()}
+    pos = jnp.arange(S0, S0 + T, dtype=jnp.int32)
+    cache2, hidden, _ = jax.jit(
+        lambda p, t, q, c: model.recompute(p, t, q, c, S0 + T)
+    )(params, toks[:, S0:], pos, cache)
+    logits = np.asarray(hidden[:, -1] @ model.head_weight(params))
+    np.testing.assert_allclose(logits, np.asarray(pf_full.logits),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_attention_matches_blocked():
+    from repro.models import common as C
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    B, S, H, KV, hd = 2, 160, 6, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    ref = C.blocked_causal_attention(q, k, v, block=64).out
+    out = C.flash_attention(q, k, v, 0, 64, 0, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+    # gradients flow and are finite
+    g = jax.grad(lambda q: jnp.sum(C.flash_attention(q, k, v, 0, 64, 0, 0)
+                                   .astype(jnp.float32)))(q)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_flash_attention_grad_matches_reference():
+    from repro.models import common as C
+    key = jax.random.PRNGKey(1)
+    ks = jax.random.split(key, 3)
+    B, S, H, KV, hd = 1, 96, 4, 2, 8
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+
+    def ref_loss(q, k, v):
+        pos = jnp.arange(S)
+        mask = C.causal_window_mask(pos, pos)
+        return jnp.sum(C.gqa_attention(q, k, v, mask).out
+                       .astype(jnp.float32) ** 2)
+
+    def flash_loss(q, k, v):
+        return jnp.sum(C.flash_attention(q, k, v, 0, 32, 0, 0)
+                       .astype(jnp.float32) ** 2)
+
+    g_ref = jax.grad(ref_loss, argnums=(0, 1, 2))(q, k, v)
+    g_fl = jax.grad(flash_loss, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_fl):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_chunked_matches_sequential():
+    """Chunked-parallel wkv == step-by-step recurrence."""
+    cfg, model, params = tiny_model("rwkv6-1.6b")
+    B, S = 2, 21
+    batch = make_batch(cfg, B, S)
+    pf = jax.jit(lambda p, b: model.prefill(p, b))(params,
+                                                   {"tokens": batch["tokens"]})
+    cache = model.init_cache(B, S)
+    dec = jax.jit(model.decode_step)
+    for i in range(S):
+        out = dec(params, batch["tokens"][:, i:i + 1], cache)
+        cache = out.cache
+    np.testing.assert_allclose(np.asarray(cache["wkv"]),
+                               np.asarray(pf.cache["wkv"]),
+                               rtol=2e-2, atol=2e-2)

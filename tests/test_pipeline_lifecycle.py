@@ -1,0 +1,96 @@
+"""Properties of the Eq.-4 pipeline planner and the LCTRU lifecycle."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lifecycle import LCTRUQueue, MemoryManager
+from repro.core.pipeline import PipelineProfile, fit_linear, plan_split
+
+
+@given(st.lists(st.tuples(st.integers(1_000, 200_000), st.booleans()),
+                min_size=0, max_size=10),
+       st.floats(1e-4, 1e-2), st.floats(1e-9, 1e-6))
+@settings(max_examples=60, deadline=None)
+def test_plan_split_beats_or_matches_bruteforce(chunks, re_per, io_per):
+    prof = PipelineProfile(re_base=1e-3, re_per_chunk=re_per,
+                           io_base=1e-4, io_per_byte=io_per)
+    miss = [(i, b, r) for i, (b, r) in enumerate(chunks)]
+    re_idx, io_idx, pred = plan_split(miss, prof)
+    assert sorted(re_idx + io_idx) == sorted(m[0] for m in miss)
+    # brute force over all recompute subsets (recomputable only)
+    rec = [m for m in miss if m[2]]
+    best = float("inf")
+    for k in range(len(rec) + 1):
+        for sub in itertools.combinations(rec, k):
+            sub_ids = {s[0] for s in sub}
+            io_b = sum(b for i, b, _ in miss if i not in sub_ids)
+            best = min(best, max(prof.t_re(len(sub)), prof.t_io(io_b)))
+    assert pred <= best + 1e-9 or abs(pred - best) < 1e-9
+
+
+def test_plan_split_prefers_heavy_chunks():
+    prof = PipelineProfile(re_base=0, re_per_chunk=1e-3, io_base=0,
+                           io_per_byte=1e-6)
+    miss = [(0, 100_000, True), (1, 1_000, True), (2, 50_000, True)]
+    re_idx, io_idx, _ = plan_split(miss, prof)
+    if re_idx:
+        # heaviest chunk moves to recompute first (paper principle ii)
+        assert 0 in re_idx
+
+
+def test_fit_linear():
+    base, slope = fit_linear([1, 2, 4], [1.1, 2.1, 4.1])
+    assert abs(base - 0.1) < 1e-6 and abs(slope - 1.0) < 1e-6
+
+
+def test_lctru_heavy_first_lru_within():
+    q = LCTRUQueue()
+    q.touch(("a", 0), 2)
+    q.touch(("b", 0), 8)     # heavy, oldest among 8-bit
+    q.touch(("b", 1), 8)
+    q.touch(("c", 0), 16)    # heaviest level
+    assert q.pop() == ("c", 0)
+    assert q.pop() == ("b", 0)       # LRU within the 8-bit sub-queue
+    q.touch(("a", 1), 4)
+    assert q.pop() == ("b", 1)
+    assert q.pop() == ("a", 1)
+    assert q.pop() == ("a", 0)
+    assert q.pop() is None
+
+
+def test_lctru_touch_moves_to_mru():
+    q = LCTRUQueue()
+    q.touch((1, 0), 8)
+    q.touch((1, 1), 8)
+    q.touch((1, 0), 8)               # re-access
+    assert q.pop() == (1, 1)
+
+
+def test_lru_only_mode_ignores_levels():
+    q = LCTRUQueue(lru_only=True)
+    q.touch((1, 0), 2)
+    q.touch((1, 1), 16)
+    assert q.pop() == (1, 0)         # pure recency
+
+
+def test_memory_manager_respects_lock():
+    q = LCTRUQueue()
+    mm = MemoryManager(budget=100, queue=q)
+    mm.register((1, 0), 60, 8)
+    mm.register((2, 0), 60, 8)
+    evicted = []
+    mm.reclaim(40, evicted.append, locked={1})
+    assert evicted == [(2, 0)]
+    assert mm.used == 60
+
+
+def test_memory_manager_accounting():
+    q = LCTRUQueue()
+    mm = MemoryManager(budget=1000, queue=q)
+    mm.register((1, 0), 100, 8)
+    mm.register((1, 0), 150, 4)      # resize in place
+    assert mm.used == 150
+    mm.unregister((1, 0))
+    assert mm.used == 0
