@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.restore import set_disk_throttle
+from repro.core.scheduler import ServiceRouter
 from repro.core.service import LLMSConfig, LLMService
 from repro.models.registry import build_model
 from repro.trace.synth import synthesize
@@ -62,19 +63,26 @@ def make_service(policy: str, budget: int, max_ctx: int = 256,
 
 
 def replay(svc: LLMService, events, max_new: int = 4,
-           idle_flush_s: Optional[float] = 60.0, warm: bool = True
-           ) -> Dict[str, float]:
+           idle_flush_s: Optional[float] = 60.0, warm: bool = True,
+           predict: bool = False) -> Dict[str, float]:
+    """Replay through a single-app ServiceRouter session (inline dispatch:
+    events stay in strict trace order, so records are like-for-like with
+    the pre-router harness).  ``predict=True`` additionally enables the
+    router's next-context prediction -> AoT swap-out hints."""
+    router = ServiceRouter(svc, predict=predict, start=False)
+    sess = router.register_app("bench", "foreground")
+
     def one_pass(evts):
         stubs: Dict[int, object] = {}
         prev_t = None
         for ev in evts:
             if ev.ctx_id not in stubs:
-                stubs[ev.ctx_id] = svc.newLLMCtx()
+                stubs[ev.ctx_id] = sess.new_ctx()
             if idle_flush_s is not None and prev_t is not None \
                     and ev.time - prev_t > idle_flush_s:
                 svc.swapper.flush()        # device idle: I/O completed
-            svc.callLLM(stubs[ev.ctx_id], ev.prompt.tolist(),
-                        max_new_tokens=max_new)
+            sess.call(stubs[ev.ctx_id], ev.prompt.tolist(),
+                      max_new_tokens=max_new)
             prev_t = ev.time
         return stubs
 
@@ -82,11 +90,14 @@ def replay(svc: LLMService, events, max_new: int = 4,
         set_disk_throttle(None)            # warm pass: compile everything
         stubs = one_pass(events)
         for s in stubs.values():
-            svc.delLLMCtx(s)
+            sess.del_ctx(s)
         svc.records.clear()
+        router.call_records.clear()
         set_disk_throttle(DISK_BW, DISK_LAT)
     one_pass(events)
-    return svc.stats()
+    st = svc.stats()
+    router.shutdown()
+    return st
 
 
 def bench_events(n_contexts: int, n_calls: int, pattern: str = "markov",

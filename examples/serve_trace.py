@@ -1,5 +1,7 @@
 """Serve a synthesized multi-app context-switching trace (paper §4/§5)
-and compare LLMS against a baseline policy side by side.
+through the ServiceRouter and compare LLMS against a baseline policy
+side by side.  Contexts are split across a foreground and a background
+app session so the router's per-priority accounting is visible.
 
   PYTHONPATH=src:. python examples/serve_trace.py [--policy vllm_sq]
 """
@@ -10,6 +12,7 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.core.restore import set_disk_throttle
+from repro.core.scheduler import ServiceRouter
 from repro.core.service import LLMSConfig, LLMService, POLICIES
 from repro.models.registry import build_model
 from repro.trace.synth import synthesize
@@ -21,23 +24,33 @@ def run(policy: str, events, model, params, budget: int):
         swap_dir=tempfile.mkdtemp()))
     if svc.cfg.use_pipeline:
         svc.profile_pipeline()
+    router = ServiceRouter(svc, predict=True)
+    fg = router.register_app("chat", "foreground")
+    bg = router.register_app("agent", "background")
 
     def one_pass():
-        stubs = {}
+        stubs, futs = {}, []
         for ev in events:
+            sess = fg if ev.ctx_id % 2 == 0 else bg
             if ev.ctx_id not in stubs:
-                stubs[ev.ctx_id] = svc.newLLMCtx()
-            svc.callLLM(stubs[ev.ctx_id], ev.prompt.tolist(),
-                        max_new_tokens=4)
+                stubs[ev.ctx_id] = sess.new_ctx()
+            futs.append(sess.submit(stubs[ev.ctx_id], ev.prompt.tolist(),
+                                    max_new_tokens=4))
+        router.drain()
+        for f in futs:
+            f.result()          # surface call failures, like the old path
         return stubs
 
     set_disk_throttle(None)           # warm pass: compile everything
     for stub in one_pass().values():
-        svc.delLLMCtx(stub)
+        fg.del_ctx(stub)
     svc.records.clear()
+    router.call_records.clear()
     set_disk_throttle(25e6, 2e-4)
     one_pass()
     st = svc.stats()
+    st["router"] = router.stats()
+    router.shutdown()
     svc.close()
     return st
 
@@ -61,6 +74,11 @@ def main():
         print(f"{policy:10s} mean switch {st['switch_mean_s']*1e3:8.3f} ms  "
               f"p99 {st['switch_p99_s']*1e3:8.3f} ms  "
               f"mem {st['mem_used']:>8d} B")
+        for prio in ("foreground", "background"):
+            if prio in st["router"]:
+                r = st["router"][prio]
+                print(f"  {prio:10s} calls={r['calls']:3d}"
+                      f" latency {r['latency_mean_s']*1e3:8.3f} ms")
 
 
 if __name__ == "__main__":

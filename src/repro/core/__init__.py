@@ -1,10 +1,16 @@
 """LLMS core: the paper's contribution (chunked KV compression/swapping).
 
-Public surface:
-  LLMService / LLMSConfig / LLMCtxStub  (paper Table 1 API)
+Public surface (DESIGN.md §1):
+  LLMService / LLMSConfig / LLMCtxStub  (paper Table 1 API, facade)
+  scheduler.ServiceRouter / AppSession  (multi-app admission front-end)
+  executor.ModelExecutor                (jitted entry points, layer 1)
+  context_store.ContextStore            (persistent contexts, layer 2)
+  residency.ResidencyEngine             (switch-in/out engine, layer 3)
   ChunkCodec / CompressedChunk          (chunk memory model, Fig. 4)
   compression.plan_buckets              (tolerance-aware planner, Eq. 3)
   pipeline.plan_split                   (swapping-recompute planner, Eq. 4)
   lifecycle.LCTRUQueue                  (eviction order, §3.4)
 """
 from repro.core.service import LLMService, LLMSConfig, LLMCtxStub  # noqa
+from repro.core.scheduler import (  # noqa
+    AppSession, NextContextPredictor, ServiceRouter)

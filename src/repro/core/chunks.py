@@ -149,6 +149,9 @@ class ChunkMeta:
     on_disk: bool = False
     dirty: bool = True             # differs from the on-disk copy
     nbytes: int = 0
+    n_covered: int = 0             # context tokens the payload encodes: a
+                                   # partial chunk that grew must re-encode
+                                   # even if clean (KV is append-only)
 
 
 def chunk_ranges(n_tokens: int, cs: int) -> List[Tuple[int, int]]:

@@ -1,0 +1,169 @@
+"""Model executor — the jitted entry points of the serving stack.
+
+Layer 1 of the four-layer design (DESIGN.md §1): owns the bf16 working
+cache, the power-of-two bucket/padding logic that keeps jit compilation
+counts bounded, and the process-wide ``_JIT_CACHE`` shared across
+service instances of the same (model, window) so benchmark sweeps don't
+recompile.  Everything above (residency, scheduler) treats this layer
+as "run the model on these tokens/positions"; nothing here knows about
+chunks-on-disk, budgets, or apps.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunks import ChunkCodec
+
+Array = jax.Array
+
+# (model-id, window, n_sinks, family, chunk_tokens) -> jitted callables.
+# Shared process-wide so sweeps over policies/budgets reuse compilations.
+_JIT_CACHE: Dict[Tuple, Any] = {}
+
+# The pipelined recompute scan pulls per-layer I/O data through an
+# ordered io_callback; the active LayerFeed is published here by the
+# residency engine just before dispatch (single-threaded by design —
+# the scheduler serializes all model execution).
+_ACTIVE_FEED = None
+
+
+def _feed_fetch(layer):
+    return _ACTIVE_FEED.fetch(layer)
+
+
+def _pow2_buckets(lo: int, hi: int) -> List[int]:
+    out, b = [], lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return out
+
+
+class ModelExecutor:
+    """Jitted model entry points + bucket/padding helpers (one model)."""
+
+    def __init__(self, model, params, cfg):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        mc = model.cfg
+        self.cs = cfg.chunk_tokens
+        self.n_slots = math.ceil(cfg.max_ctx_len / self.cs) * self.cs
+        self.codec = ChunkCodec(mc.family, self.cs)
+        self.recomputable = mc.family in ("dense", "mla_moe")
+
+        # working cache: one active context at a time (paper's WS lock)
+        self.tok_buckets = _pow2_buckets(self.cs, self.n_slots)
+        self.io_buckets = _pow2_buckets(1, max(self.n_slots // self.cs, 1))
+        self.s_work = self.n_slots + self.tok_buckets[-1]
+        self.pad_slot = self.s_work - 1
+        self.work_cache = model.init_cache(1, self.s_work)
+        self._zero_cache = self.work_cache
+
+        ck = (id(model), cfg.window, cfg.n_sinks, mc.family, self.cs)
+        cached = _JIT_CACHE.get(ck)
+        if cached is None:
+            cw = dict(window=cfg.window, n_sinks=cfg.n_sinks)
+            cached = {
+                "extend": jax.jit(functools.partial(
+                    model.recompute, want_density=True, **cw)),
+                "extend_nod": jax.jit(functools.partial(
+                    model.recompute, want_density=False, **cw)),
+                "decode": jax.jit(functools.partial(
+                    model.decode_step, want_density=True, **cw)),
+                "logits": jax.jit(
+                    lambda p, h: (h @ model.head_weight(p)
+                                  ).astype(jnp.float32)),
+                "insert": jax.jit(self.codec.insert),
+                "scatter": jax.jit(self.codec.scatter),
+                "setpos": jax.jit(lambda c, p: {**c, "pos": p}),
+            }
+            _JIT_CACHE[ck] = cached
+        self.extend_fn = cached["extend"]
+        self.extend_nod_fn = cached["extend_nod"]
+        self.decode_fn = cached["decode"]
+        self.logits_fn = cached["logits"]
+        self.insert_fn = cached["insert"]
+        self.scatter_fn = cached["scatter"]
+        self.setpos_fn = cached["setpos"]
+
+        shapes = {k: v.shape for k, v in self.work_cache.items()
+                  if k in self.codec.leaves}
+        self.leaf_shapes = shapes
+        self.n_layers = next(iter(shapes.values()))[0]
+        if "k" in self.codec.leaves:
+            self.leaf_dims = {"k": (mc.n_kv_heads, mc.head_dim),
+                              "v": (mc.n_kv_heads, mc.head_dim)}
+        else:
+            self.leaf_dims = {"ckv": (mc.mla.kv_lora_rank,),
+                              "kpe": (mc.mla.qk_rope_head_dim,)}
+
+    # -- bucket / padding helpers ------------------------------------- #
+    def bucket_len(self, n: int) -> int:
+        return next(x for x in self.tok_buckets if x >= n)
+
+    def bucket_pad(self, arr: np.ndarray, fill) -> np.ndarray:
+        b = self.bucket_len(len(arr))
+        if b == len(arr):
+            return arr
+        return np.concatenate([arr, np.full(b - len(arr), fill, arr.dtype)])
+
+    def chunk_positions(self, idxs: Sequence[int]) -> np.ndarray:
+        pos = []
+        for i in idxs:
+            pos.extend(range(i * self.cs, (i + 1) * self.cs))
+        return np.asarray(pos, np.int32)
+
+    # -- model entry points ------------------------------------------- #
+    def fresh_cache(self, n_tokens: int):
+        return self.setpos_fn(self._zero_cache, jnp.int32(n_tokens))
+
+    def extend(self, cache, prompt: np.ndarray, n0: int):
+        """Append ``prompt`` at positions [n0, n0+M) -> (cache, last-token
+        logits, per-position density mass)."""
+        M = len(prompt)
+        pos = np.arange(n0, n0 + M, dtype=np.int32)
+        pos_b = self.bucket_pad(pos, self.pad_slot)
+        toks_b = self.bucket_pad(prompt, 0)
+        cache, hidden, dens = self.extend_fn(
+            self.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
+            cache, jnp.int32(n0 + M))
+        logits = np.asarray(self.logits_fn(self.params, hidden[:, M - 1]))[0]
+        cache = self.setpos_fn(cache, jnp.int32(n0 + M))
+        return cache, logits, np.asarray(dens[0], np.float64)
+
+    def decode(self, cache, tok: int):
+        out, mass = self.decode_fn(
+            self.params, jnp.asarray([[tok]], jnp.int32), cache)
+        return (out.cache, np.asarray(out.logits[0]),
+                np.asarray(mass[0], np.float64))
+
+    def run_pipelined(self, feed, toks_b, miss_b, io_pos_b, cache, n_total):
+        """Dispatch the layer-pipelined recompute scan, with ``feed``
+        published as the active per-layer I/O source."""
+        global _ACTIVE_FEED
+        _ACTIVE_FEED = feed
+        fn = self._get_pipelined_fn()
+        cache, _, _ = fn(self.params, jnp.asarray(toks_b)[None],
+                         jnp.asarray(miss_b), jnp.asarray(io_pos_b),
+                         cache, jnp.int32(n_total))
+        return cache
+
+    def _get_pipelined_fn(self):
+        ck = (id(self.model), self.cfg.window, self.cfg.n_sinks, "pipelined")
+        fn = _JIT_CACHE.get(ck)
+        if fn is None:
+            fn = jax.jit(
+                functools.partial(self.model.recompute_pipelined,
+                                  fetch=_feed_fetch,
+                                  window=self.cfg.window,
+                                  n_sinks=self.cfg.n_sinks))
+            _JIT_CACHE[ck] = fn
+        return fn

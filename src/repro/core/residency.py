@@ -1,0 +1,392 @@
+"""Residency engine — switch-in/switch-out of context state (paper §3).
+
+Layer 3 of the four-layer design (DESIGN.md §1): decides where every
+chunk lives (bf16 working cache / compressed DRAM / disk) and moves it.
+Switch-in plans the I/O-vs-recompute split (Eq. 4), dispatches the
+layer-pipelined restore (Fig. 8), and assembles resident chunks into
+the working cache.  Switch-out runs tolerance-aware compression
+(Eq. 1-3) and ahead-of-time swap-out (§3.4).  Eviction implements the
+Reclaim primitive over the LCTRU order.
+
+Built on ``lifecycle`` (eviction order + budget), ``swap`` (async disk
+tier), and ``restore`` (segmented chunk files + LayerFeed); runs the
+model only through the ``ModelExecutor``.
+"""
+from __future__ import annotations
+
+import math
+import os
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.chunks import ChunkMeta, CompressedChunk
+from repro.core.context_store import Context, ContextStore
+from repro.core.executor import ModelExecutor
+from repro.core.lifecycle import LCTRUQueue, MemoryManager
+from repro.core.pipeline import PipelineProfile, fit_linear, plan_split
+from repro.core.restore import LayerFeed, read_chunk_file, write_chunk_file
+from repro.core.swap import AsyncSwapper, DiskStore
+
+
+class ResidencyEngine:
+    """Restore planning + chunk assembly + compress/AoT swap-out."""
+
+    def __init__(self, exe: ModelExecutor, ctxs: ContextStore,
+                 store: DiskStore, swapper: AsyncSwapper,
+                 queue: LCTRUQueue, mem: MemoryManager, cfg):
+        self.exe = exe
+        self.ctxs = ctxs
+        self.store = store
+        self.swapper = swapper
+        self.queue = queue
+        self.mem = mem
+        self.cfg = cfg
+        self.profile = PipelineProfile()
+        self.profiled = False
+        self.epoch = 0                      # bumped on any eviction
+
+    # ------------------------------------------------------------------ #
+    # switch-in: restore every chunk to memory (Load primitive)
+    # ------------------------------------------------------------------ #
+    def switch_in(self, ctx: Context):
+        """-> (cache, switch_seconds).  Missing-chunk restore (reclaim +
+        I/O + recompute) is the timed QoS path; resident-chunk assembly
+        into the bf16 working cache is not (see LLMService.callLLM)."""
+        exe = self.exe
+        cache = exe.fresh_cache(ctx.n_tokens)
+        if ctx.n_tokens == 0:
+            return cache, 0.0
+        if not self.cfg.chunked:
+            return self._restore_whole_timed(ctx, cache)
+
+        # ---- assembly of resident chunks (inference-side cost) -------- #
+        by_bits: Dict[int, List[int]] = {}
+        for i, m in sorted(ctx.chunks.items()):
+            if m.in_memory:
+                by_bits.setdefault(m.bits, []).append(i)
+                self.queue.touch((ctx.cid, i), m.bits)
+                m.last_access = time.time()
+        for bits, idxs in by_bits.items():
+            blocks = {name: jnp.concatenate(
+                [self._payload_blocks(ctx.payload[i])[name] for i in idxs])
+                for name in exe.codec.leaves}
+            pos = exe.chunk_positions(idxs)
+            pos_b = exe.bucket_pad(pos, exe.pad_slot)
+            if len(pos_b) != len(pos):
+                pad = len(pos_b) - len(pos)
+                blocks = {k: jnp.concatenate(
+                    [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+                    for k, v in blocks.items()}
+            cache = exe.scatter_fn(cache, jnp.asarray(pos_b), blocks)
+        jax.block_until_ready(cache[exe.codec.leaves[0]])
+
+        # ---- timed: reclaim + restore of missing chunks ---------------- #
+        t0 = time.perf_counter()
+        missing = sorted(i for i, m in ctx.chunks.items() if not m.in_memory)
+        need = sum(ctx.chunks[i].nbytes for i in missing)
+        self.mem.reclaim(need, self.evict, locked={ctx.cid})
+        if missing:
+            re_idx, io_idx = self._plan_restore(ctx, missing)
+            cache = self._restore_chunks(ctx, cache, re_idx, io_idx)
+            jax.block_until_ready(cache[exe.codec.leaves[0]])
+        return cache, time.perf_counter() - t0
+
+    def _plan_restore(self, ctx, missing: List[int]
+                      ) -> Tuple[List[int], List[int]]:
+        if not (self.cfg.use_pipeline and self.exe.recomputable):
+            return [], missing
+        plan_in = [(i, ctx.chunks[i].nbytes, True) for i in missing]
+        if self.profiled:
+            re_idx, io_idx, _ = plan_split(plan_in, self.profile, True)
+        else:   # unprofiled fallback: split heaviest half to recompute
+            order = sorted(missing, key=lambda i: -ctx.chunks[i].nbytes)
+            re_idx = order[:len(order) // 2]
+            io_idx = [i for i in missing if i not in set(re_idx)]
+        return sorted(re_idx), sorted(io_idx)
+
+    def _restore_chunks(self, ctx: Context, cache, re_idx: List[int],
+                        io_idx: List[int]):
+        """Fig. 8 restore.  dense + recompute-set: per-layer pipelined scan;
+        otherwise: async whole-chunk reads (+ recompute second phase)."""
+        exe = self.exe
+        use_pipe = (bool(re_idx) and exe.model.cfg.family == "dense")
+        if use_pipe:
+            nio_b = next(x for x in exe.io_buckets
+                         if x >= max(len(io_idx), 1))
+            pad_chunks = nio_b - len(io_idx)
+            io_pos_b = np.concatenate(
+                [exe.chunk_positions(io_idx),
+                 np.full(pad_chunks * exe.cs, exe.pad_slot, np.int32)])
+            paths = [self.store._path((ctx.cid, i)) for i in io_idx]
+            feed = LayerFeed(paths, exe.codec.leaves, exe.n_layers,
+                             exe.cs, exe.leaf_dims, pad_chunks=pad_chunks,
+                             pool=self.swapper.pool)
+            miss_pos = exe.chunk_positions(re_idx)
+            miss_b = exe.bucket_pad(miss_pos, exe.pad_slot)
+            toks_b = exe.bucket_pad(ctx.tokens[miss_pos], 0)
+            cache = exe.run_pipelined(feed, toks_b, miss_b, io_pos_b,
+                                      cache, ctx.n_tokens)
+            jax.block_until_ready(cache[exe.codec.leaves[0]])
+            feed.close()
+            for i in io_idx:
+                self._mark_loaded(ctx, i, payload=None)
+        else:
+            # async whole-chunk reads, insert as they land
+            futs = {i: self.swapper.pool.submit(
+                read_chunk_file, self.store._path((ctx.cid, i)))
+                for i in io_idx}
+            for i in io_idx:
+                cc = futs[i].result()
+                cache = exe.insert_fn(cache, jnp.int32(i * exe.cs),
+                                      self._payload_blocks(cc))
+                self._mark_loaded(ctx, i, payload=cc)
+            if re_idx:   # second phase (exact: I/O chunks now resident)
+                miss_pos = exe.chunk_positions(re_idx)
+                miss_b = exe.bucket_pad(miss_pos, exe.pad_slot)
+                toks_b = exe.bucket_pad(ctx.tokens[miss_pos], 0)
+                cache, _, _ = exe.extend_nod_fn(
+                    exe.params, jnp.asarray(toks_b)[None],
+                    jnp.asarray(miss_b), cache, jnp.int32(ctx.n_tokens))
+
+        # recomputed chunks: re-encode payload at their assigned level
+        for i in re_idx:
+            m = ctx.chunks[i]
+            ctx.payload[i] = self._make_payload(cache, i, m.bits)
+            m.in_memory, m.dirty = True, False    # already on disk
+            self.mem.register((ctx.cid, i), m.nbytes, m.bits)
+        return cache
+
+    def _mark_loaded(self, ctx, i: int, payload):
+        if payload is None:
+            payload = read_chunk_file(self.store._path((ctx.cid, i)))
+        ctx.payload[i] = payload
+        m = ctx.chunks[i]
+        m.in_memory, m.dirty = True, False
+        self.mem.register((ctx.cid, i), m.nbytes, m.bits)
+
+    # -- whole-context policies (swap / lmk) ----------------------------- #
+    def _restore_whole_timed(self, ctx: Context, cache):
+        exe = self.exe
+        t_switch = 0.0
+        if ctx.whole is not None:
+            pass                                       # resident
+        elif self.cfg.use_disk and self.store.nbytes((ctx.cid, -1)):
+            t0 = time.perf_counter()
+            self.mem.reclaim(self.store.nbytes((ctx.cid, -1)) or 0,
+                             self.evict, locked={ctx.cid})
+            ctx.whole = self.swapper.read((ctx.cid, -1))
+            t_switch = time.perf_counter() - t0
+            ctx.whole_tokens = ctx.n_tokens
+            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
+            self.queue.touch((ctx.cid, -1), 16)
+        else:
+            # LMK: killed — recompute the whole context from its text
+            t0 = time.perf_counter()
+            self.mem.reclaim(0, self.evict, locked={ctx.cid})
+            pos = np.arange(ctx.n_tokens, dtype=np.int32)
+            pos_b = exe.bucket_pad(pos, exe.pad_slot)
+            toks_b = exe.bucket_pad(ctx.tokens[:ctx.n_tokens], 0)
+            cache, _, dens = exe.extend_fn(
+                exe.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
+                exe.setpos_fn(cache, jnp.int32(0)), jnp.int32(ctx.n_tokens))
+            jax.block_until_ready(cache[exe.codec.leaves[0]])
+            t_switch = time.perf_counter() - t0
+            self.ctxs.acc_density(ctx, np.asarray(dens[0], np.float64),
+                                  ctx.n_tokens)
+            ctx.whole = self._extract_whole(cache, ctx.n_tokens)
+            ctx.whole_tokens = ctx.n_tokens
+            ctx.alive = True
+            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
+            return (exe.setpos_fn(cache, jnp.int32(ctx.n_tokens)), t_switch)
+        blocks = {k: jnp.asarray(v) for k, v in ctx.whole.items()}
+        cache = exe.insert_fn(cache, jnp.int32(0), blocks)
+        self.queue.touch((ctx.cid, -1), 16)
+        return exe.setpos_fn(cache, jnp.int32(ctx.n_tokens)), t_switch
+
+    def _extract_whole(self, cache, n_tokens: int) -> Dict[str, np.ndarray]:
+        hi = self.exe.bucket_len(n_tokens)
+        return {k: np.asarray(v, np.float16)
+                for k, v in self.exe.codec.extract(cache, 0, hi).items()}
+
+    def _whole_bytes(self, ctx) -> int:
+        return sum(v.nbytes for v in (ctx.whole or {}).values())
+
+    # -- payload codecs ------------------------------------------------- #
+    def _payload_blocks(self, cc: CompressedChunk) -> Dict[str, jax.Array]:
+        if cc.bits == 16:
+            return {k: jnp.asarray(p).astype(jnp.bfloat16)
+                    for k, (p, _) in cc.data.items()}
+        return self.exe.codec.decompress(cc)
+
+    def _make_payload(self, cache, i: int, bits: int) -> CompressedChunk:
+        cs = self.exe.cs
+        lo, hi = i * cs, (i + 1) * cs
+        if bits == 16:
+            blocks = self.exe.codec.extract(cache, lo, hi)
+            return CompressedChunk(
+                bits=16, n_tokens=cs,
+                data={k: (np.asarray(v, np.float16), np.zeros(0, np.float32))
+                      for k, v in blocks.items()},
+                shapes={k: tuple(v.shape) for k, v in blocks.items()})
+        return self.exe.codec.compress(cache, lo, hi, bits)
+
+    # ------------------------------------------------------------------ #
+    # compress + AoT swap-out (Reclaim is then free)
+    # ------------------------------------------------------------------ #
+    def compress_and_swap_out(self, ctx: Context, cache):
+        cfg = self.cfg
+        if not cfg.chunked:
+            ctx.whole = self._extract_whole(cache, ctx.n_tokens)
+            ctx.whole_tokens = ctx.n_tokens
+            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
+            return
+
+        cs = self.exe.cs
+        n_chunks = math.ceil(ctx.n_tokens / cs)
+        if cfg.compression == "tolerance":
+            D = comp.chunk_density(ctx.density_sum, ctx.density_cnt,
+                                   ctx.n_tokens, cs)
+            bits = comp.plan_buckets(D, cfg.ratio_global, cfg.levels)
+        elif cfg.compression == "static8":
+            D = np.zeros(n_chunks)
+            bits = np.full(n_chunks, 8, np.int64)
+        else:
+            D = np.zeros(n_chunks)
+            bits = np.full(n_chunks, 16, np.int64)
+
+        for i in range(n_chunks):
+            m = ctx.chunks.get(i)
+            if m is None:
+                m = ChunkMeta(idx=i)
+                ctx.chunks[i] = m
+            want = int(bits[i])
+            m.density = float(D[i])
+            covered = min(ctx.n_tokens - i * cs, cs)
+            if (m.dirty or want != m.bits or i not in ctx.payload
+                    or covered != m.n_covered):
+                cc = self._make_payload(cache, i, want)
+                ctx.payload[i] = cc
+                m.bits, m.nbytes, m.n_covered = want, cc.nbytes, covered
+                m.dirty, m.in_memory, m.on_disk = True, True, False
+            self.mem.register((ctx.cid, i), m.nbytes, m.bits)
+            m.last_access = time.time()
+
+        if cfg.use_aot and cfg.use_disk:
+            self.flush_dirty(ctx)
+
+    def flush_dirty(self, ctx: Context) -> int:
+        """AoT swap-out (§3.4): asynchronously write every dirty chunk so a
+        later Reclaim is free.  Also the scheduler's prediction hook: when
+        the router predicts a context switch, the outgoing contexts get
+        flushed ahead of the memory pressure.  Returns chunks submitted."""
+        n = 0
+        for i, m in ctx.chunks.items():
+            if m.dirty and i in ctx.payload:
+                self._write_chunk_async(ctx.cid, i, ctx.payload[i])
+                m.dirty, m.on_disk = False, True
+                n += 1
+        return n
+
+    def prepare_switch(self, predicted_cid: int) -> int:
+        """Next-context prediction hint (scheduler -> §3.4 AoT swap-out):
+        protect the predicted context's resident chunks in the LCTRU order
+        and flush dirty chunks of every OTHER context ahead of time.
+        Returns the number of chunks flushed."""
+        pred = self.ctxs.contexts.get(predicted_cid)
+        if pred is not None:
+            for i, m in pred.chunks.items():
+                if m.in_memory:
+                    self.queue.touch((pred.cid, i), m.bits)
+            if pred.whole is not None:
+                self.queue.touch((pred.cid, -1), 16)
+        if not (self.cfg.use_disk and self.cfg.chunked):
+            return 0
+        flushed = 0
+        for ctx in self.ctxs.contexts.values():
+            if ctx.cid != predicted_cid:
+                flushed += self.flush_dirty(ctx)
+        return flushed
+
+    def _write_chunk_async(self, cid: int, idx: int, cc: CompressedChunk):
+        key = (cid, idx)
+        path = self.store._path(key)
+
+        def work():
+            n = write_chunk_file(path, cc, self.exe.n_layers)
+            with self.store._lock:
+                self.store._bytes[key] = n
+        self.swapper.submit(key, work)
+
+    # ------------------------------------------------------------------ #
+    # eviction (Reclaim primitive)
+    # ------------------------------------------------------------------ #
+    def evict(self, key):
+        cid, idx = key
+        self.epoch += 1
+        ctx = self.ctxs.contexts.get(cid)
+        if ctx is None:
+            return
+        if idx == -1:
+            if self.cfg.use_disk and ctx.whole is not None:
+                self.store.write((cid, -1), ctx.whole)   # sync: paper's
+            ctx.whole = None                             # reclaim-time cost
+            ctx.alive = False
+            return
+        m = ctx.chunks.get(idx)
+        if m is None:
+            return
+        if m.dirty:                         # no-AoT policies pay here (sync)
+            n = write_chunk_file(self.store._path(key), ctx.payload[idx],
+                                 self.exe.n_layers)
+            with self.store._lock:
+                self.store._bytes[key] = n
+            m.dirty = False
+        m.on_disk, m.in_memory = True, False
+        ctx.payload.pop(idx, None)
+
+    # ------------------------------------------------------------------ #
+    def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
+        """Paper §3.3.i: one-shot installation-time profiling of T_re/T_IO."""
+        exe = self.exe
+        if not exe.recomputable:
+            return
+        toks = np.ones(exe.n_slots, np.int32)
+        cache = exe.fresh_cache(0)
+        xs, ts = [], []
+        for x in n_points:
+            M = x * exe.cs
+            pos_b = exe.bucket_pad(np.arange(M, dtype=np.int32),
+                                   exe.pad_slot)
+            toks_b = exe.bucket_pad(toks[:M], 0)
+            args = (exe.params, jnp.asarray(toks_b)[None],
+                    jnp.asarray(pos_b), cache, jnp.int32(M))
+            out = exe.extend_nod_fn(*args)               # compile
+            jax.block_until_ready(out[0][exe.codec.leaves[0]])
+            t0 = time.perf_counter()
+            out = exe.extend_nod_fn(*args)
+            jax.block_until_ready(out[0][exe.codec.leaves[0]])
+            ts.append(time.perf_counter() - t0)
+            xs.append(x)
+        self.profile.re_base, self.profile.re_per_chunk = fit_linear(xs, ts)
+
+        cc = self._make_payload(exe.work_cache, 0, 8)
+        ios_x, ios_t = [], []
+        for n in (1, 2, 4):
+            paths = [self.store._path((-2, f"probe{j}")) for j in range(n)]
+            for p in paths:
+                write_chunk_file(p, cc, exe.n_layers)
+            t0 = time.perf_counter()
+            for p in paths:
+                read_chunk_file(p)
+            ios_t.append(time.perf_counter() - t0)
+            ios_x.append(n * cc.nbytes)
+            for p in paths:
+                os.remove(p)
+        self.profile.io_base, self.profile.io_per_byte = \
+            fit_linear(ios_x, ios_t)
+        self.profiled = True

@@ -1,0 +1,258 @@
+"""Multi-app scheduler front-end for the LLM service (paper §2-§3).
+
+Layer 4 of the four-layer design (DESIGN.md §1, §4): the paper's LLMaaS
+premise is ONE shared model serving MANY apps, so something above the
+service must (a) admit requests from concurrent apps, (b) order them by
+user-perceived urgency (foreground interactions ahead of background
+agents), and (c) exploit the trace history to predict which context
+comes next — the §3.4 ahead-of-time swap-out hint.
+
+``ServiceRouter`` owns per-app sessions and an admission priority
+queue.  The underlying model execution stays serial (the paper's
+working-set lock: one active context at a time), so the router
+serializes all service access under one lock; with ``start=True`` a
+dispatcher thread drains the queue so app threads only enqueue, with
+``start=False`` the queue drains inline (deterministic — used by the
+benchmarks and tests).
+
+``NextContextPredictor`` is a first-order transition table over the
+observed context-switch history — the same process that generates the
+synthetic traces (trace/synth.py markov pattern), so it is the right
+minimal predictor.  After every call the router asks it for the likely
+next context and passes the answer to ``ResidencyEngine.prepare_switch``
+which protects that context's chunks and AoT-flushes everyone else's.
+"""
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from collections import Counter, defaultdict
+from concurrent.futures import Future
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+FOREGROUND = 0
+BACKGROUND = 1
+_PRIO_NAMES = {FOREGROUND: "foreground", BACKGROUND: "background"}
+_PRIO_BY_NAME = {"foreground": FOREGROUND, "fg": FOREGROUND,
+                 "background": BACKGROUND, "bg": BACKGROUND}
+
+
+def parse_priority(p) -> int:
+    if isinstance(p, str):
+        return _PRIO_BY_NAME[p.lower()]
+    assert p in (FOREGROUND, BACKGROUND), p
+    return int(p)
+
+
+class NextContextPredictor:
+    """First-order Markov predictor over the context-switch history."""
+
+    def __init__(self):
+        self.trans: Dict[int, Counter] = defaultdict(Counter)
+        self.last: Optional[int] = None
+
+    def observe(self, cid: int):
+        if self.last is not None:
+            self.trans[self.last][cid] += 1
+        self.last = cid
+
+    def predict(self, cid: Optional[int] = None) -> Optional[int]:
+        """Most likely successor of ``cid`` (default: the latest ctx)."""
+        cid = self.last if cid is None else cid
+        counts = self.trans.get(cid)
+        if not counts:
+            return None
+        return counts.most_common(1)[0][0]
+
+
+class AppSession:
+    """Per-app handle: all service access goes through the router."""
+
+    def __init__(self, router: "ServiceRouter", name: str, priority: int):
+        self.router = router
+        self.name = name
+        self.priority = priority
+
+    def new_ctx(self, system_prompt=None):
+        return self.router.new_ctx(self, system_prompt=system_prompt)
+
+    def del_ctx(self, stub):
+        return self.router.del_ctx(self, stub)
+
+    def submit(self, stub, prompt, max_new_tokens: int = 16) -> Future:
+        return self.router.submit(self, stub, prompt, max_new_tokens)
+
+    def call(self, stub, prompt, max_new_tokens: int = 16):
+        """Synchronous convenience: admit + wait for completion."""
+        fut = self.submit(stub, prompt, max_new_tokens)
+        if not self.router.started:
+            self.router.drain()
+        return fut.result()
+
+
+class ServiceRouter:
+    """Admission queue + per-app sessions + next-context prediction."""
+
+    def __init__(self, svc, predict: bool = True, start: bool = False):
+        self.svc = svc
+        self.predictor = NextContextPredictor() if predict else None
+        self.sessions: Dict[str, AppSession] = {}
+        self.call_records: List[Dict[str, Any]] = []
+        self.prefetch_hints = 0
+        self.aot_flushes = 0
+        self._pred_next: Optional[int] = None
+        self._pred_hits = 0
+        self._pred_total = 0
+
+        self._cv = threading.Condition()
+        self._queue: List[Tuple[int, int, dict]] = []    # (prio, seq, job)
+        self._seq = 0
+        self._inflight = 0
+        self._stop = False
+        self._svc_lock = threading.RLock()   # serializes ALL service access
+        self.started = start
+        self._worker = None
+        if start:
+            self._worker = threading.Thread(
+                target=self._loop, name="llms-router", daemon=True)
+            self._worker.start()
+
+    # -- app/session management ---------------------------------------- #
+    def register_app(self, name: str, priority="foreground") -> AppSession:
+        sess = AppSession(self, name, parse_priority(priority))
+        self.sessions[name] = sess
+        return sess
+
+    def new_ctx(self, session: AppSession, system_prompt=None):
+        with self._svc_lock:
+            return self.svc.newLLMCtx(system_prompt=system_prompt)
+
+    def del_ctx(self, session: AppSession, stub):
+        with self._svc_lock:
+            return self.svc.delLLMCtx(stub)
+
+    # -- admission ------------------------------------------------------ #
+    def submit(self, session: AppSession, stub, prompt,
+               max_new_tokens: int = 16) -> Future:
+        fut: Future = Future()
+        job = {"session": session, "stub": stub, "prompt": prompt,
+               "max_new": max_new_tokens, "future": fut,
+               "t_enqueue": time.perf_counter()}
+        with self._cv:
+            if self._stop:
+                raise RuntimeError("router is shut down")
+            heapq.heappush(self._queue,
+                           (session.priority, self._seq, job))
+            self._seq += 1
+            self._cv.notify()
+        return fut
+
+    # -- dispatch -------------------------------------------------------- #
+    def _loop(self):
+        while True:
+            with self._cv:
+                while not self._queue and not self._stop:
+                    self._cv.wait()
+                if self._stop and not self._queue:
+                    return
+                _, _, job = heapq.heappop(self._queue)
+                self._inflight += 1
+            try:
+                self._execute(job)
+            finally:
+                with self._cv:
+                    self._inflight -= 1
+                    self._cv.notify_all()
+
+    def _execute(self, job):
+        fut = job["future"]
+        if not fut.set_running_or_notify_cancel():
+            return
+        sess: AppSession = job["session"]
+        cid = job["stub"].ctx_id
+        t_start = time.perf_counter()
+        try:
+            with self._svc_lock:
+                if self._pred_next is not None:
+                    self._pred_total += 1
+                    self._pred_hits += self._pred_next == cid
+                result = self.svc.callLLM(job["stub"], job["prompt"],
+                                          max_new_tokens=job["max_new"])
+                # capture under the lock: another session's call must not
+                # slip a record in between
+                rec = self.svc.records[-1] if self.svc.records else {}
+                self._after_call(cid)
+        except Exception as e:              # report to the submitting app
+            fut.set_exception(e)
+            return
+        except BaseException as e:          # KeyboardInterrupt/SystemExit:
+            fut.set_exception(e)            # fail the job AND abort dispatch
+            raise
+        t_end = time.perf_counter()
+        self.call_records.append({
+            "app": sess.name, "priority": sess.priority, "ctx": cid,
+            "wait_s": t_start - job["t_enqueue"],
+            "service_s": t_end - t_start,
+            "switch_s": rec.get("switch_s", 0.0),
+        })
+        fut.set_result(result)
+
+    def _after_call(self, cid: int):
+        """Feed the trace history into the §3.4 AoT swap-out hint."""
+        if self.predictor is None:
+            return
+        self.predictor.observe(cid)
+        pred = self.predictor.predict(cid)
+        self._pred_next = pred
+        if pred is not None:
+            self.prefetch_hints += 1
+            self.aot_flushes += self.svc.prepare_switch(pred)
+
+    def drain(self):
+        """Run (or wait for) every admitted job; returns when idle."""
+        if self.started:
+            with self._cv:
+                while self._queue or self._inflight:
+                    self._cv.wait()
+            return
+        while True:
+            with self._cv:
+                if not self._queue:
+                    return
+                _, _, job = heapq.heappop(self._queue)
+            self._execute(job)
+
+    def shutdown(self):
+        self.drain()
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        if self._worker is not None:
+            self._worker.join(timeout=10.0)
+
+    # -- reporting ------------------------------------------------------- #
+    def stats(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "prefetch_hints": self.prefetch_hints,
+            "aot_flushes": self.aot_flushes,
+            "pred_hits": self._pred_hits,
+            "pred_total": self._pred_total,
+        }
+        for prio, name in _PRIO_NAMES.items():
+            rs = [r for r in self.call_records if r["priority"] == prio]
+            if not rs:
+                continue
+            waits = [r["wait_s"] for r in rs]
+            servs = [r["service_s"] for r in rs]
+            lats = [w + s for w, s in zip(waits, servs)]
+            out[name] = {
+                "calls": len(rs),
+                "wait_mean_s": float(np.mean(waits)),
+                "service_mean_s": float(np.mean(servs)),
+                "latency_mean_s": float(np.mean(lats)),
+                "latency_p99_s": float(np.percentile(lats, 99)),
+            }
+        return out

@@ -1,50 +1,32 @@
 """LLMService — the LLMaaS system service (paper Table 1, §3).
 
-Implements the full LLMS design plus every baseline the paper compares
-against, as POLICIES of one context manager so the benchmarks measure
-like-for-like:
-
-  policy="llms"        chunked + tolerance-aware compression (8/4/2 @ 50%)
-                       + swapping-recompute pipeline + LCTRU/AoT lifecycle
-  policy="vllm_sq"     chunked swapping + static INT8 (VLLM-SQ baseline)
-  policy="vllm_s"      chunked swapping, uncompressed (VLLM-S baseline)
-  policy="swap"        whole-context swapping (Swapping baseline)
-  policy="lmk"         low-memory-killer: contexts are killed under
-                       pressure and recomputed from text on return
-  ablations:           "llms_nocomp" / "llms_nopipe" / "llms_nolife"
-
-The measured *context switching latency* (paper Fig. 9) is the time of
-``_switch_in`` — making the context memory-resident again — exactly the
-paper's QoS metric.  Token generation afterwards is ordinary inference.
-
-Memory model (paper Fig. 4): persistent context state is the COMPRESSED
-chunk store (counted against the budget); the bf16 working cache exists
-only for the active context (the paper's working-set lock) and is not
-charged.  "Uncompressed" chunks are fp16.
+Thin facade over the four-layer serving stack (DESIGN.md §1):
+``executor.ModelExecutor`` (jitted entry points + bucket/padding),
+``context_store.ContextStore`` (persistent contexts, Fig. 4),
+``residency.ResidencyEngine`` (switch-in/out, compression, AoT,
+eviction), with ``scheduler.ServiceRouter`` as the multi-app front-end
+on top.  The paper's full design plus every baseline it compares
+against (VLLM-S/SQ, whole-context Swapping, LMK, and the three
+ablations) are POLICIES of this one facade so benchmarks measure
+like-for-like.  The measured *context switching latency* (Fig. 9) is
+the time of ``ResidencyEngine.switch_in`` — the paper's QoS metric.
 """
 from __future__ import annotations
 
-import functools
-import math
-import os
 import tempfile
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as comp
-from repro.core.chunks import ChunkCodec, ChunkMeta, CompressedChunk
+from repro.core.context_store import Context, ContextStore, LLMCtxStub  # noqa: F401 (re-export)
+from repro.core.executor import ModelExecutor
 from repro.core.lifecycle import LCTRUQueue, MemoryManager
-from repro.core.pipeline import PipelineProfile, fit_linear, plan_split
-from repro.core.restore import LayerFeed, read_chunk_file, write_chunk_file
+from repro.core.residency import ResidencyEngine
 from repro.core.swap import AsyncSwapper, DiskStore
 from repro.models.api import ModelBase
-
-Array = jax.Array
 
 POLICIES = ("llms", "llms_nocomp", "llms_nopipe", "llms_nolife",
             "vllm_s", "vllm_sq", "swap", "lmk")
@@ -74,7 +56,6 @@ class LLMSConfig:
     swap_dir: Optional[str] = None
     window: int = 0
     n_sinks: int = 0
-
     compression: str = ""
     use_pipeline: bool = False
     use_lctru: bool = False
@@ -88,179 +69,74 @@ class LLMSConfig:
          self.chunked, self.use_disk) = _POLICY_FLAGS[self.policy]
 
 
-@dataclass
-class LLMCtxStub:
-    """Table 1: the opaque handle apps hold."""
-    ctx_id: int
-
-
-@dataclass
-class Context:
-    cid: int
-    tokens: np.ndarray                      # resident text (paper Fig. 4)
-    n_tokens: int = 0
-    chunks: Dict[int, ChunkMeta] = field(default_factory=dict)
-    payload: Dict[int, CompressedChunk] = field(default_factory=dict)
-    whole: Optional[Dict[str, np.ndarray]] = None   # non-chunked policies
-    whole_tokens: int = 0
-    alive: bool = True                      # lmk: killed => False
-    density_sum: Optional[np.ndarray] = None
-    density_cnt: Optional[np.ndarray] = None
-
-
-_JIT_CACHE: Dict[Tuple, Dict[str, Any]] = {}
-_ACTIVE_FEED = None
-
-
-def _feed_fetch(layer):
-    return _ACTIVE_FEED.fetch(layer)
-
-
-def _pow2_buckets(lo: int, hi: int) -> List[int]:
-    out, b = [], lo
-    while b < hi:
-        out.append(b)
-        b *= 2
-    out.append(hi)
-    return out
-
-
 class LLMService:
     """One shared model + per-app persistent contexts (LLMaaS)."""
 
     def __init__(self, model: ModelBase, params, cfg: LLMSConfig):
-        self.model = model
-        self.params = params
-        self.cfg = cfg
-        mc = model.cfg
-        self.cs = cfg.chunk_tokens
-        self.n_slots = math.ceil(cfg.max_ctx_len / self.cs) * self.cs
-        self.codec = ChunkCodec(mc.family, self.cs)
+        self.model, self.params, self.cfg = model, params, cfg
+        self.exe = ModelExecutor(model, params, cfg)
         root = cfg.swap_dir or tempfile.mkdtemp(prefix="llms_swap_")
         self.store = DiskStore(root)
         self.swapper = AsyncSwapper(self.store)
         self.queue = LCTRUQueue(lru_only=not cfg.use_lctru)
         self.mem = MemoryManager(cfg.memory_budget, self.queue)
-        self.profile = PipelineProfile()
-        self._profiled = False
-        self._recomputable = mc.family in ("dense", "mla_moe")
-        self._pipelined_fn = None
-        self._current_feed = None
-
-        self.contexts: Dict[int, Context] = {}
-        self._next_cid = 0
+        self.ctxs = ContextStore(self.mem, self.store, self.exe.s_work)
+        self.res = ResidencyEngine(self.exe, self.ctxs, self.store,
+                                   self.swapper, self.queue, self.mem, cfg)
         self.records: List[Dict[str, Any]] = []
-        # working-cache reuse: (cid, cache, epoch) of the last active ctx
+        # (cid, cache, epoch) of the last active ctx: working-cache reuse
         self._active: Optional[Tuple[int, Any, int]] = None
-        self._epoch = 0                     # bumped on any eviction
 
-        # working cache: one active context at a time (paper's WS lock)
-        self._tok_buckets = _pow2_buckets(self.cs, self.n_slots)
-        self._io_buckets = _pow2_buckets(1, max(self.n_slots // self.cs, 1))
-        self.s_work = self.n_slots + self._tok_buckets[-1]
-        self._pad_slot = self.s_work - 1
-        self.work_cache = model.init_cache(1, self.s_work)
-        self._zero_cache = self.work_cache
+    @property
+    def contexts(self) -> Dict[int, Context]:
+        return self.ctxs.contexts
 
-        # jitted entry points are shared across service instances of the
-        # same (model, window) so benchmark sweeps don't recompile
-        ck = (id(model), cfg.window, cfg.n_sinks, mc.family, self.cs)
-        cached = _JIT_CACHE.get(ck)
-        if cached is None:
-            cw = dict(window=cfg.window, n_sinks=cfg.n_sinks)
-            cached = {
-                "extend": jax.jit(functools.partial(
-                    model.recompute, want_density=True, **cw)),
-                "extend_nod": jax.jit(functools.partial(
-                    model.recompute, want_density=False, **cw)),
-                "decode": jax.jit(functools.partial(
-                    model.decode_step, want_density=True, **cw)),
-                "logits": jax.jit(
-                    lambda p, h: (h @ model.head_weight(p)
-                                  ).astype(jnp.float32)),
-                "insert": jax.jit(self.codec.insert),
-                "scatter": jax.jit(self.codec.scatter),
-                "setpos": jax.jit(lambda c, p: {**c, "pos": p}),
-            }
-            _JIT_CACHE[ck] = cached
-        self._jit_extend = cached["extend"]
-        self._jit_extend_nod = cached["extend_nod"]
-        self._jit_decode = cached["decode"]
-        self._jit_logits = cached["logits"]
-        self._jit_insert = cached["insert"]
-        self._jit_scatter = cached["scatter"]
-        self._jit_setpos = cached["setpos"]
+    @property
+    def n_slots(self) -> int:
+        return self.exe.n_slots
 
-        shapes = {k: v.shape for k, v in self.work_cache.items()
-                  if k in self.codec.leaves}
-        self._leaf_shapes = shapes
-        self.n_layers = next(iter(shapes.values()))[0]
-        mcfg = model.cfg
-        if "k" in self.codec.leaves:
-            self.leaf_dims = {"k": (mcfg.n_kv_heads, mcfg.head_dim),
-                              "v": (mcfg.n_kv_heads, mcfg.head_dim)}
-        else:
-            self.leaf_dims = {"ckv": (mcfg.mla.kv_lora_rank,),
-                              "kpe": (mcfg.mla.qk_rope_head_dim,)}
-
-    # ------------------------------------------------------------------ #
-    # Table-1 API
-    # ------------------------------------------------------------------ #
     def newLLMCtx(self, system_prompt: Optional[Sequence[int]] = None
                   ) -> LLMCtxStub:
-        cid = self._next_cid
-        self._next_cid += 1
-        self.contexts[cid] = Context(
-            cid=cid, tokens=np.zeros(self.s_work, np.int32),
-            density_sum=np.zeros(self.s_work, np.float64),
-            density_cnt=np.zeros(self.s_work, np.float64))
-        stub = LLMCtxStub(cid)
+        ctx = self.ctxs.create()
+        stub = LLMCtxStub(ctx.cid)
         if system_prompt is not None and len(system_prompt):
             self.callLLM(stub, system_prompt, max_new_tokens=0)
         return stub
 
     def delLLMCtx(self, stub: LLMCtxStub):
-        ctx = self.contexts.pop(stub.ctx_id, None)
-        if ctx is None:
-            return
-        for idx in list(ctx.chunks):
-            self.mem.unregister((ctx.cid, idx))
-            self.store.delete((ctx.cid, idx))
-        self.mem.unregister((ctx.cid, -1))
-        self.store.delete((ctx.cid, -1))
+        self.ctxs.delete(stub.ctx_id)
 
     def bindLLMService(self, app: Any = None) -> "LLMService":
         return self
 
     def callLLM(self, stub: LLMCtxStub, new_prompt: Sequence[int],
                 max_new_tokens: int = 16) -> Tuple[LLMCtxStub, List[int]]:
-        ctx = self.contexts[stub.ctx_id]
+        ctx = self.ctxs.get(stub.ctx_id)
         total_new = len(new_prompt) + max_new_tokens
-        assert total_new <= self.n_slots // 2, "request exceeds half window"
-        if ctx.n_tokens + total_new > self.n_slots:
-            self._condense(ctx, keep=self.n_slots // 2)
+        assert total_new <= self.exe.n_slots // 2, "exceeds half window"
+        if ctx.n_tokens + total_new > self.exe.n_slots:
+            self._condense(ctx, keep=self.exe.n_slots // 2)
 
-        # -- context switching (the measured QoS metric) ----------------- #
-        # Restoring MISSING state (I/O + recompute) is switching latency;
-        # assembling the bf16 working cache from RESIDENT compressed
-        # chunks stands in for the fused dequant a TPU attention kernel
-        # does per iteration (kernels/decode_qattn.py) and is charged to
-        # inference (paper: switching == making chunks memory-resident).
+        # context switching (the measured QoS metric): missing-state
+        # restore is timed; resident assembly is inference (DESIGN.md §2)
         t0 = time.perf_counter()
         reuse = (self._active is not None and self._active[0] == ctx.cid
-                 and self._active[2] == self._epoch)
+                 and self._active[2] == self.res.epoch)
         if reuse:
             cache = self._active[1]
             t_switch = time.perf_counter() - t0
             t_assemble = 0.0
         else:
-            cache, t_switch = self._switch_in_timed(ctx)
+            cache, t_switch = self.res.switch_in(ctx)
             t_assemble = time.perf_counter() - t0 - t_switch
 
-        # -- inference: extend with the new prompt, then decode ----------- #
+        # inference: extend with the new prompt, then decode
         t1 = time.perf_counter()
         prompt = np.asarray(new_prompt, np.int32)
-        cache, logits = self._extend(ctx, cache, prompt)
+        n0 = ctx.n_tokens
+        ctx.tokens[n0:n0 + len(prompt)] = prompt
+        cache, logits, dens = self.exe.extend(cache, prompt, n0)
+        self.ctxs.acc_density(ctx, dens, n0 + len(prompt))
         ctx.n_tokens += len(prompt)
         generated: List[int] = []
         if max_new_tokens > 0:
@@ -271,21 +147,18 @@ class LLMService:
                 ctx.n_tokens += 1
                 if step == max_new_tokens - 1:
                     break
-                out, mass = self._jit_decode(
-                    self.params, jnp.asarray([[tok]], jnp.int32), cache)
-                cache = out.cache
-                self._acc_density(ctx, np.asarray(mass[0], np.float64),
-                                  ctx.n_tokens)
-                tok = int(np.argmax(np.asarray(out.logits[0])))
+                cache, step_logits, mass = self.exe.decode(cache, tok)
+                self.ctxs.acc_density(ctx, mass, ctx.n_tokens)
+                tok = int(np.argmax(step_logits))
         t_infer = time.perf_counter() - t1
 
-        # -- compress / AoT swap-out / reclaim (paper §3.2 + §3.4) -------- #
+        # compress / AoT swap-out / reclaim (paper §3.2 + §3.4)
         t2 = time.perf_counter()
-        self._compress_and_swap_out(ctx, cache)
-        self.mem.reclaim(0, self._evict, locked=set())
+        self.res.compress_and_swap_out(ctx, cache)
+        self.mem.reclaim(0, self.res.evict, locked=set())
         t_out = time.perf_counter() - t2
 
-        self._active = (ctx.cid, cache, self._epoch)
+        self._active = (ctx.cid, cache, self.res.epoch)
         self.records.append({
             "ctx": ctx.cid, "switch_s": t_switch,
             "infer_s": t_infer + t_assemble, "assemble_s": t_assemble,
@@ -294,389 +167,24 @@ class LLMService:
         })
         return stub, generated
 
-    # ------------------------------------------------------------------ #
-    # switch-in: restore every chunk to memory (Load primitive)
-    # ------------------------------------------------------------------ #
-    def _switch_in_timed(self, ctx: Context):
-        """-> (cache, switch_seconds).  Missing-chunk restore (reclaim +
-        I/O + recompute) is the timed QoS path; resident-chunk assembly
-        into the bf16 working cache is not (see callLLM comment)."""
-        cache = self._jit_setpos(self._zero_cache, jnp.int32(ctx.n_tokens))
-        if ctx.n_tokens == 0:
-            return cache, 0.0
-        if not self.cfg.chunked:
-            return self._restore_whole_timed(ctx, cache)
+    # scheduler hook (§3.4 prediction-driven AoT swap-out)
+    def prepare_switch(self, predicted_cid: int) -> int:
+        return self.res.prepare_switch(predicted_cid)
 
-        # ---- assembly of resident chunks (inference-side cost) -------- #
-        by_bits: Dict[int, List[int]] = {}
-        for i, m in sorted(ctx.chunks.items()):
-            if m.in_memory:
-                by_bits.setdefault(m.bits, []).append(i)
-                self.queue.touch((ctx.cid, i), m.bits)
-                m.last_access = time.time()
-        for bits, idxs in by_bits.items():
-            blocks = {name: jnp.concatenate(
-                [self._payload_blocks(ctx.payload[i])[name] for i in idxs])
-                for name in self.codec.leaves}
-            pos = self._chunk_positions(idxs)
-            pos_b = self._bucket_pad(pos, self._pad_slot)
-            if len(pos_b) != len(pos):
-                pad = len(pos_b) - len(pos)
-                blocks = {k: jnp.concatenate(
-                    [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
-                    for k, v in blocks.items()}
-            cache = self._jit_scatter(cache, jnp.asarray(pos_b), blocks)
-        jax.block_until_ready(cache[self.codec.leaves[0]])
-
-        # ---- timed: reclaim + restore of missing chunks ---------------- #
-        t0 = time.perf_counter()
-        missing = sorted(i for i, m in ctx.chunks.items() if not m.in_memory)
-        need = sum(ctx.chunks[i].nbytes for i in missing)
-        self.mem.reclaim(need, self._evict, locked={ctx.cid})
-        if missing:
-            re_idx, io_idx = self._plan_restore(ctx, missing)
-            cache = self._restore_chunks(ctx, cache, re_idx, io_idx)
-            jax.block_until_ready(cache[self.codec.leaves[0]])
-        return cache, time.perf_counter() - t0
-
-    def _plan_restore(self, ctx, missing: List[int]
-                      ) -> Tuple[List[int], List[int]]:
-        if not (self.cfg.use_pipeline and self._recomputable):
-            return [], missing
-        plan_in = [(i, ctx.chunks[i].nbytes, True) for i in missing]
-        if self._profiled:
-            re_idx, io_idx, _ = plan_split(plan_in, self.profile, True)
-        else:   # unprofiled fallback: split heaviest half to recompute
-            order = sorted(missing, key=lambda i: -ctx.chunks[i].nbytes)
-            re_idx = order[:len(order) // 2]
-            io_idx = [i for i in missing if i not in set(re_idx)]
-        return sorted(re_idx), sorted(io_idx)
-
-    def _restore_chunks(self, ctx: Context, cache, re_idx: List[int],
-                        io_idx: List[int]):
-        """Fig. 8 restore.  dense + recompute-set: per-layer pipelined scan;
-        otherwise: async whole-chunk reads (+ recompute second phase)."""
-        use_pipe = (bool(re_idx) and self.model.cfg.family == "dense")
-        if use_pipe:
-            nio_b = next(x for x in self._io_buckets
-                         if x >= max(len(io_idx), 1))
-            pad_chunks = nio_b - len(io_idx)
-            io_pos_b = np.concatenate(
-                [self._chunk_positions(io_idx),
-                 np.full(pad_chunks * self.cs, self._pad_slot, np.int32)])
-            paths = [self.store._path((ctx.cid, i)) for i in io_idx]
-            feed = LayerFeed(paths, self.codec.leaves, self.n_layers,
-                             self.cs, self.leaf_dims, pad_chunks=pad_chunks,
-                             pool=self.swapper.pool)
-            miss_pos = self._chunk_positions(re_idx)
-            miss_b = self._bucket_pad(miss_pos, self._pad_slot)
-            toks_b = self._bucket_pad(ctx.tokens[miss_pos], 0)
-            global _ACTIVE_FEED
-            _ACTIVE_FEED = feed
-            fn = self._get_pipelined_fn()
-            cache, _, _ = fn(self.params, jnp.asarray(toks_b)[None],
-                             jnp.asarray(miss_b), jnp.asarray(io_pos_b),
-                             cache, jnp.int32(ctx.n_tokens))
-            jax.block_until_ready(cache[self.codec.leaves[0]])
-            feed.close()
-            for i in io_idx:
-                self._mark_loaded(ctx, i, payload=None)
-        else:
-            # async whole-chunk reads, insert as they land
-            futs = {i: self.swapper.pool.submit(
-                read_chunk_file, self.store._path((ctx.cid, i)))
-                for i in io_idx}
-            for i in io_idx:
-                cc = futs[i].result()
-                cache = self._jit_insert(cache, jnp.int32(i * self.cs),
-                                         self._payload_blocks(cc))
-                self._mark_loaded(ctx, i, payload=cc)
-            if re_idx:   # second phase (exact: I/O chunks now resident)
-                miss_pos = self._chunk_positions(re_idx)
-                miss_b = self._bucket_pad(miss_pos, self._pad_slot)
-                toks_b = self._bucket_pad(ctx.tokens[miss_pos], 0)
-                cache, _, _ = self._jit_extend_nod(
-                    self.params, jnp.asarray(toks_b)[None],
-                    jnp.asarray(miss_b), cache, jnp.int32(ctx.n_tokens))
-
-        # recomputed chunks: re-encode payload at their assigned level
-        for i in re_idx:
-            m = ctx.chunks[i]
-            ctx.payload[i] = self._make_payload(cache, i, m.bits)
-            m.in_memory, m.dirty = True, False    # already on disk
-            self.mem.register((ctx.cid, i), m.nbytes, m.bits)
-        return cache
-
-    def _mark_loaded(self, ctx, i: int, payload):
-        if payload is None:
-            payload = read_chunk_file(self.store._path((ctx.cid, i)))
-        ctx.payload[i] = payload
-        m = ctx.chunks[i]
-        m.in_memory, m.dirty = True, False
-        self.mem.register((ctx.cid, i), m.nbytes, m.bits)
-
-    def _get_pipelined_fn(self):
-        ck = (id(self.model), self.cfg.window, self.cfg.n_sinks, "pipelined")
-        fn = _JIT_CACHE.get(ck)
-        if fn is None:
-            fn = jax.jit(
-                functools.partial(self.model.recompute_pipelined,
-                                  fetch=_feed_fetch,
-                                  window=self.cfg.window,
-                                  n_sinks=self.cfg.n_sinks))
-            _JIT_CACHE[ck] = fn
-        return fn
-
-    # -- whole-context policies (swap / lmk) ----------------------------- #
-    def _restore_whole_timed(self, ctx: Context, cache):
-        t_switch = 0.0
-        if ctx.whole is not None:
-            pass                                       # resident
-        elif self.cfg.use_disk and self.store.nbytes((ctx.cid, -1)):
-            t0 = time.perf_counter()
-            self.mem.reclaim(self.store.nbytes((ctx.cid, -1)) or 0,
-                             self._evict, locked={ctx.cid})
-            ctx.whole = self.swapper.read((ctx.cid, -1))
-            t_switch = time.perf_counter() - t0
-            ctx.whole_tokens = ctx.n_tokens
-            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
-            self.queue.touch((ctx.cid, -1), 16)
-        else:
-            # LMK: killed — recompute the whole context from its text
-            t0 = time.perf_counter()
-            self.mem.reclaim(0, self._evict, locked={ctx.cid})
-            pos = np.arange(ctx.n_tokens, dtype=np.int32)
-            pos_b = self._bucket_pad(pos, self._pad_slot)
-            toks_b = self._bucket_pad(ctx.tokens[:ctx.n_tokens], 0)
-            cache, _, dens = self._jit_extend(
-                self.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
-                self._jit_setpos(cache, jnp.int32(0)),
-                jnp.int32(ctx.n_tokens))
-            jax.block_until_ready(cache[self.codec.leaves[0]])
-            t_switch = time.perf_counter() - t0
-            self._acc_density(ctx, np.asarray(dens[0], np.float64),
-                              ctx.n_tokens)
-            ctx.whole = self._extract_whole(cache, ctx.n_tokens)
-            ctx.whole_tokens = ctx.n_tokens
-            ctx.alive = True
-            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
-            return (self._jit_setpos(cache, jnp.int32(ctx.n_tokens)),
-                    t_switch)
-        blocks = {k: jnp.asarray(v) for k, v in ctx.whole.items()}
-        cache = self._jit_insert(cache, jnp.int32(0), blocks)
-        self.queue.touch((ctx.cid, -1), 16)
-        return self._jit_setpos(cache, jnp.int32(ctx.n_tokens)), t_switch
-
-    def _extract_whole(self, cache, n_tokens: int) -> Dict[str, np.ndarray]:
-        hi = self._bucket_len(n_tokens)
-        return {k: np.asarray(v, np.float16)
-                for k, v in self.codec.extract(cache, 0, hi).items()}
-
-    def _bucket_len(self, n: int) -> int:
-        return next(x for x in self._tok_buckets if x >= n)
-
-    def _whole_bytes(self, ctx) -> int:
-        return sum(v.nbytes for v in (ctx.whole or {}).values())
-
-    # ------------------------------------------------------------------ #
-    # helpers
-    # ------------------------------------------------------------------ #
-    def _chunk_positions(self, idxs: Sequence[int]) -> np.ndarray:
-        pos = []
-        for i in idxs:
-            pos.extend(range(i * self.cs, (i + 1) * self.cs))
-        return np.asarray(pos, np.int32)
-
-    def _bucket_pad(self, arr: np.ndarray, fill) -> np.ndarray:
-        b = self._bucket_len(len(arr))
-        if b == len(arr):
-            return arr
-        return np.concatenate([arr, np.full(b - len(arr), fill, arr.dtype)])
-
-    def _payload_blocks(self, cc: CompressedChunk) -> Dict[str, Array]:
-        if cc.bits == 16:
-            return {k: jnp.asarray(p).astype(jnp.bfloat16)
-                    for k, (p, _) in cc.data.items()}
-        return self.codec.decompress(cc)
-
-    def _make_payload(self, cache, i: int, bits: int) -> CompressedChunk:
-        lo, hi = i * self.cs, (i + 1) * self.cs
-        if bits == 16:
-            blocks = self.codec.extract(cache, lo, hi)
-            return CompressedChunk(
-                bits=16, n_tokens=self.cs,
-                data={k: (np.asarray(v, np.float16), np.zeros(0, np.float32))
-                      for k, v in blocks.items()},
-                shapes={k: tuple(v.shape) for k, v in blocks.items()})
-        return self.codec.compress(cache, lo, hi, bits)
-
-    def _extend(self, ctx: Context, cache, prompt: np.ndarray):
-        n0 = ctx.n_tokens
-        M = len(prompt)
-        ctx.tokens[n0:n0 + M] = prompt
-        pos = np.arange(n0, n0 + M, dtype=np.int32)
-        pos_b = self._bucket_pad(pos, self._pad_slot)
-        toks_b = self._bucket_pad(prompt, 0)
-        cache, hidden, dens = self._jit_extend(
-            self.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
-            cache, jnp.int32(n0 + M))
-        self._acc_density(ctx, np.asarray(dens[0], np.float64), n0 + M)
-        logits = np.asarray(self._jit_logits(self.params,
-                                             hidden[:, M - 1]))[0]
-        cache = self._jit_setpos(cache, jnp.int32(n0 + M))
-        return cache, logits
-
-    def _acc_density(self, ctx, mass: np.ndarray, n_visible: int):
-        ctx.density_sum[:len(mass)] += mass
-        ctx.density_cnt[:n_visible] += 1
-
-    # ------------------------------------------------------------------ #
-    # compress + AoT swap-out (Reclaim is then free)
-    # ------------------------------------------------------------------ #
-    def _compress_and_swap_out(self, ctx: Context, cache):
-        cfg = self.cfg
-        if not cfg.chunked:
-            ctx.whole = self._extract_whole(cache, ctx.n_tokens)
-            ctx.whole_tokens = ctx.n_tokens
-            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
-            return
-
-        n_chunks = math.ceil(ctx.n_tokens / self.cs)
-        if cfg.compression == "tolerance":
-            D = comp.chunk_density(ctx.density_sum, ctx.density_cnt,
-                                   ctx.n_tokens, self.cs)
-            bits = comp.plan_buckets(D, cfg.ratio_global, cfg.levels)
-        elif cfg.compression == "static8":
-            D = np.zeros(n_chunks)
-            bits = np.full(n_chunks, 8, np.int64)
-        else:
-            D = np.zeros(n_chunks)
-            bits = np.full(n_chunks, 16, np.int64)
-
-        for i in range(n_chunks):
-            m = ctx.chunks.get(i)
-            if m is None:
-                m = ChunkMeta(idx=i)
-                ctx.chunks[i] = m
-            want = int(bits[i])
-            m.density = float(D[i])
-            if m.dirty or want != m.bits or i not in ctx.payload:
-                cc = self._make_payload(cache, i, want)
-                ctx.payload[i] = cc
-                m.bits, m.nbytes = want, cc.nbytes
-                m.dirty, m.in_memory, m.on_disk = True, True, False
-            self.mem.register((ctx.cid, i), m.nbytes, m.bits)
-            m.last_access = time.time()
-
-        if cfg.use_aot and cfg.use_disk:
-            for i, m in ctx.chunks.items():
-                if m.dirty:
-                    self._write_chunk_async(ctx.cid, i, ctx.payload[i])
-                    m.dirty, m.on_disk = False, True
-
-    def _write_chunk_async(self, cid: int, idx: int, cc: CompressedChunk):
-        key = (cid, idx)
-        path = self.store._path(key)
-
-        def work():
-            n = write_chunk_file(path, cc, self.n_layers)
-            with self.store._lock:
-                self.store._bytes[key] = n
-        self.swapper.submit(key, work)
-
-    # ------------------------------------------------------------------ #
-    # eviction (Reclaim primitive)
-    # ------------------------------------------------------------------ #
-    def _evict(self, key):
-        cid, idx = key
-        self._epoch += 1
-        ctx = self.contexts.get(cid)
-        if ctx is None:
-            return
-        if idx == -1:
-            if self.cfg.use_disk and ctx.whole is not None:
-                self.store.write((cid, -1), ctx.whole)   # sync: paper's
-            ctx.whole = None                             # reclaim-time cost
-            ctx.alive = False
-            return
-        m = ctx.chunks.get(idx)
-        if m is None:
-            return
-        if m.dirty:                         # no-AoT policies pay here (sync)
-            n = write_chunk_file(self.store._path(key), ctx.payload[idx],
-                                 self.n_layers)
-            with self.store._lock:
-                self.store._bytes[key] = n
-            m.dirty = False
-        m.on_disk, m.in_memory = True, False
-        ctx.payload.pop(idx, None)
-
-    # ------------------------------------------------------------------ #
     def _condense(self, ctx: Context, keep: int):
-        """Context overflow: keep the most recent ``keep`` tokens re-encoded
-        at positions [0, keep) (sliding-window reset, paper §4's streaming)."""
-        keep = max(self.cs, min((keep // self.cs) * self.cs,
-                                ((ctx.n_tokens) // self.cs) * self.cs))
-        tail = ctx.tokens[ctx.n_tokens - keep:ctx.n_tokens].copy()
-        for idx in list(ctx.chunks):
-            self.mem.unregister((ctx.cid, idx))
-            self.store.delete((ctx.cid, idx))
-        self.mem.unregister((ctx.cid, -1))
-        ctx.chunks.clear()
-        ctx.payload.clear()
-        ctx.whole = None
-        ctx.tokens[:] = 0
-        ctx.n_tokens = 0
-        ctx.density_sum[:] = 0
-        ctx.density_cnt[:] = 0
+        """Context overflow: re-encode the recent tail at [0, keep)."""
+        tail = self.ctxs.reset_for_condense(ctx, keep, self.exe.cs)
         self._active = None
-        cache = self._jit_setpos(self._zero_cache, jnp.int32(0))
-        cache, _ = self._extend(ctx, cache, tail)
-        ctx.n_tokens = keep
-        self._compress_and_swap_out(ctx, cache)
+        cache = self.exe.fresh_cache(0)
+        ctx.tokens[:len(tail)] = tail
+        cache, _, dens = self.exe.extend(cache, tail, 0)
+        self.ctxs.acc_density(ctx, dens, len(tail))
+        ctx.n_tokens = len(tail)
+        self.res.compress_and_swap_out(ctx, cache)
 
-    # ------------------------------------------------------------------ #
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
-        """Paper §3.3.i: one-shot installation-time profiling of T_re/T_IO."""
-        if not self._recomputable:
-            return
-        toks = np.ones(self.n_slots, np.int32)
-        cache = self._jit_setpos(self._zero_cache, jnp.int32(0))
-        xs, ts = [], []
-        for x in n_points:
-            M = x * self.cs
-            pos_b = self._bucket_pad(np.arange(M, dtype=np.int32),
-                                     self._pad_slot)
-            toks_b = self._bucket_pad(toks[:M], 0)
-            args = (self.params, jnp.asarray(toks_b)[None],
-                    jnp.asarray(pos_b), cache, jnp.int32(M))
-            out = self._jit_extend_nod(*args)            # compile
-            jax.block_until_ready(out[0][self.codec.leaves[0]])
-            t0 = time.perf_counter()
-            out = self._jit_extend_nod(*args)
-            jax.block_until_ready(out[0][self.codec.leaves[0]])
-            ts.append(time.perf_counter() - t0)
-            xs.append(x)
-        self.profile.re_base, self.profile.re_per_chunk = fit_linear(xs, ts)
+        self.res.profile_pipeline(n_points)
 
-        cc = self._make_payload(self.work_cache, 0, 8)
-        ios_x, ios_t = [], []
-        for n in (1, 2, 4):
-            paths = [self.store._path((-2, f"probe{j}")) for j in range(n)]
-            for p in paths:
-                write_chunk_file(p, cc, self.n_layers)
-            t0 = time.perf_counter()
-            for p in paths:
-                read_chunk_file(p)
-            ios_t.append(time.perf_counter() - t0)
-            ios_x.append(n * cc.nbytes)
-            for p in paths:
-                os.remove(p)
-        self.profile.io_base, self.profile.io_per_byte = \
-            fit_linear(ios_x, ios_t)
-        self._profiled = True
-
-    # ------------------------------------------------------------------ #
     def stats(self) -> Dict[str, float]:
         sw = [r["switch_s"] for r in self.records]
         return {

@@ -77,37 +77,46 @@ class AsyncSwapper:
         self._lock = threading.Lock()
 
     def submit(self, key: Key, fn, *args) -> Future:
-        """Track an arbitrary I/O job under ``key`` so flush() waits."""
+        """Track an arbitrary I/O job under ``key`` so flush() waits.
+
+        Same-key jobs are SERIALIZED (a later write must not be overtaken
+        by an earlier in-flight one) but never block the submitting
+        thread: the new job is chained onto the previous future via a
+        done-callback instead of ``prev.result()``, so AoT swap-out stays
+        asynchronous even under same-key write bursts (paper §3.4)."""
+        out: Future = Future()
         with self._lock:
             prev = self._pending.get(key)
-        if prev is not None:
-            prev.result()
-        fut = self.pool.submit(fn, *args)
-        with self._lock:
-            self._pending[key] = fut
+            self._pending[key] = out
+
+        def _start(_=None):
+            try:
+                inner = self.pool.submit(fn, *args)
+            except RuntimeError as e:              # pool already shut down
+                out.set_exception(e)
+                return
+
+            def _copy(f: Future):
+                err = f.exception()
+                if err is not None:
+                    out.set_exception(err)
+                else:
+                    out.set_result(f.result())
+            inner.add_done_callback(_copy)
 
         def _done(_):
             with self._lock:
-                if self._pending.get(key) is fut:
+                if self._pending.get(key) is out:
                     del self._pending[key]
-        fut.add_done_callback(_done)
-        return fut
+        out.add_done_callback(_done)
+        if prev is None:
+            _start()
+        else:
+            prev.add_done_callback(_start)         # chain, don't block
+        return out
 
     def write_async(self, key: Key, obj: Any) -> Future:
-        with self._lock:
-            prev = self._pending.get(key)
-        if prev is not None:
-            prev.result()                          # serialize same-key writes
-        fut = self.pool.submit(self.store.write, key, obj)
-        with self._lock:
-            self._pending[key] = fut
-
-        def _done(_):
-            with self._lock:
-                if self._pending.get(key) is fut:
-                    del self._pending[key]
-        fut.add_done_callback(_done)
-        return fut
+        return self.submit(key, self.store.write, key, obj)
 
     def read(self, key: Key) -> Any:
         with self._lock:

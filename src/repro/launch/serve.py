@@ -1,39 +1,95 @@
 """Serving driver: replay a synthesized context-switching trace through
-the LLMService (compressed-time: arrival gaps are bookkept, not slept).
+the multi-app ServiceRouter (compressed-time: arrival gaps are bookkept,
+not slept).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-      --policy llms --contexts 4 --calls 24
+      --policy llms --contexts 4 --calls 24 --concurrency 2
+
+``--concurrency N`` registers N app sessions with the router; each app
+submits its share of the trace from its own thread, so admission is
+genuinely concurrent while model execution stays serial (the paper's
+working-set lock).  ``--priority-mix a:b`` assigns priorities to apps
+round-robin (a foreground apps, then b background apps, repeating);
+the router admits foreground calls ahead of queued background ones and
+reports per-priority latency (queue wait + service).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import tempfile
+import threading
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, reduced
+from repro.core.scheduler import ServiceRouter
 from repro.core.service import LLMSConfig, LLMService, POLICIES
 from repro.models.registry import build_model
 from repro.trace.synth import PATTERNS, synthesize
 
 
-def run_trace(svc: LLMService, events, max_new: int = 8, verbose=False):
+def parse_priority_mix(mix: str, n_apps: int):
+    """"a:b" -> per-app priority names, fg-first round-robin."""
+    try:
+        fg, bg = (int(x) for x in mix.split(":"))
+        if fg < 0 or bg < 0 or fg + bg == 0:
+            raise ValueError(mix)
+    except ValueError:
+        raise SystemExit(
+            f"--priority-mix must be 'FG:BG' with FG+BG > 0, got {mix!r}")
+    cycle = ["foreground"] * fg + ["background"] * bg
+    return [cycle[i % len(cycle)] for i in range(n_apps)]
+
+
+def run_trace(router: ServiceRouter, events, n_apps: int = 1,
+              priority_mix: str = "1:1", max_new: int = 8, verbose=False):
+    """Replay ``events`` through ``router`` with ``n_apps`` submitting
+    apps; contexts are assigned to apps round-robin."""
+    apps = [router.register_app(f"app{i}", prio) for i, prio in
+            enumerate(parse_priority_mix(priority_mix, n_apps))]
+    session_of = {}                 # ctx_id -> AppSession
     stubs = {}
     for ev in events:
         if ev.ctx_id not in stubs:
-            stubs[ev.ctx_id] = svc.newLLMCtx()
-        svc.callLLM(stubs[ev.ctx_id], ev.prompt.tolist(),
-                    max_new_tokens=max_new)
-        if verbose:
-            r = svc.records[-1]
-            print(f"  t={ev.time:9.1f}s ctx={ev.ctx_id} ds={ev.dataset:14s}"
+            sess = apps[ev.ctx_id % n_apps]
+            session_of[ev.ctx_id] = sess
+            stubs[ev.ctx_id] = sess.new_ctx()
+
+    futs = []
+
+    def submit_all(sess):
+        for ev in events:
+            if session_of[ev.ctx_id] is sess:
+                futs.append(sess.submit(stubs[ev.ctx_id], ev.prompt.tolist(),
+                                        max_new_tokens=max_new))
+
+    if router.started and n_apps > 1:
+        threads = [threading.Thread(target=submit_all, args=(s,))
+                   for s in apps]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    else:
+        for sess in apps:
+            submit_all(sess)
+    router.drain()
+    errors = [f.exception() for f in futs if f.exception() is not None]
+    for e in errors[:3]:
+        print(f"  !! dropped call: {type(e).__name__}: {e}")
+
+    if verbose:
+        for r in router.call_records:
+            print(f"  {r['app']:6s} prio={r['priority']} ctx={r['ctx']}"
+                  f" wait={r['wait_s']*1e3:7.2f}ms"
                   f" switch={r['switch_s']*1e3:7.2f}ms"
-                  f" infer={r['infer_s']*1e3:7.1f}ms"
-                  f" mem={r['mem_used']/2**20:6.1f}MiB")
-    return svc.stats()
+                  f" service={r['service_s']*1e3:7.1f}ms")
+    stats = router.svc.stats()
+    stats["router"] = router.stats()
+    stats["failed_calls"] = len(errors)
+    return stats
 
 
 def main():
@@ -48,6 +104,10 @@ def main():
     ap.add_argument("--budget-mib", type=float, default=2.0)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--concurrency", type=int, default=1,
+                    help="number of app sessions submitting the trace")
+    ap.add_argument("--priority-mix", default="1:1",
+                    help="fg:bg app ratio, assigned round-robin")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,10 +123,14 @@ def main():
         svc.profile_pipeline()
     events = synthesize(args.contexts, args.calls, cfg.vocab,
                         pattern=args.pattern, scale=0.1, seed=args.seed)
+    router = ServiceRouter(svc, predict=True, start=args.concurrency > 1)
     t0 = time.time()
-    stats = run_trace(svc, events, max_new=args.max_new, verbose=True)
+    stats = run_trace(router, events, n_apps=max(1, args.concurrency),
+                      priority_mix=args.priority_mix,
+                      max_new=args.max_new, verbose=True)
     stats["wall_s"] = time.time() - t0
     print(json.dumps(stats, indent=1))
+    router.shutdown()
     svc.close()
 
 

@@ -46,6 +46,22 @@ def _dq8(codes, scale):
     return codes.astype(jnp.float32) * scale[..., None]
 
 
+def _q8v(x):
+    """Second-moment codec: quantize sqrt(v), not v.  v's intra-row
+    dynamic range is squared, so linear int8 rounds small entries to 0
+    and m/(sqrt(v)+eps) explodes; in the sqrt domain an entry survives
+    down to (max/254)^2 of the row max instead of max/254."""
+    r = jnp.sqrt(jnp.maximum(x, 0.0))
+    s = jnp.maximum(jnp.max(r, axis=-1) / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(r / s[..., None]), 0, 127).astype(jnp.int8)
+    return codes, s.astype(jnp.float32)
+
+
+def _dq8v(codes, scale):
+    r = codes.astype(jnp.float32) * scale[..., None]
+    return r * r
+
+
 def init_state(params: PyTree, cfg: OptConfig) -> Dict[str, PyTree]:
     zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
     if not cfg.quantized:
@@ -110,12 +126,12 @@ def apply_updates(state: Dict[str, PyTree], grads: PyTree,
         def upd(p, g, mq, ms, vq, vs):
             g = g.astype(jnp.float32) * scale
             m = b1 * _dq8(mq, ms) + (1 - b1) * g
-            v = b2 * _dq8(vq, vs) + (1 - b2) * g * g
+            v = b2 * _dq8v(vq, vs) + (1 - b2) * g * g
             u = (m / bc1) / (jnp.sqrt(jnp.maximum(v, 0.0) / bc2) + cfg.eps)
             u = u + cfg.weight_decay * p.astype(jnp.float32)
             p2 = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
             mq2, ms2 = _q8(m)
-            vq2, vs2 = _q8(v)
+            vq2, vs2 = _q8v(v)
             return p2, mq2, ms2, vq2, vs2
 
         out = jax.tree.map(upd, state["params"], grads, state["mu"],

@@ -1,0 +1,114 @@
+"""Hypothesis compatibility shim.
+
+The property tests use a small subset of the hypothesis API.  When the
+real package is installed (see requirements-dev.txt) we use it; when it
+is absent the tests fall back to a deterministic, seeded example
+generator so the tier-1 suite runs green without the dependency.
+
+The fallback supports exactly what the suite needs:
+  strategies: lists / floats / integers / booleans / tuples /
+              sampled_from, plus .map()
+  @given(*strategies)  — runs ``max_examples`` seeded examples
+  @settings(max_examples=N, deadline=None) — example-count control
+
+The first examples are boundary-biased (min sizes / interval endpoints)
+so the cheap fallback still probes the edges hypothesis would shrink
+toward; the rest are drawn from a RandomState seeded by the test name,
+so failures reproduce run-to-run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        """A generator of examples: edge(k) for the first few calls,
+        then rng-driven random draws."""
+
+        def __init__(self, draw, edges=()):
+            self._draw = draw
+            self._edges = list(edges)
+
+        def example(self, rng, k: int):
+            if k < len(self._edges):
+                e = self._edges[k]
+                return e(rng) if callable(e) else e
+            return self._draw(rng)
+
+        def map(self, fn):
+            return _Strategy(
+                lambda rng: fn(self._draw(rng)),
+                [lambda rng, e=e: fn(e(rng) if callable(e) else e)
+                 for e in self._edges])
+
+    class _Strategies:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)),
+                [min_value, max_value])
+
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(
+                lambda rng: int(rng.randint(min_value, int(max_value) + 1)),
+                [int(min_value), int(max_value)])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.randint(2)),
+                             [False, True])
+
+        @staticmethod
+        def sampled_from(elements):
+            xs = list(elements)
+            return _Strategy(lambda rng: xs[rng.randint(len(xs))],
+                             [xs[0], xs[-1]])
+
+        @staticmethod
+        def tuples(*ss):
+            return _Strategy(
+                lambda rng: tuple(s.example(rng, len(getattr(s, "_edges", [])))
+                                  for s in ss))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_):
+            def draw(rng):
+                n = int(rng.randint(min_size, max_size + 1))
+                return [elem.example(rng, k + len(elem._edges))
+                        for k in range(n)]
+            edges = [lambda rng: [elem.example(rng, k)
+                                  for k in range(max(min_size, 1))]]
+            return _Strategy(draw, edges if min_size or max_size else [])
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            n = getattr(fn, "_compat_max_examples", 20)
+
+            def wrapper():
+                seed = zlib.crc32(fn.__name__.encode()) & 0x7FFFFFFF
+                rng = np.random.RandomState(seed)
+                for k in range(n):
+                    fn(*(s.example(rng, k) for s in strategies))
+            # NOT functools.wraps: pytest must see a zero-arg signature,
+            # or it would treat the generated params as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco

@@ -3,7 +3,7 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.lifecycle import LCTRUQueue, MemoryManager
 from repro.core.pipeline import PipelineProfile, fit_linear, plan_split

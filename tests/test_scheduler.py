@@ -1,0 +1,215 @@
+"""ServiceRouter layer: admission/priority ordering, next-context
+prediction driving §3.4 AoT swap-out, and trace determinism."""
+import tempfile
+
+import numpy as np
+import pytest
+
+from conftest import tiny_model
+from repro.core.scheduler import (NextContextPredictor, ServiceRouter,
+                                  parse_priority)
+from repro.core.service import LLMSConfig, LLMService
+from repro.trace.synth import PATTERNS, synthesize
+
+
+def make_svc(policy="llms", budget=10_000_000, max_ctx=128):
+    cfg, model, params = tiny_model("smollm-360m")
+    sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx,
+                    memory_budget=budget, swap_dir=tempfile.mkdtemp())
+    return LLMService(model, params, sc), cfg
+
+
+# --------------------------------------------------------------------- #
+# admission / priority ordering
+# --------------------------------------------------------------------- #
+def test_foreground_admitted_before_queued_background():
+    """With jobs queued, drain must run all foreground calls before any
+    background call, FIFO within each priority."""
+    svc, cfg = make_svc()
+    router = ServiceRouter(svc, predict=False, start=False)
+    fg = router.register_app("chat", "foreground")
+    bg = router.register_app("indexer", "background")
+    rng = np.random.RandomState(0)
+    stubs = {s: sess.new_ctx() for s, sess in
+             [("b0", bg), ("b1", bg), ("f0", fg), ("f1", fg)]}
+    order = [("b0", bg), ("f0", fg), ("b1", bg), ("f1", fg)]
+    for name, sess in order:                       # bg submitted FIRST
+        sess.submit(stubs[name], rng.randint(1, cfg.vocab, 8).tolist(),
+                    max_new_tokens=2)
+    router.drain()
+    ran = [r["app"] for r in router.call_records]
+    assert ran == ["chat", "chat", "indexer", "indexer"]
+    fg_ctxs = [r["ctx"] for r in router.call_records[:2]]
+    assert fg_ctxs == [stubs["f0"].ctx_id, stubs["f1"].ctx_id]  # FIFO in prio
+    router.shutdown()
+    svc.close()
+
+
+def test_per_priority_latency_stats():
+    svc, cfg = make_svc()
+    router = ServiceRouter(svc, predict=False, start=False)
+    fg = router.register_app("a", "fg")
+    bg = router.register_app("b", "bg")
+    rng = np.random.RandomState(1)
+    for sess in (fg, bg):
+        stub = sess.new_ctx()
+        for _ in range(2):
+            sess.call(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                      max_new_tokens=2)
+    st = router.stats()
+    for prio in ("foreground", "background"):
+        assert st[prio]["calls"] == 2
+        assert st[prio]["latency_mean_s"] >= st[prio]["service_mean_s"] >= 0
+        assert st[prio]["wait_mean_s"] >= 0
+    router.shutdown()
+    svc.close()
+
+
+def test_threaded_router_serializes_service_access():
+    """start=True: a dispatcher thread drains; results match submissions."""
+    svc, cfg = make_svc()
+    router = ServiceRouter(svc, predict=True, start=True)
+    fg = router.register_app("app", "foreground")
+    rng = np.random.RandomState(2)
+    stubs = [fg.new_ctx() for _ in range(3)]
+    futs = [fg.submit(stubs[i % 3], rng.randint(1, cfg.vocab, 8).tolist(),
+                      max_new_tokens=2) for i in range(9)]
+    router.drain()
+    outs = [f.result(30.0) for f in futs]
+    assert all(len(gen) == 2 for _, gen in outs)
+    assert len(router.call_records) == 9
+    assert svc.stats()["calls"] == 9
+    router.shutdown()
+    svc.close()
+
+
+def test_exception_reported_to_submitter():
+    svc, cfg = make_svc()
+    router = ServiceRouter(svc, predict=False, start=False)
+    fg = router.register_app("a", "fg")
+    stub = fg.new_ctx()
+    huge = [1] * (svc.n_slots * 2)                 # violates half-window
+    fut = fg.submit(stub, huge, max_new_tokens=0)
+    router.drain()
+    with pytest.raises(AssertionError):
+        fut.result(10.0)
+    router.shutdown()
+    svc.close()
+
+
+def test_parse_priority():
+    assert parse_priority("fg") == parse_priority("foreground") == 0
+    assert parse_priority("bg") == parse_priority("background") == 1
+    assert parse_priority(1) == 1
+
+
+# --------------------------------------------------------------------- #
+# next-context prediction -> AoT swap-out (§3.4)
+# --------------------------------------------------------------------- #
+def test_predictor_learns_first_order_pattern():
+    p = NextContextPredictor()
+    for cid in [0, 1, 0, 1, 0, 1, 0]:
+        p.observe(cid)
+    assert p.predict(0) == 1
+    assert p.predict(1) == 0
+    assert p.predict() == 1                 # latest ctx is 0
+    assert p.predict(99) is None            # never seen
+
+
+def test_prediction_drives_aot_swap_out():
+    """llms_nolife disables the service's own AoT swap-out, so chunks stay
+    dirty after a call; the router's prediction hook must still flush the
+    outgoing context's chunks to disk ahead of eviction."""
+    svc, cfg = make_svc(policy="llms_nolife")
+    assert not svc.cfg.use_aot
+    router = ServiceRouter(svc, predict=True, start=False)
+    app = router.register_app("a", "fg")
+    rng = np.random.RandomState(3)
+    sa, sb = app.new_ctx(), app.new_ctx()
+    for stub in (sa, sb, sa, sb, sa):              # alternating trace
+        app.call(stub, rng.randint(1, cfg.vocab, 12).tolist(),
+                 max_new_tokens=2)
+    assert router.prefetch_hints > 0
+    assert router.aot_flushes > 0
+    svc.swapper.flush()
+    # the non-active context's chunks were flushed by the hint, with no
+    # eviction pressure (big budget) to force a sync write
+    ctx_a = svc.contexts[sa.ctx_id]
+    assert ctx_a.chunks
+    assert all(not m.dirty and m.on_disk for m in ctx_a.chunks.values())
+    assert all(svc.store.nbytes((ctx_a.cid, i)) for i in ctx_a.chunks)
+    router.shutdown()
+    svc.close()
+
+
+def test_prediction_flush_keeps_grown_chunks_fresh():
+    """Regression: the prediction-driven flush clears dirty flags; a
+    partial chunk that then GROWS must still be re-encoded (payloads are
+    append-only snapshots).  Payloads must match a prediction-off run
+    byte-for-byte."""
+    def payloads(policy, predict, rng_seed=5):
+        svc, cfg = make_svc(policy=policy)
+        router = ServiceRouter(svc, predict=predict, start=False)
+        app = router.register_app("a", "fg")
+        rng = np.random.RandomState(rng_seed)
+        sa, sb = app.new_ctx(), app.new_ctx()
+        prompts = [rng.randint(1, cfg.vocab, 11).tolist() for _ in range(8)]
+        for i, stub in enumerate([sa, sb] * 4):    # non-chunk-aligned calls
+            app.call(stub, prompts[i], max_new_tokens=3)
+        out = {(c.cid, i): cc for c in svc.contexts.values()
+               for i, cc in c.payload.items()}
+        snap = {k: {n: (np.asarray(p).copy(), np.asarray(s).copy())
+                    for n, (p, s) in cc.data.items()}
+                for k, cc in out.items()}
+        router.shutdown()
+        svc.close()
+        return snap
+
+    for policy in ("vllm_sq", "llms_nolife"):
+        with_pred = payloads(policy, True)
+        no_pred = payloads(policy, False)
+        assert set(with_pred) == set(no_pred)
+        for k in with_pred:
+            for n in with_pred[k]:
+                np.testing.assert_array_equal(with_pred[k][n][0],
+                                              no_pred[k][n][0])
+
+
+def test_prediction_accuracy_tracked():
+    svc, cfg = make_svc()
+    router = ServiceRouter(svc, predict=True, start=False)
+    app = router.register_app("a", "fg")
+    rng = np.random.RandomState(4)
+    sa, sb = app.new_ctx(), app.new_ctx()
+    for stub in (sa, sb, sa, sb, sa, sb, sa, sb):
+        app.call(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                 max_new_tokens=2)
+    st = router.stats()
+    assert st["pred_total"] > 0
+    # strict alternation: the first-order predictor converges on it
+    assert st["pred_hits"] >= st["pred_total"] // 2
+    router.shutdown()
+    svc.close()
+
+
+# --------------------------------------------------------------------- #
+# trace determinism (same seed => identical events)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_synthesize_deterministic(pattern):
+    a = synthesize(4, 20, 512, pattern=pattern, scale=0.1, seed=9)
+    b = synthesize(4, 20, 512, pattern=pattern, scale=0.1, seed=9)
+    assert len(a) == len(b) == 20
+    for ea, eb in zip(a, b):
+        assert ea.time == eb.time
+        assert ea.ctx_id == eb.ctx_id
+        assert ea.dataset == eb.dataset
+        np.testing.assert_array_equal(ea.prompt, eb.prompt)
+        np.testing.assert_array_equal(ea.ground_truth, eb.ground_truth)
+
+
+def test_synthesize_seed_sensitivity():
+    a = synthesize(4, 20, 512, pattern="markov", scale=0.1, seed=0)
+    b = synthesize(4, 20, 512, pattern="markov", scale=0.1, seed=1)
+    assert any(ea.ctx_id != eb.ctx_id or len(ea.prompt) != len(eb.prompt)
+               for ea, eb in zip(a, b))

@@ -1,0 +1,92 @@
+"""AsyncSwapper regression tests: same-key writes must chain on the
+pool, never block the submitting thread (AoT swap-out is advertised as
+asynchronous — paper §3.4, DESIGN.md §3)."""
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.core.swap import AsyncSwapper, DiskStore
+
+
+def make_swapper(workers=2):
+    store = DiskStore(tempfile.mkdtemp(prefix="swap_async_"))
+    return store, AsyncSwapper(store, workers=workers)
+
+
+def test_same_key_double_write_does_not_block():
+    """A second write to an in-flight key returns immediately instead of
+    waiting on prev.result()."""
+    store, sw = make_swapper()
+    gate = threading.Event()
+    started = threading.Event()
+
+    def slow_write():
+        started.set()
+        assert gate.wait(10.0), "gate never released"
+        return store.write((0, 0), {"v": 1})
+
+    f1 = sw.submit((0, 0), slow_write)
+    assert started.wait(5.0)
+    t0 = time.perf_counter()
+    f2 = sw.write_async((0, 0), {"v": 2})
+    submit_elapsed = time.perf_counter() - t0
+    assert submit_elapsed < 0.5, \
+        f"submit blocked {submit_elapsed:.3f}s on in-flight same-key write"
+    assert not f2.done(), "chained write ran before its predecessor"
+    gate.set()
+    f1.result(10.0)
+    f2.result(10.0)
+    sw.flush()
+    assert store.read((0, 0)) == {"v": 2}   # later write wins
+    sw.shutdown()
+
+
+def test_same_key_writes_serialize_in_order():
+    """Chained writes apply in submission order even under a burst."""
+    store, sw = make_swapper(workers=2)
+    for v in range(8):
+        sw.write_async((1, 3), {"v": v})
+    sw.flush()
+    assert store.read((1, 3)) == {"v": 7}
+    sw.shutdown()
+
+
+def test_read_waits_for_inflight_write():
+    store, sw = make_swapper()
+    gate = threading.Event()
+
+    def slow_write():
+        assert gate.wait(10.0)
+        return store.write((2, 0), {"v": "late"})
+
+    sw.submit((2, 0), slow_write)
+    got = {}
+
+    def reader():
+        got["v"] = sw.read((2, 0))
+
+    t = threading.Thread(target=reader)
+    t.start()
+    time.sleep(0.05)
+    assert "v" not in got                   # read is waiting on the write
+    gate.set()
+    t.join(10.0)
+    assert got["v"] == {"v": "late"}
+    sw.shutdown()
+
+
+def test_submit_failure_propagates_and_unblocks_chain():
+    store, sw = make_swapper()
+
+    def boom():
+        raise RuntimeError("disk on fire")
+
+    f1 = sw.submit((3, 0), boom)
+    f2 = sw.write_async((3, 0), {"v": "after"})   # chains after the failure
+    with pytest.raises(RuntimeError):
+        f1.result(10.0)
+    f2.result(10.0)                                # still runs
+    assert store.read((3, 0)) == {"v": "after"}
+    sw.shutdown()
