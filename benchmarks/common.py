@@ -69,34 +69,33 @@ def replay(svc: LLMService, events, max_new: int = 4,
     events stay in strict trace order, so records are like-for-like with
     the pre-router harness).  ``predict=True`` additionally enables the
     router's next-context prediction -> AoT swap-out hints."""
-    router = ServiceRouter(svc, predict=predict, start=False)
-    sess = router.register_app("bench", "foreground")
+    with ServiceRouter(svc, predict=predict, start=False) as router:
+        sess = router.register_app("bench", "foreground")
 
-    def one_pass(evts):
-        stubs: Dict[int, object] = {}
-        prev_t = None
-        for ev in evts:
-            if ev.ctx_id not in stubs:
-                stubs[ev.ctx_id] = sess.new_ctx()
-            if idle_flush_s is not None and prev_t is not None \
-                    and ev.time - prev_t > idle_flush_s:
-                svc.swapper.flush()        # device idle: I/O completed
-            sess.call(stubs[ev.ctx_id], ev.prompt.tolist(),
-                      max_new_tokens=max_new)
-            prev_t = ev.time
-        return stubs
+        def one_pass(evts):
+            stubs: Dict[int, object] = {}
+            prev_t = None
+            for ev in evts:
+                if ev.ctx_id not in stubs:
+                    stubs[ev.ctx_id] = sess.new_ctx()
+                if idle_flush_s is not None and prev_t is not None \
+                        and ev.time - prev_t > idle_flush_s:
+                    svc.swapper.flush()    # device idle: I/O completed
+                sess.call(stubs[ev.ctx_id], ev.prompt.tolist(),
+                          max_new_tokens=max_new)
+                prev_t = ev.time
+            return stubs
 
-    if warm:
-        set_disk_throttle(None)            # warm pass: compile everything
-        stubs = one_pass(events)
-        for s in stubs.values():
-            sess.del_ctx(s)
-        svc.records.clear()
-        router.call_records.clear()
-        set_disk_throttle(DISK_BW, DISK_LAT)
-    one_pass(events)
-    st = svc.stats()
-    router.shutdown()
+        if warm:
+            set_disk_throttle(None)        # warm pass: compile everything
+            stubs = one_pass(events)
+            for s in stubs.values():
+                sess.del_ctx(s)
+            svc.records.clear()
+            router.call_records.clear()
+            set_disk_throttle(DISK_BW, DISK_LAT)
+        one_pass(events)
+        st = svc.stats()
     return st
 
 

@@ -24,32 +24,31 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    service = LLMService(model, params, LLMSConfig(
-        policy="llms",
-        max_ctx_len=128,
-        memory_budget=24_000,                   # tight: forces swapping
-        swap_dir=tempfile.mkdtemp(prefix="llms_quickstart_")))
-    service.profile_pipeline()                  # paper §3.3.i
+    with LLMService(model, params, LLMSConfig(
+            policy="llms",
+            max_ctx_len=128,
+            memory_budget=24_000,               # tight: forces swapping
+            swap_dir=tempfile.mkdtemp(prefix="llms_quickstart_"))) as service:
+        service.profile_pipeline()              # paper §3.3.i
 
-    # two apps, each holding a persistent context (Table 1 API)
-    chat = service.bindLLMService("chat-app").newLLMCtx(
-        system_prompt=[1, 2, 3, 4])
-    mail = service.bindLLMService("mail-app").newLLMCtx()
+        # two apps, each holding a persistent context (Table 1 API)
+        chat = service.bindLLMService("chat-app").newLLMCtx(
+            system_prompt=[1, 2, 3, 4])
+        mail = service.bindLLMService("mail-app").newLLMCtx()
 
-    rng = np.random.RandomState(0)
-    for turn in range(4):
-        for name, stub in (("chat", chat), ("mail", mail)):
-            prompt = rng.randint(5, cfg.vocab, size=10).tolist()
-            _, reply = service.callLLM(stub, prompt, max_new_tokens=6)
-            r = service.records[-1]
-            ctx = service.contexts[stub.ctx_id]
-            levels = [m.bits for _, m in sorted(ctx.chunks.items())]
-            print(f"turn {turn} {name}: reply={reply} "
-                  f"switch={r['switch_s']*1e3:.2f}ms "
-                  f"ctx_tokens={ctx.n_tokens} chunk_bits={levels}")
+        rng = np.random.RandomState(0)
+        for turn in range(4):
+            for name, stub in (("chat", chat), ("mail", mail)):
+                prompt = rng.randint(5, cfg.vocab, size=10).tolist()
+                _, reply = service.callLLM(stub, prompt, max_new_tokens=6)
+                r = service.records[-1]
+                ctx = service.contexts[stub.ctx_id]
+                levels = [m.bits for _, m in sorted(ctx.chunks.items())]
+                print(f"turn {turn} {name}: reply={reply} "
+                      f"switch={r['switch_s']*1e3:.2f}ms "
+                      f"ctx_tokens={ctx.n_tokens} chunk_bits={levels}")
 
-    print("\nservice stats:", service.stats())
-    service.close()
+        print("\nservice stats:", service.stats())
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Serve a synthesized multi-app context-switching trace (paper §4/§5)
 through the ServiceRouter and compare LLMS against a baseline policy
 side by side.  Contexts are split across a foreground and a background
-app session so the router's per-priority accounting is visible.
+app session so the router's per-priority accounting is visible;
+``--slice-steps`` turns on decode-slice dispatch so the sliced request
+path is exercised too.
 
   PYTHONPATH=src:. python examples/serve_trace.py [--policy vllm_sq]
 """
@@ -18,40 +20,41 @@ from repro.models.registry import build_model
 from repro.trace.synth import synthesize
 
 
-def run(policy: str, events, model, params, budget: int):
-    svc = LLMService(model, params, LLMSConfig(
-        policy=policy, max_ctx_len=128, memory_budget=budget,
-        swap_dir=tempfile.mkdtemp()))
-    if svc.cfg.use_pipeline:
-        svc.profile_pipeline()
-    router = ServiceRouter(svc, predict=True)
-    fg = router.register_app("chat", "foreground")
-    bg = router.register_app("agent", "background")
+def run(policy: str, events, model, params, budget: int,
+        slice_steps: int = 0):
+    with LLMService(model, params, LLMSConfig(
+            policy=policy, max_ctx_len=128, memory_budget=budget,
+            swap_dir=tempfile.mkdtemp())) as svc:
+        if svc.cfg.use_pipeline:
+            svc.profile_pipeline()
+        with ServiceRouter(svc, predict=True,
+                           slice_steps=slice_steps) as router:
+            fg = router.register_app("chat", "foreground")
+            bg = router.register_app("agent", "background")
 
-    def one_pass():
-        stubs, futs = {}, []
-        for ev in events:
-            sess = fg if ev.ctx_id % 2 == 0 else bg
-            if ev.ctx_id not in stubs:
-                stubs[ev.ctx_id] = sess.new_ctx()
-            futs.append(sess.submit(stubs[ev.ctx_id], ev.prompt.tolist(),
-                                    max_new_tokens=4))
-        router.drain()
-        for f in futs:
-            f.result()          # surface call failures, like the old path
-        return stubs
+            def one_pass():
+                stubs, streams = {}, []
+                for ev in events:
+                    sess = fg if ev.ctx_id % 2 == 0 else bg
+                    if ev.ctx_id not in stubs:
+                        stubs[ev.ctx_id] = sess.new_ctx()
+                    streams.append(sess.stream(stubs[ev.ctx_id],
+                                               ev.prompt.tolist(),
+                                               max_new_tokens=4))
+                router.drain()
+                for s in streams:
+                    s.result()      # surface call failures, like the old path
+                return stubs
 
-    set_disk_throttle(None)           # warm pass: compile everything
-    for stub in one_pass().values():
-        fg.del_ctx(stub)
-    svc.records.clear()
-    router.call_records.clear()
-    set_disk_throttle(25e6, 2e-4)
-    one_pass()
-    st = svc.stats()
-    st["router"] = router.stats()
-    router.shutdown()
-    svc.close()
+            set_disk_throttle(None)           # warm pass: compile everything
+            for stub in one_pass().values():
+                fg.del_ctx(stub)
+            svc.records.clear()
+            router.call_records.clear()
+            set_disk_throttle(25e6, 2e-4)
+            one_pass()
+            st = svc.stats()
+            st["router"] = router.stats()
     return st
 
 
@@ -60,6 +63,8 @@ def main():
     ap.add_argument("--policy", default="vllm_sq", choices=POLICIES)
     ap.add_argument("--contexts", type=int, default=4)
     ap.add_argument("--calls", type=int, default=16)
+    ap.add_argument("--slice-steps", type=int, default=2,
+                    help="decode-slice length (0 = whole-generation)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("llama2-7b"))
@@ -70,15 +75,19 @@ def main():
                         pattern="markov", scale=0.05, seed=0)
     budget = 30_000
     for policy in ("llms", args.policy):
-        st = run(policy, events, model, params, budget)
+        st = run(policy, events, model, params, budget,
+                 slice_steps=args.slice_steps)
         print(f"{policy:10s} mean switch {st['switch_mean_s']*1e3:8.3f} ms  "
               f"p99 {st['switch_p99_s']*1e3:8.3f} ms  "
               f"mem {st['mem_used']:>8d} B")
         for prio in ("foreground", "background"):
             if prio in st["router"]:
                 r = st["router"][prio]
+                ttft = r.get("ttft_mean_s")
                 print(f"  {prio:10s} calls={r['calls']:3d}"
-                      f" latency {r['latency_mean_s']*1e3:8.3f} ms")
+                      f" latency {r['latency_mean_s']*1e3:8.3f} ms"
+                      + (f" ttft {ttft*1e3:8.3f} ms"
+                         if ttft is not None else ""))
 
 
 if __name__ == "__main__":

@@ -2,7 +2,9 @@
 
 Public surface (DESIGN.md §1):
   LLMService / LLMSConfig / LLMCtxStub  (paper Table 1 API, facade)
-  scheduler.ServiceRouter / AppSession  (multi-app admission front-end)
+  requests.GenerationRequest / SamplingParams / GenerationStream
+                                        (request/stream protocol)
+  scheduler.ServiceRouter / AppSession  (decode-slice admission front-end)
   executor.ModelExecutor                (jitted entry points, layer 1)
   context_store.ContextStore            (persistent contexts, layer 2)
   residency.ResidencyEngine             (switch-in/out engine, layer 3)
@@ -11,6 +13,9 @@ Public surface (DESIGN.md §1):
   pipeline.plan_split                   (swapping-recompute planner, Eq. 4)
   lifecycle.LCTRUQueue                  (eviction order, §3.4)
 """
+from repro.core.requests import (  # noqa
+    BACKGROUND, FOREGROUND, GenerationRequest, GenerationStream,
+    SamplingParams)
 from repro.core.service import LLMService, LLMSConfig, LLMCtxStub  # noqa
 from repro.core.scheduler import (  # noqa
     AppSession, NextContextPredictor, ServiceRouter)

@@ -36,6 +36,11 @@ class Context:
     alive: bool = True                      # lmk: killed => False
     density_sum: Optional[np.ndarray] = None
     density_cnt: Optional[np.ndarray] = None
+    # resume bookkeeping: count of in-flight GenerationStates (begun but
+    # not finished — includes slice-preempted, swapped-out generations).
+    # A busy context cannot be deleted: a suspended stream will switch
+    # its state back in to keep decoding.
+    busy: int = 0
 
 
 class ContextStore:
@@ -62,10 +67,17 @@ class ContextStore:
         return self.contexts[cid]
 
     def delete(self, cid: int) -> Optional[Context]:
-        """Drop a context and release every byte it holds (mem + disk)."""
-        ctx = self.contexts.pop(cid, None)
+        """Drop a context and release every byte it holds (mem + disk).
+        Refuses while a generation is in flight (possibly suspended) on
+        it — resume would otherwise decode into freed state."""
+        ctx = self.contexts.get(cid)
         if ctx is None:
             return None
+        if ctx.busy:
+            raise RuntimeError(
+                f"ctx {cid} has {ctx.busy} in-flight generation(s); "
+                "cancel the stream(s) before delLLMCtx")
+        self.contexts.pop(cid)
         for idx in list(ctx.chunks):
             self.mem.unregister((ctx.cid, idx))
             self.store.delete((ctx.cid, idx))

@@ -7,6 +7,11 @@ service instances of the same (model, window) so benchmark sweeps don't
 recompile.  Everything above (residency, scheduler) treats this layer
 as "run the model on these tokens/positions"; nothing here knows about
 chunks-on-disk, budgets, or apps.
+
+``extend`` (prefill) and ``decode`` (one token) are the stepwise entry
+points the request/stream protocol is built on: ``LLMService`` drives
+one ``decode`` per ``decode_step`` so the router can slice generations
+and preempt between slices (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -104,6 +109,12 @@ class ModelExecutor:
         else:
             self.leaf_dims = {"ckv": (mc.mla.kv_lora_rank,),
                               "kpe": (mc.mla.qk_rope_head_dim,)}
+
+    @property
+    def max_request_tokens(self) -> int:
+        """Largest prompt+generation a single request may add: half the
+        token window, so one call can never condense its own output."""
+        return self.n_slots // 2
 
     # -- bucket / padding helpers ------------------------------------- #
     def bucket_len(self, n: int) -> int:

@@ -15,6 +15,16 @@ dispatcher thread drains the queue so app threads only enqueue, with
 ``start=False`` the queue drains inline (deterministic — used by the
 benchmarks and tests).
 
+**Decode-slice dispatch.**  With ``slice_steps=K`` a generation runs
+in bounded slices of K decode steps; between slices the dispatcher
+re-checks the admission queue, and a waiting higher-priority request
+PREEMPTS the in-flight stream: the partial generation is switched out
+through the ResidencyEngine (``LLMService.suspend_call``), the job is
+re-queued at its original admission rank, and the foreground request
+runs — so foreground TTFT is bounded by one slice plus one context
+switch instead of somebody else's whole generation.  ``slice_steps=0``
+is the legacy whole-generation dispatch.
+
 ``NextContextPredictor`` is a first-order transition table over the
 observed context-switch history — the same process that generates the
 synthetic traces (trace/synth.py markov pattern), so it is the right
@@ -25,16 +35,19 @@ which protects that context's chunks and AoT-flushes everyone else's.
 from __future__ import annotations
 
 import heapq
+import math
 import threading
 import time
 from collections import Counter, defaultdict
 from concurrent.futures import Future
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-FOREGROUND = 0
-BACKGROUND = 1
+from repro.core.requests import (BACKGROUND, FOREGROUND,  # noqa: F401
+                                 GenerationRequest, GenerationStream,
+                                 SamplingParams)
+
 _PRIO_NAMES = {FOREGROUND: "foreground", BACKGROUND: "background"}
 _PRIO_BY_NAME = {"foreground": FOREGROUND, "fg": FOREGROUND,
                  "background": BACKGROUND, "bg": BACKGROUND}
@@ -83,7 +96,22 @@ class AppSession:
         return self.router.del_ctx(self, stub)
 
     def submit(self, stub, prompt, max_new_tokens: int = 16) -> Future:
+        """Legacy whole-result admission: -> Future[(stub, tokens)]."""
         return self.router.submit(self, stub, prompt, max_new_tokens)
+
+    def submit_request(self, stub,
+                       request: GenerationRequest) -> GenerationStream:
+        return self.router.submit_request(self, stub, request)
+
+    def stream(self, stub, prompt, max_new_tokens: int = 16,
+               sampling: Optional[SamplingParams] = None,
+               priority: Optional[Union[int, str]] = None,
+               deadline: Optional[float] = None) -> GenerationStream:
+        """Streaming admission: tokens observable as they decode."""
+        req = GenerationRequest(prompt=prompt, max_new_tokens=max_new_tokens,
+                                sampling=sampling or SamplingParams(),
+                                priority=priority, deadline=deadline)
+        return self.router.submit_request(self, stub, req)
 
     def call(self, stub, prompt, max_new_tokens: int = 16):
         """Synchronous convenience: admit + wait for completion."""
@@ -94,21 +122,28 @@ class AppSession:
 
 
 class ServiceRouter:
-    """Admission queue + per-app sessions + next-context prediction."""
+    """Admission queue + per-app sessions + decode-slice dispatch +
+    next-context prediction."""
 
-    def __init__(self, svc, predict: bool = True, start: bool = False):
+    def __init__(self, svc, predict: bool = True, start: bool = False,
+                 slice_steps: int = 0):
         self.svc = svc
+        self.slice_steps = int(slice_steps)
         self.predictor = NextContextPredictor() if predict else None
         self.sessions: Dict[str, AppSession] = {}
         self.call_records: List[Dict[str, Any]] = []
         self.prefetch_hints = 0
         self.aot_flushes = 0
+        self.preemptions = 0
         self._pred_next: Optional[int] = None
         self._pred_hits = 0
         self._pred_total = 0
 
         self._cv = threading.Condition()
-        self._queue: List[Tuple[int, int, dict]] = []    # (prio, seq, job)
+        # (prio, deadline|inf, seq, job): priority, then EDF, then FIFO.
+        # Preempted jobs are re-pushed under their ORIGINAL key, so a
+        # resumed stream runs ahead of later same-priority arrivals.
+        self._queue: List[Tuple[int, float, int, dict]] = []
         self._seq = 0
         self._inflight = 0
         self._stop = False
@@ -127,8 +162,21 @@ class ServiceRouter:
         return sess
 
     def new_ctx(self, session: AppSession, system_prompt=None):
+        """Create a context; a system prompt is encoded THROUGH the
+        router's dispatch path (inline, ahead of the queue) so
+        ``call_records`` and the §3.4 predictor observe it."""
         with self._svc_lock:
-            return self.svc.newLLMCtx(system_prompt=system_prompt)
+            stub = self.svc.newLLMCtx()
+        if system_prompt is not None and len(system_prompt):
+            req = GenerationRequest(prompt=list(system_prompt),
+                                    max_new_tokens=0)
+            job = self._make_job(session, stub, req,
+                                 GenerationStream(stub.ctx_id, req), None)
+            self._run_job(job)
+            err = job["stream"].error
+            if err is not None:
+                raise err
+        return stub
 
     def del_ctx(self, session: AppSession, stub):
         with self._svc_lock:
@@ -137,18 +185,57 @@ class ServiceRouter:
     # -- admission ------------------------------------------------------ #
     def submit(self, session: AppSession, stub, prompt,
                max_new_tokens: int = 16) -> Future:
+        """Legacy Future-based admission (compat shim over the stream
+        protocol): the Future resolves to (stub, tokens) and supports
+        ``cancel()`` while the job is still queued."""
+        request = GenerationRequest(prompt=prompt,
+                                    max_new_tokens=max_new_tokens)
         fut: Future = Future()
-        job = {"session": session, "stub": stub, "prompt": prompt,
-               "max_new": max_new_tokens, "future": fut,
-               "t_enqueue": time.perf_counter()}
+        self._admit(session, stub, request,
+                    GenerationStream(stub.ctx_id, request), fut)
+        return fut
+
+    def submit_request(self, session: AppSession, stub,
+                       request: GenerationRequest) -> GenerationStream:
+        stream = GenerationStream(stub.ctx_id, request)
+        self._admit(session, stub, request, stream, None)
+        return stream
+
+    def _make_job(self, session, stub, request, stream, future) -> dict:
+        prio = (session.priority if request.priority is None
+                else parse_priority(request.priority))
+        dl = math.inf if request.deadline is None else float(request.deadline)
+        return {"session": session, "stub": stub, "request": request,
+                "stream": stream, "future": future, "state": None,
+                "prio": prio, "deadline": dl, "seq": -1,
+                "t_enqueue": time.perf_counter(), "t_start": None}
+
+    def _admit(self, session, stub, request, stream, future):
+        job = self._make_job(session, stub, request, stream, future)
         with self._cv:
             if self._stop:
                 raise RuntimeError("router is shut down")
-            heapq.heappush(self._queue,
-                           (session.priority, self._seq, job))
+            job["seq"] = self._seq
             self._seq += 1
+            heapq.heappush(self._queue,
+                           (job["prio"], job["deadline"], job["seq"], job))
             self._cv.notify()
-        return fut
+
+    def _requeue(self, job):
+        with self._cv:
+            heapq.heappush(self._queue,
+                           (job["prio"], job["deadline"], job["seq"], job))
+            self._cv.notify()
+
+    def _higher_priority_waiting(self, prio: int, cid: int) -> bool:
+        """A strictly higher-priority job is queued — unless it targets
+        the SAME context: preempting for it would leave a suspended
+        generation the newcomer cannot legally overlap (begin_call
+        refuses), and finishing first hands it a warm cache anyway."""
+        with self._cv:
+            if not self._queue or self._queue[0][0] >= prio:
+                return False
+            return self._queue[0][3]["stub"].ctx_id != cid
 
     # -- dispatch -------------------------------------------------------- #
     def _loop(self):
@@ -158,47 +245,122 @@ class ServiceRouter:
                     self._cv.wait()
                 if self._stop and not self._queue:
                     return
-                _, _, job = heapq.heappop(self._queue)
+                _, _, _, job = heapq.heappop(self._queue)
                 self._inflight += 1
             try:
-                self._execute(job)
+                self._run_job(job)
             finally:
                 with self._cv:
                     self._inflight -= 1
                     self._cv.notify_all()
 
-    def _execute(self, job):
-        fut = job["future"]
-        if not fut.set_running_or_notify_cancel():
-            return
-        sess: AppSession = job["session"]
-        cid = job["stub"].ctx_id
-        t_start = time.perf_counter()
+    def _run_job(self, job, max_slices: Optional[int] = None) -> str:
+        """Run one job until it finishes, is cancelled, or is preempted
+        (-> re-queued).  ``max_slices`` bounds the slices run THIS call
+        (used by ``pump``); preempted/paused jobs keep their state and
+        continue from the interrupted decode on the next dispatch.
+        -> "done" | "cancelled" | "preempted" | "paused" | "error"."""
+        stream: GenerationStream = job["stream"]
+        fut: Optional[Future] = job["future"]
+        K = self.slice_steps
+        if job["state"] is None:
+            if fut is not None and not fut.set_running_or_notify_cancel():
+                stream.finish(cancelled=True)
+                return "cancelled"
+            if stream.cancel_requested:          # cancelled while queued
+                stream.finish(cancelled=True)
+                return "cancelled"
+            job["t_start"] = time.perf_counter()
         try:
             with self._svc_lock:
-                if self._pred_next is not None:
-                    self._pred_total += 1
-                    self._pred_hits += self._pred_next == cid
-                result = self.svc.callLLM(job["stub"], job["prompt"],
-                                          max_new_tokens=job["max_new"])
-                # capture under the lock: another session's call must not
-                # slip a record in between
-                rec = self.svc.records[-1] if self.svc.records else {}
-                self._after_call(cid)
+                st = job["state"]
+                if st is None:
+                    cid = job["stub"].ctx_id
+                    if self._pred_next is not None:
+                        self._pred_total += 1
+                        self._pred_hits += self._pred_next == cid
+                    st = job["state"] = self.svc.begin_call(
+                        job["stub"], job["request"])
+                elif st.suspended:
+                    if stream.cancel_requested:  # cancelled while preempted
+                        self._complete(job, cancelled=True)
+                        return "cancelled"
+                    self.svc.resume_call(st)
+
+                slices = 0
+                while True:
+                    n = 0
+                    while K <= 0 or n < K:       # one slice (K=0: no bound)
+                        if stream.cancel_requested:
+                            self._complete(job, cancelled=True)
+                            return "cancelled"
+                        tok = self.svc.decode_step(st)
+                        if tok is None:
+                            break
+                        stream.push(tok)
+                        n += 1
+                    if st.exhausted:
+                        self._complete(job)
+                        return "done"
+                    slices += 1
+                    if max_slices is not None and slices >= max_slices:
+                        self.svc.suspend_call(st)
+                        self._requeue(job)
+                        return "paused"
+                    if K > 0 and self._higher_priority_waiting(
+                            job["prio"], job["stub"].ctx_id):
+                        self.svc.suspend_call(st)
+                        stream.n_preempts += 1
+                        self.preemptions += 1
+                        self._requeue(job)
+                        return "preempted"
         except Exception as e:              # report to the submitting app
-            fut.set_exception(e)
-            return
+            self._fail(job, e)
+            return "error"
         except BaseException as e:          # KeyboardInterrupt/SystemExit:
-            fut.set_exception(e)            # fail the job AND abort dispatch
+            self._fail(job, e)              # fail the job AND abort dispatch
             raise
+
+    def _complete(self, job, cancelled: bool = False):
+        """finish_call + records + prediction hook (under _svc_lock)."""
+        st, stream, fut = job["state"], job["stream"], job["future"]
+        sess: AppSession = job["session"]
+        cid = job["stub"].ctx_id
+        self.svc.finish_call(st)
+        # capture under the lock: another session's call must not slip a
+        # record in between
+        rec = self.svc.records[-1] if self.svc.records else {}
+        self._after_call(cid)
         t_end = time.perf_counter()
-        self.call_records.append({
-            "app": sess.name, "priority": sess.priority, "ctx": cid,
-            "wait_s": t_start - job["t_enqueue"],
-            "service_s": t_end - t_start,
+        entry = {
+            "app": sess.name, "priority": job["prio"], "ctx": cid,
+            "wait_s": job["t_start"] - job["t_enqueue"],
+            "service_s": t_end - job["t_start"],
             "switch_s": rec.get("switch_s", 0.0),
-        })
-        fut.set_result(result)
+            "n_preempts": stream.n_preempts,
+            "cancelled": cancelled,
+        }
+        if stream.t_first_token is not None:
+            entry["ttft_s"] = stream.t_first_token - job["t_enqueue"]
+            tbts = stream.tbt()
+            if tbts:
+                entry["tbt_mean_s"] = float(np.mean(tbts))
+        self.call_records.append(entry)
+        stream.finish(cancelled=cancelled)
+        if fut is not None:
+            fut.set_result((job["stub"], list(stream.tokens)))
+
+    def _fail(self, job, err: BaseException):
+        st = job["state"]
+        if st is not None and not st.done:
+            try:                    # best-effort: commit what was decoded
+                with self._svc_lock:
+                    self.svc.finish_call(st)
+            except Exception:
+                pass
+        job["stream"].finish(error=err)
+        if job["future"] is not None:
+            job["future"].set_exception(err)
 
     def _after_call(self, cid: int):
         """Feed the trace history into the §3.4 AoT swap-out hint."""
@@ -211,6 +373,19 @@ class ServiceRouter:
             self.prefetch_hints += 1
             self.aot_flushes += self.svc.prepare_switch(pred)
 
+    def pump(self, max_slices: int = 1) -> bool:
+        """Inline dispatch of at most ``max_slices`` decode slices of the
+        highest-priority job, then return (the job re-queues if it isn't
+        finished).  Deterministic building block for tests that need to
+        interleave admissions with a running generation."""
+        assert not self.started, "pump() is for inline (start=False) mode"
+        with self._cv:
+            if not self._queue:
+                return False
+            _, _, _, job = heapq.heappop(self._queue)
+        self._run_job(job, max_slices=max_slices)
+        return True
+
     def drain(self):
         """Run (or wait for) every admitted job; returns when idle."""
         if self.started:
@@ -222,10 +397,12 @@ class ServiceRouter:
             with self._cv:
                 if not self._queue:
                     return
-                _, _, job = heapq.heappop(self._queue)
-            self._execute(job)
+                _, _, _, job = heapq.heappop(self._queue)
+            self._run_job(job)
 
     def shutdown(self):
+        if self._stop and not self._queue:
+            return
         self.drain()
         with self._cv:
             self._stop = True
@@ -233,11 +410,45 @@ class ServiceRouter:
         if self._worker is not None:
             self._worker.join(timeout=10.0)
 
+    def abort(self):
+        """Stop WITHOUT draining: queued jobs are cancelled (futures
+        cancel, streams finish cancelled), the worker stops after its
+        current job.  Used by ``__exit__`` on an exception so unwinding
+        doesn't first execute the whole remaining queue."""
+        with self._cv:
+            self._stop = True
+            pending = [j for _, _, _, j in self._queue]
+            self._queue.clear()
+            self._cv.notify_all()
+        for job in pending:
+            st = job["state"]
+            if st is not None and not st.done:   # suspended mid-generation:
+                try:                             # release its context
+                    with self._svc_lock:
+                        self.svc.finish_call(st)
+                except Exception:
+                    pass
+            if job["future"] is not None:
+                job["future"].cancel()
+            job["stream"].finish(cancelled=True)
+        if self._worker is not None:
+            self._worker.join(timeout=10.0)
+
+    def __enter__(self) -> "ServiceRouter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is not None:
+            self.abort()
+        else:
+            self.shutdown()
+
     # -- reporting ------------------------------------------------------- #
     def stats(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {
             "prefetch_hints": self.prefetch_hints,
             "aot_flushes": self.aot_flushes,
+            "preemptions": self.preemptions,
             "pred_hits": self._pred_hits,
             "pred_total": self._pred_total,
         }
@@ -254,5 +465,16 @@ class ServiceRouter:
                 "service_mean_s": float(np.mean(servs)),
                 "latency_mean_s": float(np.mean(lats)),
                 "latency_p99_s": float(np.percentile(lats, 99)),
+                "preempts": int(sum(r.get("n_preempts", 0) for r in rs)),
             }
+            ttfts = [r["ttft_s"] for r in rs if "ttft_s" in r]
+            if ttfts:
+                out[name]["ttft_mean_s"] = float(np.mean(ttfts))
+                out[name]["ttft_p50_s"] = float(np.percentile(ttfts, 50))
+                out[name]["ttft_p95_s"] = float(np.percentile(ttfts, 95))
+                out[name]["ttft_p99_s"] = float(np.percentile(ttfts, 99))
+            tbts = [r["tbt_mean_s"] for r in rs if "tbt_mean_s" in r]
+            if tbts:
+                out[name]["tbt_mean_s"] = float(np.mean(tbts))
+                out[name]["tbt_p95_s"] = float(np.percentile(tbts, 95))
         return out

@@ -10,12 +10,22 @@ against (VLLM-S/SQ, whole-context Swapping, LMK, and the three
 ablations) are POLICIES of this one facade so benchmarks measure
 like-for-like.  The measured *context switching latency* (Fig. 9) is
 the time of ``ResidencyEngine.switch_in`` — the paper's QoS metric.
+
+The request path is stepwise (DESIGN.md §2): ``begin_call`` switches
+the context in and prefills the prompt, ``decode_step`` emits one
+token, ``finish_call`` compresses/AoT-swaps the result out.  The
+router runs generations in bounded decode slices and may
+``suspend_call`` / ``resume_call`` between slices — preemption is a
+real, measured context switch riding the ResidencyEngine.  ``callLLM``
+is the Table-1 compat shim over the same path; with default
+``SamplingParams`` (temperature=0 greedy) it is token-for-token
+identical to the pre-stream blocking implementation.
 """
 from __future__ import annotations
 
 import tempfile
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -24,6 +34,7 @@ from repro.core import compression as comp
 from repro.core.context_store import Context, ContextStore, LLMCtxStub  # noqa: F401 (re-export)
 from repro.core.executor import ModelExecutor
 from repro.core.lifecycle import LCTRUQueue, MemoryManager
+from repro.core.requests import GenerationRequest, SamplingParams
 from repro.core.residency import ResidencyEngine
 from repro.core.swap import AsyncSwapper, DiskStore
 from repro.models.api import ModelBase
@@ -69,6 +80,34 @@ class LLMSConfig:
          self.chunked, self.use_disk) = _POLICY_FLAGS[self.policy]
 
 
+@dataclass
+class GenerationState:
+    """One in-flight generation between ``begin_call`` and
+    ``finish_call``.  While ``suspended`` the working cache is swapped
+    out (``cache is None``) and the pending sampled token plus the
+    request's RNG live here, so ``resume_call`` continues the exact
+    decode the preemption interrupted."""
+    ctx: Context
+    request: GenerationRequest
+    sampler: Any
+    prompt_len: int
+    cache: Any = None
+    next_tok: Optional[int] = None          # sampled, not yet emitted
+    generated: List[int] = field(default_factory=list)
+    t_switch: float = 0.0
+    t_assemble: float = 0.0
+    t_infer: float = 0.0
+    t_swapout: float = 0.0
+    n_preempts: int = 0
+    suspended: bool = False
+    done: bool = False
+
+    @property
+    def exhausted(self) -> bool:
+        """No more tokens to emit (budget reached or max_new == 0)."""
+        return self.next_tok is None
+
+
 class LLMService:
     """One shared model + per-app persistent contexts (LLMaaS)."""
 
@@ -86,6 +125,7 @@ class LLMService:
         self.records: List[Dict[str, Any]] = []
         # (cid, cache, epoch) of the last active ctx: working-cache reuse
         self._active: Optional[Tuple[int, Any, int]] = None
+        self._closed = False
 
     @property
     def contexts(self) -> Dict[int, Context]:
@@ -104,68 +144,165 @@ class LLMService:
         return stub
 
     def delLLMCtx(self, stub: LLMCtxStub):
-        self.ctxs.delete(stub.ctx_id)
+        self.ctxs.delete(stub.ctx_id)   # raises on busy: nothing changed
+        # drop the working-cache reuse tuple: a stale (cid, cache, epoch)
+        # for a deleted context would pin the full bf16 cache in memory
+        if self._active is not None and self._active[0] == stub.ctx_id:
+            self._active = None
 
     def bindLLMService(self, app: Any = None) -> "LLMService":
         return self
 
-    def callLLM(self, stub: LLMCtxStub, new_prompt: Sequence[int],
-                max_new_tokens: int = 16) -> Tuple[LLMCtxStub, List[int]]:
+    # ------------------------------------------------------------------ #
+    # stepwise request path: begin / decode / (suspend / resume) / finish
+    # ------------------------------------------------------------------ #
+    def begin_call(self, stub: LLMCtxStub,
+                   request: GenerationRequest) -> GenerationState:
+        """Admit one request on a context: condense on overflow, switch
+        the context in (the measured QoS path), prefill the prompt, and
+        sample the first token.  Nothing is emitted yet — the first
+        ``decode_step`` emits it."""
         ctx = self.ctxs.get(stub.ctx_id)
-        total_new = len(new_prompt) + max_new_tokens
-        assert total_new <= self.exe.n_slots // 2, "exceeds half window"
+        if ctx.busy:
+            # a suspended (slice-preempted) generation owns this context's
+            # token tail; starting another call would let condense/append
+            # rewrite state out from under it.  The router avoids this
+            # ordering (same-context arrivals don't preempt); reaching it
+            # means the app raced two requests on one context.
+            raise RuntimeError(
+                f"ctx {ctx.cid} has a suspended in-flight generation; "
+                "await or cancel its stream before a new call")
+        prompt = np.asarray(request.prompt, np.int32)
+        total_new = len(prompt) + request.max_new_tokens
+        assert total_new <= self.exe.max_request_tokens, "exceeds half window"
         if ctx.n_tokens + total_new > self.exe.n_slots:
             self._condense(ctx, keep=self.exe.n_slots // 2)
 
-        # context switching (the measured QoS metric): missing-state
-        # restore is timed; resident assembly is inference (DESIGN.md §2)
+        st = GenerationState(ctx=ctx, request=request,
+                             sampler=request.sampling.make_sampler(),
+                             prompt_len=len(prompt))
+        self._switch_in(st)
+
+        # inference: extend with the new prompt (prefill)
+        t1 = time.perf_counter()
+        n0 = ctx.n_tokens
+        ctx.tokens[n0:n0 + len(prompt)] = prompt
+        cache, logits, dens = self.exe.extend(st.cache, prompt, n0)
+        self.ctxs.acc_density(ctx, dens, n0 + len(prompt))
+        ctx.n_tokens += len(prompt)
+        st.cache = cache
+        if request.max_new_tokens > 0:
+            st.next_tok = st.sampler(logits)
+        st.t_infer += time.perf_counter() - t1
+        ctx.busy += 1
+        return st
+
+    def decode_step(self, st: GenerationState) -> Optional[int]:
+        """Emit the pending token and (if budget remains) run one decode
+        step to sample the next.  -> the emitted token, or None when the
+        generation is exhausted."""
+        if st.done or st.next_tok is None:
+            return None
+        assert not st.suspended, "resume_call before decode_step"
+        ctx = st.ctx
+        t1 = time.perf_counter()
+        tok = st.next_tok
+        st.generated.append(tok)
+        ctx.tokens[ctx.n_tokens] = tok
+        ctx.n_tokens += 1
+        if len(st.generated) >= st.request.max_new_tokens:
+            st.next_tok = None
+        else:
+            cache, logits, mass = self.exe.decode(st.cache, tok)
+            st.cache = cache
+            self.ctxs.acc_density(ctx, mass, ctx.n_tokens)
+            st.next_tok = st.sampler(logits)
+        st.t_infer += time.perf_counter() - t1
+        return tok
+
+    def suspend_call(self, st: GenerationState):
+        """Preempt an in-flight generation: commit the partial result
+        (compress + AoT swap-out, exactly a switch-out) and drop the
+        cache reference.  The sampled-but-unemitted token stays in the
+        state, so resume continues the interrupted decode."""
+        assert not (st.suspended or st.done)
+        t2 = time.perf_counter()
+        self.res.compress_and_swap_out(st.ctx, st.cache)
+        self.mem.reclaim(0, self.res.evict, locked=set())
+        st.t_swapout += time.perf_counter() - t2
+        self._active = (st.ctx.cid, st.cache, self.res.epoch)
+        st.cache = None
+        st.suspended = True
+        st.n_preempts += 1
+
+    def resume_call(self, st: GenerationState):
+        """Switch a suspended generation's context back in — a real,
+        measured context switch (accumulated into the call's switch_s)."""
+        assert st.suspended and not st.done
+        st.suspended = False
+        self._switch_in(st)
+
+    def finish_call(self, st: GenerationState) -> List[int]:
+        """Compress / AoT swap-out / reclaim (paper §3.2 + §3.4) and
+        append the per-call timing record.  Safe on a suspended state
+        (cancel-after-preempt): the partial result is already out.  The
+        busy/record bookkeeping runs even if the swap-out fails, so an
+        errored call never bricks its context."""
+        ctx = st.ctx
+        try:
+            if not st.suspended:
+                t2 = time.perf_counter()
+                self.res.compress_and_swap_out(ctx, st.cache)
+                self.mem.reclaim(0, self.res.evict, locked=set())
+                st.t_swapout += time.perf_counter() - t2
+                self._active = (ctx.cid, st.cache, self.res.epoch)
+        finally:
+            st.cache = None
+            st.done = True
+            ctx.busy -= 1
+            self.records.append({
+                "ctx": ctx.cid, "switch_s": st.t_switch,
+                "infer_s": st.t_infer + st.t_assemble,
+                "assemble_s": st.t_assemble,
+                "swapout_s": st.t_swapout,
+                "new_tokens": st.prompt_len + len(st.generated),
+                "n_preempts": st.n_preempts,
+                "mem_used": self.mem.used,
+            })
+        return st.generated
+
+    def _switch_in(self, st: GenerationState):
+        """Context switching (the measured QoS metric): missing-state
+        restore is timed; resident assembly is inference (DESIGN.md §2).
+        The working-cache reuse fast path skips the restore entirely."""
+        ctx = st.ctx
         t0 = time.perf_counter()
         reuse = (self._active is not None and self._active[0] == ctx.cid
                  and self._active[2] == self.res.epoch)
         if reuse:
-            cache = self._active[1]
-            t_switch = time.perf_counter() - t0
-            t_assemble = 0.0
+            st.cache = self._active[1]
+            st.t_switch += time.perf_counter() - t0
         else:
-            cache, t_switch = self.res.switch_in(ctx)
-            t_assemble = time.perf_counter() - t0 - t_switch
+            cache, t_sw = self.res.switch_in(ctx)
+            st.cache = cache
+            st.t_switch += t_sw
+            st.t_assemble += time.perf_counter() - t0 - t_sw
 
-        # inference: extend with the new prompt, then decode
-        t1 = time.perf_counter()
-        prompt = np.asarray(new_prompt, np.int32)
-        n0 = ctx.n_tokens
-        ctx.tokens[n0:n0 + len(prompt)] = prompt
-        cache, logits, dens = self.exe.extend(cache, prompt, n0)
-        self.ctxs.acc_density(ctx, dens, n0 + len(prompt))
-        ctx.n_tokens += len(prompt)
-        generated: List[int] = []
-        if max_new_tokens > 0:
-            tok = int(np.argmax(logits))
-            for step in range(max_new_tokens):
-                generated.append(tok)
-                ctx.tokens[ctx.n_tokens] = tok
-                ctx.n_tokens += 1
-                if step == max_new_tokens - 1:
-                    break
-                cache, step_logits, mass = self.exe.decode(cache, tok)
-                self.ctxs.acc_density(ctx, mass, ctx.n_tokens)
-                tok = int(np.argmax(step_logits))
-        t_infer = time.perf_counter() - t1
-
-        # compress / AoT swap-out / reclaim (paper §3.2 + §3.4)
-        t2 = time.perf_counter()
-        self.res.compress_and_swap_out(ctx, cache)
-        self.mem.reclaim(0, self.res.evict, locked=set())
-        t_out = time.perf_counter() - t2
-
-        self._active = (ctx.cid, cache, self.res.epoch)
-        self.records.append({
-            "ctx": ctx.cid, "switch_s": t_switch,
-            "infer_s": t_infer + t_assemble, "assemble_s": t_assemble,
-            "swapout_s": t_out, "new_tokens": len(prompt) + len(generated),
-            "mem_used": self.mem.used,
-        })
-        return stub, generated
+    # ------------------------------------------------------------------ #
+    # Table-1 compat shim: one blocking call over the stepwise path
+    # ------------------------------------------------------------------ #
+    def callLLM(self, stub: LLMCtxStub, new_prompt: Sequence[int],
+                max_new_tokens: int = 16,
+                sampling: Optional[SamplingParams] = None
+                ) -> Tuple[LLMCtxStub, List[int]]:
+        request = GenerationRequest(prompt=new_prompt,
+                                    max_new_tokens=max_new_tokens,
+                                    sampling=sampling or SamplingParams())
+        st = self.begin_call(stub, request)
+        while self.decode_step(st) is not None:
+            pass
+        self.finish_call(st)
+        return stub, st.generated
 
     # scheduler hook (§3.4 prediction-driven AoT swap-out)
     def prepare_switch(self, predicted_cid: int) -> int:
@@ -196,4 +333,16 @@ class LLMService:
         }
 
     def close(self):
+        """Idempotent; flushes pending AoT writes before shutdown so an
+        interrupted swap-out never loses committed chunks."""
+        if self._closed:
+            return
+        self._closed = True
+        self.swapper.flush()
         self.swapper.shutdown()
+
+    def __enter__(self) -> "LLMService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -3,7 +3,7 @@ the multi-app ServiceRouter (compressed-time: arrival gaps are bookkept,
 not slept).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --reduced \
-      --policy llms --contexts 4 --calls 24 --concurrency 2
+      --policy llms --contexts 4 --calls 24 --concurrency 2 --slice-steps 4
 
 ``--concurrency N`` registers N app sessions with the router; each app
 submits its share of the trace from its own thread, so admission is
@@ -11,7 +11,13 @@ genuinely concurrent while model execution stays serial (the paper's
 working-set lock).  ``--priority-mix a:b`` assigns priorities to apps
 round-robin (a foreground apps, then b background apps, repeating);
 the router admits foreground calls ahead of queued background ones and
-reports per-priority latency (queue wait + service).
+reports per-priority latency (queue wait + service) plus TTFT/TBT
+percentiles from the stream timestamps.
+
+``--slice-steps K`` enables decode-slice dispatch: generations run in
+bounded K-step slices and a newly arrived foreground request preempts
+an in-flight background stream mid-generation.  A/B the flag (0 =
+whole-generation dispatch) to see foreground TTFT drop.
 """
 from __future__ import annotations
 
@@ -44,9 +50,14 @@ def parse_priority_mix(mix: str, n_apps: int):
 
 
 def run_trace(router: ServiceRouter, events, n_apps: int = 1,
-              priority_mix: str = "1:1", max_new: int = 8, verbose=False):
+              priority_mix: str = "1:1", max_new: int = 8, verbose=False,
+              pace: float = 0.0):
     """Replay ``events`` through ``router`` with ``n_apps`` submitting
-    apps; contexts are assigned to apps round-robin."""
+    apps; contexts are assigned to apps round-robin.  ``pace`` replays
+    the trace's Poisson arrival gaps in real time (wall seconds per
+    trace second, 0 = submit everything immediately) — with a threaded
+    router and ``slice_steps`` set, paced foreground arrivals land
+    mid-generation and preempt in-flight background streams."""
     apps = [router.register_app(f"app{i}", prio) for i, prio in
             enumerate(parse_priority_mix(priority_mix, n_apps))]
     session_of = {}                 # ctx_id -> AppSession
@@ -57,13 +68,19 @@ def run_trace(router: ServiceRouter, events, n_apps: int = 1,
             session_of[ev.ctx_id] = sess
             stubs[ev.ctx_id] = sess.new_ctx()
 
-    futs = []
+    streams = []
+    t0 = time.perf_counter()
 
     def submit_all(sess):
         for ev in events:
             if session_of[ev.ctx_id] is sess:
-                futs.append(sess.submit(stubs[ev.ctx_id], ev.prompt.tolist(),
-                                        max_new_tokens=max_new))
+                if pace > 0:
+                    lag = ev.time * pace - (time.perf_counter() - t0)
+                    if lag > 0:
+                        time.sleep(lag)
+                streams.append(sess.stream(stubs[ev.ctx_id],
+                                           ev.prompt.tolist(),
+                                           max_new_tokens=max_new))
 
     if router.started and n_apps > 1:
         threads = [threading.Thread(target=submit_all, args=(s,))
@@ -76,16 +93,20 @@ def run_trace(router: ServiceRouter, events, n_apps: int = 1,
         for sess in apps:
             submit_all(sess)
     router.drain()
-    errors = [f.exception() for f in futs if f.exception() is not None]
+    errors = [s.error for s in streams if s.error is not None]
     for e in errors[:3]:
         print(f"  !! dropped call: {type(e).__name__}: {e}")
 
     if verbose:
         for r in router.call_records:
+            ttft = r.get("ttft_s")
             print(f"  {r['app']:6s} prio={r['priority']} ctx={r['ctx']}"
                   f" wait={r['wait_s']*1e3:7.2f}ms"
                   f" switch={r['switch_s']*1e3:7.2f}ms"
-                  f" service={r['service_s']*1e3:7.1f}ms")
+                  f" service={r['service_s']*1e3:7.1f}ms"
+                  + (f" ttft={ttft*1e3:7.2f}ms" if ttft is not None else "")
+                  + (f" preempts={r['n_preempts']}"
+                     if r.get("n_preempts") else ""))
     stats = router.svc.stats()
     stats["router"] = router.stats()
     stats["failed_calls"] = len(errors)
@@ -108,6 +129,12 @@ def main():
                     help="number of app sessions submitting the trace")
     ap.add_argument("--priority-mix", default="1:1",
                     help="fg:bg app ratio, assigned round-robin")
+    ap.add_argument("--slice-steps", type=int, default=0,
+                    help="decode-slice length K (0 = whole-generation "
+                         "dispatch; >0 enables mid-generation preemption)")
+    ap.add_argument("--pace", type=float, default=0.0,
+                    help="wall seconds per trace second when replaying "
+                         "arrival gaps (0 = compressed time)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -118,20 +145,21 @@ def main():
     sc = LLMSConfig(policy=args.policy, max_ctx_len=args.max_ctx,
                     memory_budget=int(args.budget_mib * 2**20),
                     swap_dir=tempfile.mkdtemp(prefix="llms_serve_"))
-    svc = LLMService(model, params, sc)
-    if sc.use_pipeline:
-        svc.profile_pipeline()
     events = synthesize(args.contexts, args.calls, cfg.vocab,
                         pattern=args.pattern, scale=0.1, seed=args.seed)
-    router = ServiceRouter(svc, predict=True, start=args.concurrency > 1)
-    t0 = time.time()
-    stats = run_trace(router, events, n_apps=max(1, args.concurrency),
-                      priority_mix=args.priority_mix,
-                      max_new=args.max_new, verbose=True)
-    stats["wall_s"] = time.time() - t0
-    print(json.dumps(stats, indent=1))
-    router.shutdown()
-    svc.close()
+    with LLMService(model, params, sc) as svc:
+        if sc.use_pipeline:
+            svc.profile_pipeline()
+        with ServiceRouter(svc, predict=True, start=args.concurrency > 1,
+                           slice_steps=args.slice_steps) as router:
+            t0 = time.time()
+            stats = run_trace(router, events,
+                              n_apps=max(1, args.concurrency),
+                              priority_mix=args.priority_mix,
+                              max_new=args.max_new, verbose=True,
+                              pace=args.pace)
+            stats["wall_s"] = time.time() - t0
+            print(json.dumps(stats, indent=1))
 
 
 if __name__ == "__main__":

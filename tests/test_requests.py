@@ -1,0 +1,112 @@
+"""Request/stream protocol unit tests (no model): SamplingParams
+samplers and GenerationStream semantics."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.requests import (GenerationRequest, GenerationStream,
+                                 SamplingParams)
+
+
+# --------------------------------------------------------------------- #
+# SamplingParams
+# --------------------------------------------------------------------- #
+def test_default_sampler_is_greedy_argmax():
+    """temperature=0 (the default) must reproduce the old np.argmax
+    behaviour exactly — the compat guarantee of the redesign."""
+    sampler = SamplingParams().make_sampler()
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        logits = rng.randn(64).astype(np.float32)
+        assert sampler(logits) == int(np.argmax(logits))
+
+
+def test_seeded_sampler_is_reproducible():
+    logits = np.random.RandomState(1).randn(32)
+    a = SamplingParams(temperature=0.7, seed=42).make_sampler()
+    b = SamplingParams(temperature=0.7, seed=42).make_sampler()
+    seq_a = [a(logits) for _ in range(16)]
+    seq_b = [b(logits) for _ in range(16)]
+    assert seq_a == seq_b
+    assert all(0 <= t < 32 for t in seq_a)
+
+
+def test_top_k_restricts_support():
+    logits = np.array([0.0, 10.0, 9.0, -5.0, 1.0])
+    sampler = SamplingParams(temperature=1.0, top_k=2, seed=0).make_sampler()
+    draws = {sampler(logits) for _ in range(64)}
+    assert draws <= {1, 2}          # only the top-2 ids are reachable
+
+
+def test_top_k_one_equals_argmax():
+    sampler = SamplingParams(temperature=5.0, top_k=1, seed=3).make_sampler()
+    rng = np.random.RandomState(2)
+    for _ in range(10):
+        logits = rng.randn(16)
+        assert sampler(logits) == int(np.argmax(logits))
+
+
+# --------------------------------------------------------------------- #
+# GenerationStream
+# --------------------------------------------------------------------- #
+def _stream(max_new=8):
+    return GenerationStream(0, GenerationRequest(prompt=[1, 2],
+                                                 max_new_tokens=max_new))
+
+
+def test_stream_push_result_and_timestamps():
+    s = _stream()
+    for tok in (5, 6, 7):
+        s.push(tok)
+    s.finish()
+    assert s.result() == [5, 6, 7]
+    assert s.done and not s.cancelled and s.error is None
+    assert s.ttft() is not None and s.ttft() >= 0
+    assert len(s.tbt()) == 2
+    assert all(dt >= 0 for dt in s.tbt())
+    assert s.t_done >= s.t_first_token >= s.t_submit
+
+
+def test_stream_iteration_across_threads():
+    s = _stream()
+    seen = []
+
+    def consume():
+        for tok in s:
+            seen.append(tok)
+    t = threading.Thread(target=consume)
+    t.start()
+    for tok in range(4):
+        s.push(tok)
+    s.finish()
+    t.join(10.0)
+    assert seen == [0, 1, 2, 3]
+
+
+def test_stream_cancel_flags():
+    s = _stream()
+    assert s.cancel()               # not yet finished -> True
+    assert s.cancel_requested and not s.done
+    s.push(1)
+    s.finish(cancelled=True)
+    assert s.cancelled and s.result() == [1]
+    assert not s.cancel()           # already finished -> False
+
+
+def test_stream_error_raised_from_result_and_iter():
+    s = _stream()
+    s.push(9)
+    s.finish(error=ValueError("boom"))
+    with pytest.raises(ValueError):
+        s.result()
+    it = iter(s)
+    assert next(it) == 9            # tokens before the error still yield
+    with pytest.raises(ValueError):
+        next(it)
+
+
+def test_stream_result_timeout():
+    s = _stream()
+    with pytest.raises(TimeoutError):
+        s.result(timeout=0.01)

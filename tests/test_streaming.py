@@ -1,0 +1,419 @@
+"""Streaming/preemptible generation path: stepwise begin/decode/finish
+parity with callLLM, decode-slice preemption QoS, cancellation leaving
+contexts consistent, and the lifecycle satellites (routed system
+prompts, busy-delete guard, close idempotency, context managers)."""
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from conftest import tiny_model
+from repro.core.requests import GenerationRequest, SamplingParams
+from repro.core.scheduler import ServiceRouter
+from repro.core.service import LLMSConfig, LLMService
+from repro.trace.synth import synthesize
+
+
+def make_svc(policy="llms", budget=10_000_000, max_ctx=128):
+    cfg, model, params = tiny_model("smollm-360m")
+    sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx,
+                    memory_budget=budget, swap_dir=tempfile.mkdtemp())
+    return LLMService(model, params, sc), cfg
+
+
+# --------------------------------------------------------------------- #
+# stepwise decomposition ≡ the blocking Table-1 call
+# --------------------------------------------------------------------- #
+def test_begin_decode_finish_matches_callLLM():
+    """Driving begin_call/decode_step/finish_call by hand produces the
+    same tokens and context state as the compat shim (both greedy)."""
+    svc_a, cfg = make_svc()
+    svc_b, _ = make_svc()
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, 10).tolist() for _ in range(4)]
+    with svc_a, svc_b:
+        sa, sb = svc_a.newLLMCtx(), svc_b.newLLMCtx()
+        for p in prompts:
+            _, gen_a = svc_a.callLLM(sa, p, max_new_tokens=3)
+            st = svc_b.begin_call(sb, GenerationRequest(prompt=p,
+                                                        max_new_tokens=3))
+            gen_b = []
+            while True:
+                tok = svc_b.decode_step(st)
+                if tok is None:
+                    break
+                gen_b.append(tok)
+            svc_b.finish_call(st)
+            assert gen_a == gen_b == st.generated
+        ctx_a = svc_a.contexts[sa.ctx_id]
+        ctx_b = svc_b.contexts[sb.ctx_id]
+        assert ctx_a.n_tokens == ctx_b.n_tokens
+        np.testing.assert_array_equal(ctx_a.tokens[:ctx_a.n_tokens],
+                                      ctx_b.tokens[:ctx_b.n_tokens])
+
+
+def test_routed_stream_matches_direct_callLLM():
+    """The router's sliced stream path (no preemption) is token-for-token
+    the direct greedy path."""
+    svc_a, cfg = make_svc()
+    svc_b, _ = make_svc()
+    events = synthesize(3, 8, cfg.vocab, pattern="markov", scale=0.03,
+                        seed=5)
+    with svc_a, svc_b:
+        stubs_a = {}
+        direct = []
+        for ev in events:
+            if ev.ctx_id not in stubs_a:
+                stubs_a[ev.ctx_id] = svc_a.newLLMCtx()
+            direct.append(svc_a.callLLM(stubs_a[ev.ctx_id],
+                                        ev.prompt.tolist(),
+                                        max_new_tokens=4)[1])
+        with ServiceRouter(svc_b, predict=True, slice_steps=2) as router:
+            app = router.register_app("a", "fg")
+            stubs_b, streams = {}, []
+            for ev in events:
+                if ev.ctx_id not in stubs_b:
+                    stubs_b[ev.ctx_id] = app.new_ctx()
+                streams.append(app.stream(stubs_b[ev.ctx_id],
+                                          ev.prompt.tolist(),
+                                          max_new_tokens=4))
+            router.drain()
+            routed = [s.result() for s in streams]
+    assert direct == routed
+
+
+def test_sampled_generation_reproducible():
+    """temperature>0 with a seed: same (service, request) -> same tokens;
+    the RNG is per-request, not global."""
+    sp = SamplingParams(temperature=0.8, top_k=8, seed=42)
+    outs = []
+    for _ in range(2):
+        svc, cfg = make_svc()
+        with svc:
+            stub = svc.newLLMCtx()
+            prompt = np.random.RandomState(3).randint(
+                1, cfg.vocab, 10).tolist()
+            outs.append(svc.callLLM(stub, prompt, max_new_tokens=6,
+                                    sampling=sp)[1])
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 6
+
+
+# --------------------------------------------------------------------- #
+# decode-slice preemption (the Fig. 9-style QoS win)
+# --------------------------------------------------------------------- #
+def test_slice_preemption_interleaves_inline():
+    """Deterministic slice protocol: a paused background stream resumes
+    AFTER a later-admitted foreground request, and the foreground's
+    first token lands before the background's tail tokens."""
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(7)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        fg = router.register_app("chat", "foreground")
+        bg = router.register_app("agent", "background")
+        bg_stub, fg_stub = bg.new_ctx(), fg.new_ctx()
+        bg_s = bg.stream(bg_stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                         max_new_tokens=12)
+        router.pump()                       # one slice: 2 tokens, suspended
+        assert bg_s.tokens and len(bg_s.tokens) == 2 and not bg_s.done
+        fg_s = fg.stream(fg_stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                         max_new_tokens=3)
+        router.drain()                      # fg outranks the paused bg
+        assert fg_s.result() and bg_s.result() is not None
+        assert len(bg_s.tokens) == 12 and len(fg_s.tokens) == 3
+        # fg finished while bg was suspended:
+        assert fg_s.t_done < bg_s.token_times[2]
+        # resume was a real, accounted context switch
+        bg_rec = [r for r in svc.records if r["ctx"] == bg_stub.ctx_id][-1]
+        assert bg_rec["n_preempts"] >= 1
+        assert bg_rec["new_tokens"] == 8 + 12
+
+
+def test_foreground_ttft_lower_under_slicing():
+    """Acceptance: 1 fg + 1 bg app; fg TTFT under decode-slice preemption
+    is strictly lower than under whole-generation dispatch (the fg call
+    arrives while a long bg generation is in flight)."""
+    def fg_ttft(slice_steps):
+        svc, cfg = make_svc()
+        rng = np.random.RandomState(11)
+        with svc, ServiceRouter(svc, predict=False, start=True,
+                                slice_steps=slice_steps) as router:
+            fg = router.register_app("chat", "foreground")
+            bg = router.register_app("agent", "background")
+            fg_stub, bg_stub = fg.new_ctx(), bg.new_ctx()
+            bg_s = bg.stream(bg_stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                             max_new_tokens=48)
+            deadline = time.time() + 120
+            while bg_s.t_first_token is None:     # bg decode underway
+                assert time.time() < deadline, "bg stream never started"
+                time.sleep(0.001)
+            fg_s = fg.stream(fg_stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                             max_new_tokens=4)
+            fg_s.result(timeout=120)
+            bg_s.result(timeout=120)
+            router.drain()
+            return fg_s, bg_s, router.preemptions
+
+    fg_whole, bg_whole, pre_whole = fg_ttft(0)
+    fg_slice, bg_slice, pre_slice = fg_ttft(2)
+    assert pre_whole == 0
+    assert pre_slice >= 1 and bg_slice.n_preempts >= 1
+    # sliced: fg finished while bg still decoding; whole: fg waited it out
+    assert fg_slice.t_done < bg_slice.t_done
+    assert fg_whole.t_first_token >= bg_whole.t_done
+    assert fg_slice.ttft() < fg_whole.ttft()
+    assert len(bg_slice.tokens) == 48       # preemption loses no tokens
+
+
+# --------------------------------------------------------------------- #
+# cancellation
+# --------------------------------------------------------------------- #
+def test_future_cancel_queued_inline():
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(1)
+    with svc, ServiceRouter(svc, predict=False) as router:
+        app = router.register_app("a", "fg")
+        s1, s2 = app.new_ctx(), app.new_ctx()
+        f1 = app.submit(s1, rng.randint(1, cfg.vocab, 6).tolist(),
+                        max_new_tokens=2)
+        f2 = app.submit(s2, rng.randint(1, cfg.vocab, 6).tolist(),
+                        max_new_tokens=2)
+        assert f2.cancel()
+        router.drain()
+        assert len(f1.result()[1]) == 2
+        assert f2.cancelled()
+        assert svc.contexts[s2.ctx_id].n_tokens == 0   # never ran
+        assert len(router.call_records) == 1
+
+
+def test_future_cancel_queued_threaded():
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(2)
+    with svc, ServiceRouter(svc, predict=False, start=True) as router:
+        app = router.register_app("a", "fg")
+        s1, s2 = app.new_ctx(), app.new_ctx()
+        f1 = app.submit(s1, rng.randint(1, cfg.vocab, 8).tolist(),
+                        max_new_tokens=48)             # keeps dispatcher busy
+        f2 = app.submit(s2, rng.randint(1, cfg.vocab, 6).tolist(),
+                        max_new_tokens=2)
+        won = f2.cancel()
+        router.drain()
+        assert len(f1.result(120)[1]) == 48
+        if won:                     # cancel beat the dispatcher (typical)
+            assert f2.cancelled()
+            assert svc.contexts[s2.ctx_id].n_tokens == 0
+        else:                       # raced: the job ran to completion
+            assert len(f2.result(120)[1]) == 2
+
+
+def test_stream_cancel_mid_generation_consistent():
+    """GenerationStream.cancel() between slices: the tokens/chunks left
+    in the context match exactly what was decoded, and the context keeps
+    working afterwards."""
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(3)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        app = router.register_app("a", "fg")
+        stub = app.new_ctx()
+        prompt = rng.randint(1, cfg.vocab, 12).tolist()
+        s = app.stream(stub, prompt, max_new_tokens=10)
+        router.pump()                   # one slice: 2 tokens, suspended
+        assert s.cancel()
+        router.drain()
+        assert s.done and s.cancelled
+        toks = s.result()
+        assert len(toks) == 2
+        ctx = svc.contexts[stub.ctx_id]
+        assert ctx.busy == 0
+        assert ctx.n_tokens == len(prompt) + len(toks)
+        np.testing.assert_array_equal(
+            ctx.tokens[:ctx.n_tokens],
+            np.asarray(prompt + toks, np.int32))
+        # committed chunks cover exactly the decoded prefix
+        assert sum(m.n_covered for m in ctx.chunks.values()) == ctx.n_tokens
+        # the per-call record reflects the partial generation
+        assert svc.records[-1]["new_tokens"] == len(prompt) + len(toks)
+        # context still serves
+        _, gen = app.call(stub, rng.randint(1, cfg.vocab, 6).tolist(),
+                          max_new_tokens=2)
+        assert len(gen) == 2
+        app.del_ctx(stub)
+
+
+def test_delete_busy_context_refused():
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(4)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        app = router.register_app("a", "fg")
+        stub = app.new_ctx()
+        s = app.stream(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                       max_new_tokens=8)
+        router.pump()                   # suspended mid-generation
+        with pytest.raises(RuntimeError):
+            app.del_ctx(stub)
+        # a failed delete must have NO side effects: the exact-cache
+        # resume path (the _active reuse tuple) survives
+        assert svc._active is not None and svc._active[0] == stub.ctx_id
+        s.cancel()
+        router.drain()
+        app.del_ctx(stub)               # after cancel: fine
+        assert stub.ctx_id not in svc.contexts
+
+
+def test_begin_call_refuses_overlapping_generation():
+    """A request that jumps ahead of a suspended generation on the SAME
+    context is refused cleanly (no condense/append corruption); the
+    suspended stream still completes."""
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(9)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        bg = router.register_app("agent", "background")
+        stub = bg.new_ctx()
+        s1 = bg.stream(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                       max_new_tokens=8)
+        router.pump()                   # s1 suspended mid-generation
+        s2 = bg.stream(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                       max_new_tokens=2, priority="foreground")
+        router.drain()
+        assert isinstance(s2.error, RuntimeError)
+        assert len(s1.result()) == 8
+        ctx = svc.contexts[stub.ctx_id]
+        assert ctx.busy == 0
+        assert ctx.n_tokens == 8 + 8    # s2 contributed nothing
+
+
+def test_same_context_job_does_not_trigger_preemption():
+    """The preemption predicate exempts a higher-priority job that
+    targets the running job's own context (it could not legally overlap
+    a suspended generation anyway)."""
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(10)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        fg = router.register_app("chat", "foreground")
+        bg = router.register_app("agent", "background")
+        stub, other = bg.new_ctx(), fg.new_ctx()
+        fg.stream(stub, rng.randint(1, cfg.vocab, 6).tolist(),
+                  max_new_tokens=2)     # fg job on the SAME ctx, queued
+        assert not router._higher_priority_waiting(1, stub.ctx_id)
+        assert router._higher_priority_waiting(1, other.ctx_id)
+        router.drain()
+
+
+def test_router_exit_aborts_on_exception():
+    """An exception inside the with-body must NOT first drain (execute)
+    the remaining queue; queued jobs are cancelled instead."""
+    svc, cfg = make_svc()
+    with svc:
+        with pytest.raises(ValueError):
+            with ServiceRouter(svc, predict=False) as router:
+                app = router.register_app("a", "fg")
+                stub = app.new_ctx()
+                fut = app.submit(stub, [1, 2, 3], max_new_tokens=2)
+                raise ValueError("boom")
+        assert fut.cancelled()
+        assert svc.contexts[stub.ctx_id].n_tokens == 0  # never ran
+
+
+# --------------------------------------------------------------------- #
+# streaming visibility
+# --------------------------------------------------------------------- #
+def test_stream_tokens_arrive_incrementally():
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(5)
+    with svc, ServiceRouter(svc, predict=False, start=True) as router:
+        app = router.register_app("a", "fg")
+        stub = app.new_ctx()
+        s = app.stream(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                       max_new_tokens=6)
+        seen = list(s)                  # blocks per token as they decode
+        assert seen == s.result() and len(seen) == 6
+        assert s.ttft() is not None and s.ttft() >= 0
+        assert len(s.tbt()) == 5
+        st = router.stats()["foreground"]
+        assert st["ttft_mean_s"] >= 0
+        assert st["ttft_p99_s"] >= st["ttft_p50_s"] >= 0
+
+
+# --------------------------------------------------------------------- #
+# admission ordering extras: deadlines + per-request priority override
+# --------------------------------------------------------------------- #
+def test_deadline_orders_same_priority():
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(6)
+    with svc, ServiceRouter(svc, predict=False) as router:
+        app = router.register_app("a", "fg")
+        c1, c2 = app.new_ctx(), app.new_ctx()
+        app.stream(c1, rng.randint(1, cfg.vocab, 6).tolist(),
+                   max_new_tokens=2)                      # no deadline
+        app.stream(c2, rng.randint(1, cfg.vocab, 6).tolist(),
+                   max_new_tokens=2,
+                   deadline=time.perf_counter() + 0.5)    # EDF: runs first
+        router.drain()
+        ran = [r["ctx"] for r in router.call_records]
+        assert ran == [c2.ctx_id, c1.ctx_id]
+
+
+def test_request_priority_overrides_session():
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(7)
+    with svc, ServiceRouter(svc, predict=False) as router:
+        bg = router.register_app("agent", "background")
+        c1, c2 = bg.new_ctx(), bg.new_ctx()
+        bg.stream(c1, rng.randint(1, cfg.vocab, 6).tolist(),
+                  max_new_tokens=2)
+        bg.stream(c2, rng.randint(1, cfg.vocab, 6).tolist(),
+                  max_new_tokens=2, priority="foreground")
+        router.drain()
+        ran = [r["ctx"] for r in router.call_records]
+        assert ran == [c2.ctx_id, c1.ctx_id]
+        assert router.call_records[0]["priority"] == 0
+
+
+# --------------------------------------------------------------------- #
+# lifecycle satellites
+# --------------------------------------------------------------------- #
+def test_del_ctx_clears_active_working_cache():
+    """Regression: delLLMCtx used to leave the deleted context's bf16
+    working cache pinned in the _active reuse tuple."""
+    svc, cfg = make_svc()
+    rng = np.random.RandomState(8)
+    with svc:
+        stub = svc.newLLMCtx()
+        svc.callLLM(stub, rng.randint(1, cfg.vocab, 8).tolist(),
+                    max_new_tokens=2)
+        assert svc._active is not None and svc._active[0] == stub.ctx_id
+        svc.delLLMCtx(stub)
+        assert svc._active is None
+        # deleting a NON-active context leaves the reuse tuple alone
+        a, b = svc.newLLMCtx(), svc.newLLMCtx()
+        svc.callLLM(a, rng.randint(1, cfg.vocab, 8).tolist(), 2)
+        svc.callLLM(b, rng.randint(1, cfg.vocab, 8).tolist(), 2)
+        svc.delLLMCtx(a)
+        assert svc._active is not None and svc._active[0] == b.ctx_id
+
+
+def test_system_prompt_routed_through_router():
+    """newLLMCtx(system_prompt=...) encodes through the router's record
+    and prediction path, not behind its back."""
+    svc, cfg = make_svc()
+    with svc, ServiceRouter(svc, predict=True) as router:
+        app = router.register_app("a", "fg")
+        stub = app.new_ctx(system_prompt=[1, 2, 3, 4])
+        assert svc.contexts[stub.ctx_id].n_tokens == 4
+        assert len(router.call_records) == 1
+        assert router.call_records[0]["ctx"] == stub.ctx_id
+        assert router.predictor.last == stub.ctx_id
+
+
+def test_close_idempotent_and_context_managers():
+    svc, cfg = make_svc()
+    with svc:
+        with ServiceRouter(svc, predict=False) as router:
+            app = router.register_app("a", "fg")
+            stub = app.new_ctx()
+            app.call(stub, [1, 2, 3], max_new_tokens=2)
+        with pytest.raises(RuntimeError):       # router is shut down
+            app.submit(stub, [4], max_new_tokens=1)
+    svc.close()
+    svc.close()                                 # idempotent
