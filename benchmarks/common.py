@@ -47,13 +47,13 @@ def bench_model(arch: str = "llama2-7b"):
 
 def make_service(policy: str, budget: int, max_ctx: int = 256,
                  chunk_tokens: int = 16, arch: str = "llama2-7b",
-                 profile: bool = True, ratio_global: float = 0.5
-                 ) -> LLMService:
+                 profile: bool = True, ratio_global: float = 0.5,
+                 decode_batch: int = 1) -> LLMService:
     cfg, model, params = bench_model(arch)
     set_disk_throttle(DISK_BW, DISK_LAT)
     sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx,
                     chunk_tokens=chunk_tokens, memory_budget=budget,
-                    ratio_global=ratio_global,
+                    ratio_global=ratio_global, decode_batch=decode_batch,
                     swap_dir=tempfile.mkdtemp(prefix=f"llms_{policy}_"))
     svc = LLMService(model, params, sc)
     if profile and sc.use_pipeline:

@@ -21,9 +21,10 @@ from repro.trace.synth import synthesize
 
 
 def run(policy: str, events, model, params, budget: int,
-        slice_steps: int = 0):
+        slice_steps: int = 0, decode_batch: int = 1):
     with LLMService(model, params, LLMSConfig(
             policy=policy, max_ctx_len=128, memory_budget=budget,
+            decode_batch=decode_batch,
             swap_dir=tempfile.mkdtemp())) as svc:
         if svc.cfg.use_pipeline:
             svc.profile_pipeline()
@@ -65,6 +66,9 @@ def main():
     ap.add_argument("--calls", type=int, default=16)
     ap.add_argument("--slice-steps", type=int, default=2,
                     help="decode-slice length (0 = whole-generation)")
+    ap.add_argument("--decode-batch", type=int, default=1,
+                    help="decode slots: queued generations batch up to "
+                         "this many per jitted step")
     args = ap.parse_args()
 
     cfg = reduced(get_config("llama2-7b"))
@@ -76,7 +80,8 @@ def main():
     budget = 30_000
     for policy in ("llms", args.policy):
         st = run(policy, events, model, params, budget,
-                 slice_steps=args.slice_steps)
+                 slice_steps=args.slice_steps,
+                 decode_batch=args.decode_batch)
         print(f"{policy:10s} mean switch {st['switch_mean_s']*1e3:8.3f} ms  "
               f"p99 {st['switch_p99_s']*1e3:8.3f} ms  "
               f"mem {st['mem_used']:>8d} B")

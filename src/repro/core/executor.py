@@ -1,23 +1,32 @@
 """Model executor — the jitted entry points of the serving stack.
 
 Layer 1 of the four-layer design (DESIGN.md §1): owns the bf16 working
-cache, the power-of-two bucket/padding logic that keeps jit compilation
-counts bounded, and the process-wide ``_JIT_CACHE`` shared across
-service instances of the same (model, window) so benchmark sweeps don't
-recompile.  Everything above (residency, scheduler) treats this layer
-as "run the model on these tokens/positions"; nothing here knows about
+cache — ``decode_batch`` independent slot caches, so up to B contexts
+are simultaneously hot — the power-of-two bucket/padding logic that
+keeps jit compilation counts bounded (token buckets for prefill, batch
+buckets for the batched decode entry), and the process-wide
+``_JIT_CACHE`` shared across service instances of the same
+(model-fingerprint, window) so benchmark sweeps don't recompile.
+Everything above (residency, scheduler) treats this layer as "run the
+model on these tokens/positions"; nothing here knows about
 chunks-on-disk, budgets, or apps.
 
-``extend`` (prefill) and ``decode`` (one token) are the stepwise entry
-points the request/stream protocol is built on: ``LLMService`` drives
-one ``decode`` per ``decode_step`` so the router can slice generations
-and preempt between slices (DESIGN.md §2).
+``extend`` (prefill), ``decode`` (one token, one slot) and
+``decode_many`` (one token for each of B slots in a single jitted
+``[B, 1]`` step) are the stepwise entry points the request/stream
+protocol is built on: ``LLMService`` drives one decode round per
+``decode_step``/``decode_step_batch`` so the router can slice
+generations, batch compatible contexts, and preempt between slices
+(DESIGN.md §2).
 """
 from __future__ import annotations
 
 import functools
+import hashlib
 import math
-from typing import Any, Dict, List, Sequence, Tuple
+import weakref
+from collections import OrderedDict
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,14 +36,57 @@ from repro.core.chunks import ChunkCodec
 
 Array = jax.Array
 
-# (model-id, window, n_sinks, family, chunk_tokens) -> jitted callables.
-# Shared process-wide so sweeps over policies/budgets reuse compilations.
-_JIT_CACHE: Dict[Tuple, Any] = {}
+# (model-fingerprint, window, n_sinks, family, chunk_tokens[, entry])
+# -> jitted callables.  Shared process-wide so sweeps over policies /
+# budgets reuse compilations.  Keys use a STABLE content fingerprint of
+# (config, param treedef/shapes/dtypes) — never ``id(model)``: a dead
+# model's id can be reused by a new object, which would silently hand it
+# callables closing over the old model — and the cache is LRU-bounded so
+# long sweeps over many distinct models can't grow it without bound.
+_JIT_CACHE: "OrderedDict[Tuple, Any]" = OrderedDict()
+_JIT_CACHE_MAX = 64
+
+# model object -> fingerprint memo.  Weak keys: memoizing must not keep
+# retired models (and the params they map to) alive.
+_FPRINT_MEMO: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _jit_cache_get(key):
+    val = _JIT_CACHE.get(key)
+    if val is not None:
+        _JIT_CACHE.move_to_end(key)
+    return val
+
+
+def _jit_cache_put(key, val):
+    _JIT_CACHE[key] = val
+    _JIT_CACHE.move_to_end(key)
+    while len(_JIT_CACHE) > _JIT_CACHE_MAX:
+        _JIT_CACHE.popitem(last=False)
+
+
+def model_fingerprint(model, params) -> str:
+    """Stable identity of the jitted computation: model class + full
+    config + parameter tree structure/shapes/dtypes.  Two models with
+    the same fingerprint lower to identical HLO, so sharing their cache
+    entries is sound; two models that differ in any of these never
+    collide (even if ``id()`` is reused after a GC)."""
+    fp = _FPRINT_MEMO.get(model)
+    if fp is None:
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        sig = (type(model).__name__, repr(model.cfg), str(treedef),
+               tuple((tuple(l.shape), str(l.dtype)) for l in leaves))
+        fp = hashlib.sha1(repr(sig).encode()).hexdigest()
+        _FPRINT_MEMO[model] = fp
+    return fp
+
 
 # The pipelined recompute scan pulls per-layer I/O data through an
 # ordered io_callback; the active LayerFeed is published here by the
 # residency engine just before dispatch (single-threaded by design —
-# the scheduler serializes all model execution).
+# the scheduler serializes all model execution) and cleared when the
+# dispatch completes, so no stale feed (or the chunk buffers it holds)
+# outlives its restore.
 _ACTIVE_FEED = None
 
 
@@ -64,16 +116,24 @@ class ModelExecutor:
         self.codec = ChunkCodec(mc.family, self.cs)
         self.recomputable = mc.family in ("dense", "mla_moe")
 
-        # working cache: one active context at a time (paper's WS lock)
+        # working cache: decode_batch independent slot caches (the
+        # paper's working-set lock generalized to a slot table); each
+        # slot is a batch-1 cache restored/switched independently, and
+        # decode_many stacks the hot slots into one [B, 1] jitted step.
+        self.decode_slots = max(1, int(getattr(cfg, "decode_batch", 1) or 1))
+        self.can_batch_decode = bool(
+            getattr(model, "supports_batched_decode", False))
         self.tok_buckets = _pow2_buckets(self.cs, self.n_slots)
         self.io_buckets = _pow2_buckets(1, max(self.n_slots // self.cs, 1))
+        self.batch_buckets = _pow2_buckets(1, self.decode_slots)
         self.s_work = self.n_slots + self.tok_buckets[-1]
         self.pad_slot = self.s_work - 1
         self.work_cache = model.init_cache(1, self.s_work)
         self._zero_cache = self.work_cache
 
-        ck = (id(model), cfg.window, cfg.n_sinks, mc.family, self.cs)
-        cached = _JIT_CACHE.get(ck)
+        self._fp = model_fingerprint(model, params)
+        ck = (self._fp, cfg.window, cfg.n_sinks, mc.family, self.cs)
+        cached = _jit_cache_get(ck)
         if cached is None:
             cw = dict(window=cfg.window, n_sinks=cfg.n_sinks)
             cached = {
@@ -90,7 +150,7 @@ class ModelExecutor:
                 "scatter": jax.jit(self.codec.scatter),
                 "setpos": jax.jit(lambda c, p: {**c, "pos": p}),
             }
-            _JIT_CACHE[ck] = cached
+            _jit_cache_put(ck, cached)
         self.extend_fn = cached["extend"]
         self.extend_nod_fn = cached["extend_nod"]
         self.decode_fn = cached["decode"]
@@ -156,25 +216,132 @@ class ModelExecutor:
         return (out.cache, np.asarray(out.logits[0]),
                 np.asarray(mass[0], np.float64))
 
+    # -- multi-context batched decode --------------------------------- #
+    def begin_batch(self, caches: Sequence[Any]) -> "BatchRun":
+        """Open a persistent batched-decode run over the given slot
+        caches (see ``BatchRun``)."""
+        assert self.can_batch_decode and len(caches) > 1
+        return BatchRun(self, caches)
+
+    def decode_many(self, caches: Sequence[Any], toks: Sequence[int]
+                    ) -> List[Tuple[Any, np.ndarray, np.ndarray]]:
+        """One decode step for each slot: slot i's cache advances by its
+        token ``toks[i]`` at its own position, in a single jitted
+        ``[B, 1]`` step.  One-shot convenience over ``begin_batch`` —
+        steady-state callers (``LLMService.decode_step_batch``) keep the
+        ``BatchRun`` open across rounds instead, so the merge/split
+        copies are paid per membership change, not per token.  Models
+        without per-row position support fall back to a serial loop.
+        -> list of (cache', logits, density-mass) per slot, same order.
+        """
+        n = len(caches)
+        if n == 1 or not self.can_batch_decode:
+            return [self.decode(c, t) for c, t in zip(caches, toks)]
+        run = self.begin_batch(caches)
+        logits, mass = run.step(toks)
+        outs = run.split()
+        return [(outs[i], logits[i], mass[i]) for i in range(n)]
+
+    def _batch_fns(self, nb: int):
+        """(merge, step, split) jitted callables for batch bucket nb."""
+        ck = (self._fp, self.cfg.window, self.cfg.n_sinks,
+              self.model.cfg.family, self.cs, "batch", nb)
+        fns = _jit_cache_get(ck)
+        if fns is None:
+            model = self.model
+            cw = dict(window=self.cfg.window, n_sinks=self.cfg.n_sinks)
+            # unroll the layer scan in the batched step: XLA CPU's rolled
+            # scan shuffles the full multi-row cache every iteration and
+            # dominates the step (~5x on the bench model); cap the unroll
+            # so very deep models keep bounded compile times
+            if getattr(model, "supports_batched_decode", False):
+                L = model.cfg.n_layers
+                cw["unroll"] = L if L <= 48 else 1
+            leaves = [k for k in self._zero_cache if k != "pos"]
+
+            def merge(caches):
+                out = {name: jnp.concatenate(
+                    [c[name] for c in caches], axis=1) for name in leaves}
+                out["pos"] = jnp.stack([c["pos"] for c in caches])
+                return out
+
+            def step(params, toks, merged):
+                out, mass = model.decode_step(
+                    params, toks, merged, want_density=True, **cw)
+                return out.cache, out.logits, mass
+
+            def split(merged):
+                return tuple(
+                    {**{name: merged[name][:, i:i + 1] for name in leaves},
+                     "pos": merged["pos"][i]}
+                    for i in range(nb))
+
+            fns = (jax.jit(merge), jax.jit(step), jax.jit(split))
+            _jit_cache_put(ck, fns)
+        return fns
+
     def run_pipelined(self, feed, toks_b, miss_b, io_pos_b, cache, n_total):
         """Dispatch the layer-pipelined recompute scan, with ``feed``
-        published as the active per-layer I/O source."""
+        published as the active per-layer I/O source for exactly the
+        duration of the dispatch (cleared even on failure, so a stale
+        feed can never leak into a later retrace or pin chunk buffers)."""
         global _ACTIVE_FEED
+        assert _ACTIVE_FEED is None, "re-entrant pipelined restore"
         _ACTIVE_FEED = feed
-        fn = self._get_pipelined_fn()
-        cache, _, _ = fn(self.params, jnp.asarray(toks_b)[None],
-                         jnp.asarray(miss_b), jnp.asarray(io_pos_b),
-                         cache, jnp.int32(n_total))
+        try:
+            fn = self._get_pipelined_fn()
+            cache, _, _ = fn(self.params, jnp.asarray(toks_b)[None],
+                             jnp.asarray(miss_b), jnp.asarray(io_pos_b),
+                             cache, jnp.int32(n_total))
+            # the io_callbacks fire while the dispatch executes; join it
+            # before unpublishing the feed
+            jax.block_until_ready(cache[self.codec.leaves[0]])
+        finally:
+            _ACTIVE_FEED = None
         return cache
 
     def _get_pipelined_fn(self):
-        ck = (id(self.model), self.cfg.window, self.cfg.n_sinks, "pipelined")
-        fn = _JIT_CACHE.get(ck)
+        ck = (self._fp, self.cfg.window, self.cfg.n_sinks, "pipelined")
+        fn = _jit_cache_get(ck)
         if fn is None:
             fn = jax.jit(
                 functools.partial(self.model.recompute_pipelined,
                                   fetch=_feed_fetch,
                                   window=self.cfg.window,
                                   n_sinks=self.cfg.n_sinks))
-            _JIT_CACHE[ck] = fn
+            _jit_cache_put(ck, fn)
         return fn
+
+
+class BatchRun:
+    """A persistent merged working cache over n decode slots.
+
+    Merging n batch-1 slot caches into one ``[nb, ...]`` cache (padded
+    to a power-of-two bucket) costs real copies; a decode round on the
+    MERGED cache does not.  Keeping the run open while the batch
+    membership is stable makes the steady-state round exactly one jitted
+    ``[nb, 1]`` model step — ``split()`` pays the copies back out only
+    when a generation leaves the batch (finish/suspend/cancel).
+    """
+
+    def __init__(self, exe: ModelExecutor, caches: Sequence[Any]):
+        self.exe = exe
+        self.n = len(caches)
+        self.nb = next(b for b in exe.batch_buckets if b >= self.n)
+        self._merge_fn, self._step_fn, self._split_fn = exe._batch_fns(self.nb)
+        pad = (exe._zero_cache,) * (self.nb - self.n)
+        self.merged = self._merge_fn(tuple(caches) + pad)
+
+    def step(self, toks: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        """Advance every slot by its token -> (logits [n, V],
+        density-mass [n, S])."""
+        toks_b = np.zeros((self.nb, 1), np.int32)
+        toks_b[:self.n, 0] = toks
+        self.merged, logits, mass = self._step_fn(
+            self.exe.params, jnp.asarray(toks_b), self.merged)
+        return (np.asarray(logits)[:self.n],
+                np.asarray(mass, np.float64)[:self.n])
+
+    def split(self) -> List[Any]:
+        """Per-slot batch-1 caches reflecting every step so far."""
+        return list(self._split_fn(self.merged)[:self.n])

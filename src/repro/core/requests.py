@@ -74,12 +74,18 @@ class SamplingParams:
 class GenerationRequest:
     """One generation ask.  ``priority=None`` inherits the submitting
     session's priority; ``deadline`` is an absolute ``time.perf_counter``
-    instant used to order same-priority admissions (EDF, then FIFO)."""
+    instant used to order same-priority admissions (EDF, then FIFO).
+
+    ``exclusive=True`` asks the router never to share a decode batch:
+    the request runs with the engine to itself (it may wait for the
+    current batch to drain first).  For latency-critical calls that
+    must not see batch-mates' per-step cost."""
     prompt: Sequence[int]
     max_new_tokens: int = 16
     sampling: SamplingParams = field(default_factory=SamplingParams)
     priority: Optional[Union[int, str]] = None
     deadline: Optional[float] = None
+    exclusive: bool = False
 
 
 class GenerationStream:

@@ -4,9 +4,18 @@ Layer 3 of the four-layer design (DESIGN.md §1): decides where every
 chunk lives (bf16 working cache / compressed DRAM / disk) and moves it.
 Switch-in plans the I/O-vs-recompute split (Eq. 4), dispatches the
 layer-pipelined restore (Fig. 8), and assembles resident chunks into
-the working cache.  Switch-out runs tolerance-aware compression
+one working-cache SLOT.  Switch-out runs tolerance-aware compression
 (Eq. 1-3) and ahead-of-time swap-out (§3.4).  Eviction implements the
 Reclaim primitive over the LCTRU order.
+
+The paper prototype's working-set lock (one resident context) is
+generalized to a ``SlotAllocator`` over ``decode_batch`` slots: up to B
+contexts hold bf16 slot caches simultaneously and decode as one batch,
+while the LCTRU queue and the compressed-chunk byte budget stay GLOBAL
+across slots — eviction pressure from one slot's restore can reclaim
+any context's chunks.  Preempting a generation evicts ONE slot (its
+context switches out through the same compress/AoT path), not the
+whole engine.
 
 Built on ``lifecycle`` (eviction order + budget), ``swap`` (async disk
 tier), and ``restore`` (segmented chunk files + LayerFeed); runs the
@@ -17,7 +26,8 @@ from __future__ import annotations
 import math
 import os
 import time
-from typing import Dict, List, Tuple
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +43,61 @@ from repro.core.restore import LayerFeed, read_chunk_file, write_chunk_file
 from repro.core.swap import AsyncSwapper, DiskStore
 
 
+class SlotAllocator:
+    """The working-set "lock" generalized to B decode slots.
+
+    Each slot holds one context's bf16 working cache.  A slot is HELD
+    while a generation is resident on it (between switch-in and
+    switch-out/suspend); switching out PARKS the slot — the cache stays
+    resident, keyed by context id, so an immediate resume or follow-up
+    call on the same context reuses it with zero restore (the old
+    single-entry ``_active`` fast path, now one per slot).  Acquiring a
+    slot when none is free reclaims the least-recently-parked idle slot
+    (its cached state is dropped — the context's chunks are already
+    committed, so nothing is lost).  Holding more than B slots is a
+    scheduler bug and raises."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = max(1, int(n_slots))
+        self._free = list(range(self.n_slots - 1, -1, -1))
+        self.held: Dict[int, int] = {}                   # cid -> slot
+        self.idle: "OrderedDict[int, int]" = OrderedDict()  # cid -> slot, LRU
+
+    def acquire(self, cid: int,
+                on_evict: Optional[Callable[[int], None]] = None) -> int:
+        """Claim a slot for ``cid``: its own parked slot if one exists,
+        else a free slot, else the LRU parked slot (``on_evict`` is told
+        which context lost its cached state)."""
+        assert cid not in self.held, f"ctx {cid} already holds a slot"
+        if cid in self.idle:
+            slot = self.idle.pop(cid)
+        elif self._free:
+            slot = self._free.pop()
+        elif self.idle:
+            victim, slot = self.idle.popitem(last=False)
+            if on_evict is not None:
+                on_evict(victim)
+        else:
+            raise RuntimeError(
+                f"all {self.n_slots} decode slots are held by in-flight "
+                "generations; suspend one before switching another in")
+        self.held[cid] = slot
+        return slot
+
+    def park(self, cid: int):
+        """held -> idle: the generation switched out but its slot cache
+        stays resident for exact reuse (MRU end of the idle order)."""
+        self.idle[cid] = self.held.pop(cid)
+
+    def release(self, cid: int):
+        """Give the slot back entirely (context deleted / state reset)."""
+        slot = self.held.pop(cid, None)
+        if slot is None:
+            slot = self.idle.pop(cid, None)
+        if slot is not None:
+            self._free.append(slot)
+
+
 class ResidencyEngine:
     """Restore planning + chunk assembly + compress/AoT swap-out."""
 
@@ -46,6 +111,7 @@ class ResidencyEngine:
         self.queue = queue
         self.mem = mem
         self.cfg = cfg
+        self.slots = SlotAllocator(exe.decode_slots)
         self.profile = PipelineProfile()
         self.profiled = False
         self.epoch = 0                      # bumped on any eviction

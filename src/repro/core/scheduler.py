@@ -8,22 +8,31 @@ agents), and (c) exploit the trace history to predict which context
 comes next — the §3.4 ahead-of-time swap-out hint.
 
 ``ServiceRouter`` owns per-app sessions and an admission priority
-queue.  The underlying model execution stays serial (the paper's
-working-set lock: one active context at a time), so the router
-serializes all service access under one lock; with ``start=True`` a
-dispatcher thread drains the queue so app threads only enqueue, with
-``start=False`` the queue drains inline (deterministic — used by the
-benchmarks and tests).
+queue.  Model execution is serialized under one lock (one dispatcher
+at a time), but each dispatch round drives up to ``decode_batch``
+generations at once through the service's batched decode path; with
+``start=True`` a dispatcher thread drains the queue so app threads
+only enqueue, with ``start=False`` the queue drains inline
+(deterministic — used by the benchmarks and tests).
 
-**Decode-slice dispatch.**  With ``slice_steps=K`` a generation runs
-in bounded slices of K decode steps; between slices the dispatcher
-re-checks the admission queue, and a waiting higher-priority request
-PREEMPTS the in-flight stream: the partial generation is switched out
-through the ResidencyEngine (``LLMService.suspend_call``), the job is
-re-queued at its original admission rank, and the foreground request
-runs — so foreground TTFT is bounded by one slice plus one context
-switch instead of somebody else's whole generation.  ``slice_steps=0``
-is the legacy whole-generation dispatch.
+**Batched decode-slice dispatch.**  Each dispatch round forms a decode
+BATCH of up to ``decode_batch`` compatible queued jobs (priority
+order; two jobs on one context never share a batch; an ``exclusive``
+request runs alone) and runs them in bounded slices of
+``slice_steps=K`` decode rounds — one batched model step emits a token
+for every live generation, so background apps make progress in the
+same wall-clock steps the foreground pays for anyway.  Between slices
+the dispatcher re-checks the admission queue: finished slots are
+REFILLED from compatible queued jobs, and a waiting strictly-higher-
+priority request PREEMPTS the lowest-priority slot — that one partial
+generation is switched out through the ResidencyEngine
+(``LLMService.suspend_call``), re-queued at its original admission
+rank, and the newcomer takes its slot while the REST OF THE BATCH
+KEEPS DECODING.  Foreground TTFT is therefore bounded by one slice
+plus one context switch instead of somebody else's whole generation.
+``slice_steps=0`` is the legacy whole-generation dispatch: the batch
+formed at dispatch time runs to completion without re-checking the
+queue.
 
 ``NextContextPredictor`` is a first-order transition table over the
 observed context-switch history — the same process that generates the
@@ -129,12 +138,15 @@ class ServiceRouter:
                  slice_steps: int = 0):
         self.svc = svc
         self.slice_steps = int(slice_steps)
+        self.decode_batch = max(1, int(getattr(svc, "decode_batch", 1)))
         self.predictor = NextContextPredictor() if predict else None
         self.sessions: Dict[str, AppSession] = {}
         self.call_records: List[Dict[str, Any]] = []
         self.prefetch_hints = 0
         self.aot_flushes = 0
         self.preemptions = 0
+        self.decode_rounds = 0              # batched decode rounds run
+        self.decoded_tokens = 0             # tokens emitted across rounds
         self._pred_next: Optional[int] = None
         self._pred_hits = 0
         self._pred_total = 0
@@ -227,15 +239,25 @@ class ServiceRouter:
                            (job["prio"], job["deadline"], job["seq"], job))
             self._cv.notify()
 
-    def _higher_priority_waiting(self, prio: int, cid: int) -> bool:
-        """A strictly higher-priority job is queued — unless it targets
-        the SAME context: preempting for it would leave a suspended
-        generation the newcomer cannot legally overlap (begin_call
-        refuses), and finishing first hands it a warm cache anyway."""
+    def _preemptable_head(self, prio: int, active_cids) -> Optional[dict]:
+        """The queue-head job, iff it strictly outranks ``prio`` and
+        could actually take the freed slot: not on an active context
+        (preempting for it would leave a suspended generation the
+        newcomer cannot legally overlap — begin_call refuses — and
+        finishing first hands it a warm cache anyway), and not
+        exclusive (an exclusive head waits for the engine to drain;
+        evicting one slot of many cannot seat it)."""
         with self._cv:
-            if not self._queue or self._queue[0][0] >= prio:
-                return False
-            return self._queue[0][3]["stub"].ctx_id != cid
+            head = self._queue[0][3] if self._queue else None
+        if (head is None or head["prio"] >= prio
+                or head["stub"].ctx_id in active_cids
+                or getattr(head["request"], "exclusive", False)):
+            return None
+        return head
+
+    def _higher_priority_waiting(self, prio: int, cid: int) -> bool:
+        """B=1 compat form of the preemption predicate."""
+        return self._preemptable_head(prio, {cid}) is not None
 
     # -- dispatch -------------------------------------------------------- #
     def _loop(self):
@@ -245,81 +267,206 @@ class ServiceRouter:
                     self._cv.wait()
                 if self._stop and not self._queue:
                     return
-                _, _, _, job = heapq.heappop(self._queue)
+                jobs = self._pop_locked(self.decode_batch, set())
                 self._inflight += 1
             try:
-                self._run_job(job)
+                if jobs:
+                    self._run_batch(jobs)
             finally:
                 with self._cv:
                     self._inflight -= 1
                     self._cv.notify_all()
 
-    def _run_job(self, job, max_slices: Optional[int] = None) -> str:
-        """Run one job until it finishes, is cancelled, or is preempted
-        (-> re-queued).  ``max_slices`` bounds the slices run THIS call
-        (used by ``pump``); preempted/paused jobs keep their state and
-        continue from the interrupted decode on the next dispatch.
-        -> "done" | "cancelled" | "preempted" | "paused" | "error"."""
+    def _pop_locked(self, limit: int, active_cids: set) -> List[dict]:
+        """Pop up to ``limit`` batch-compatible jobs in priority order
+        (caller holds ``_cv``).  A job is skipped — left queued, order
+        preserved — when its context is already decoding in this batch
+        (two generations may never overlap one context) or when
+        exclusivity forbids sharing: an ``exclusive`` request only runs
+        as the sole member of an empty batch."""
+        taken: List[dict] = []
+        skipped: List[Tuple] = []
+        while self._queue and len(taken) < limit:
+            key = heapq.heappop(self._queue)
+            job = key[3]
+            cid = job["stub"].ctx_id
+            exclusive = getattr(job["request"], "exclusive", False)
+            if exclusive and (taken or active_cids):
+                # an exclusive head WAITS for the engine to drain; stop
+                # scanning so nothing behind it jumps the line and the
+                # batch shrinks toward the empty engine it needs
+                heapq.heappush(self._queue, key)
+                break
+            if cid in active_cids:
+                skipped.append(key)
+                continue
+            taken.append(job)
+            active_cids.add(cid)
+            if exclusive:
+                break
+        for key in skipped:
+            heapq.heappush(self._queue, key)
+        return taken
+
+    def _pop_batch(self, limit: int, active_cids: set) -> List[dict]:
+        with self._cv:
+            return self._pop_locked(limit, active_cids)
+
+    def _start_job(self, job, active: List[dict]) -> bool:
+        """Admit one popped job into the running batch: begin (or
+        resume) its generation so it holds a decode slot.  Returns True
+        iff the job joined ``active`` (False: cancelled or failed)."""
         stream: GenerationStream = job["stream"]
         fut: Optional[Future] = job["future"]
-        K = self.slice_steps
         if job["state"] is None:
             if fut is not None and not fut.set_running_or_notify_cancel():
                 stream.finish(cancelled=True)
-                return "cancelled"
+                return False
             if stream.cancel_requested:          # cancelled while queued
                 stream.finish(cancelled=True)
-                return "cancelled"
+                return False
             job["t_start"] = time.perf_counter()
         try:
-            with self._svc_lock:
-                st = job["state"]
-                if st is None:
-                    cid = job["stub"].ctx_id
-                    if self._pred_next is not None:
-                        self._pred_total += 1
-                        self._pred_hits += self._pred_next == cid
-                    st = job["state"] = self.svc.begin_call(
-                        job["stub"], job["request"])
-                elif st.suspended:
-                    if stream.cancel_requested:  # cancelled while preempted
-                        self._complete(job, cancelled=True)
-                        return "cancelled"
-                    self.svc.resume_call(st)
-
-                slices = 0
-                while True:
-                    n = 0
-                    while K <= 0 or n < K:       # one slice (K=0: no bound)
-                        if stream.cancel_requested:
-                            self._complete(job, cancelled=True)
-                            return "cancelled"
-                        tok = self.svc.decode_step(st)
-                        if tok is None:
-                            break
-                        stream.push(tok)
-                        n += 1
-                    if st.exhausted:
-                        self._complete(job)
-                        return "done"
-                    slices += 1
-                    if max_slices is not None and slices >= max_slices:
-                        self.svc.suspend_call(st)
-                        self._requeue(job)
-                        return "paused"
-                    if K > 0 and self._higher_priority_waiting(
-                            job["prio"], job["stub"].ctx_id):
-                        self.svc.suspend_call(st)
-                        stream.n_preempts += 1
-                        self.preemptions += 1
-                        self._requeue(job)
-                        return "preempted"
+            st = job["state"]
+            if st is None:
+                cid = job["stub"].ctx_id
+                if self._pred_next is not None:
+                    self._pred_total += 1
+                    self._pred_hits += self._pred_next == cid
+                job["state"] = self.svc.begin_call(job["stub"],
+                                                   job["request"])
+            elif st.suspended:
+                if stream.cancel_requested:      # cancelled while preempted
+                    self._complete(job, cancelled=True)
+                    return False
+                self.svc.resume_call(st)
+            active.append(job)
+            return True
         except Exception as e:              # report to the submitting app
             self._fail(job, e)
-            return "error"
+            return False
         except BaseException as e:          # KeyboardInterrupt/SystemExit:
             self._fail(job, e)              # fail the job AND abort dispatch
             raise
+
+    def _run_slice(self, active: List[dict]):
+        """One decode slice over the running batch: up to ``slice_steps``
+        rounds (K=0: until every member is exhausted), each round one
+        batched decode emitting one token per live generation.  Jobs
+        that finish or cancel leave ``active`` in place; the survivors
+        keep decoding."""
+        K = self.slice_steps
+        n = 0
+        while active and (K <= 0 or n < K):
+            live = []
+            for job in list(active):
+                if job["stream"].cancel_requested:
+                    active.remove(job)
+                    self._complete(job, cancelled=True)
+                elif job["state"].exhausted:
+                    active.remove(job)
+                    self._complete(job)
+                else:
+                    live.append(job)
+            if not live:
+                return
+            toks = self.svc.decode_step_batch([j["state"] for j in live])
+            self.decode_rounds += 1
+            self.decoded_tokens += sum(t is not None for t in toks)
+            for job, tok in zip(live, toks):
+                if tok is not None:
+                    job["stream"].push(tok)
+                if job["state"].exhausted:
+                    active.remove(job)
+                    self._complete(job)
+            n += 1
+
+    def _rebalance(self, active: List[dict]):
+        """Between slices: evict slots for strictly-higher-priority
+        waiters (preemption suspends ONE generation, the rest of the
+        batch keeps decoding), then refill free slots from the queue."""
+        while active:
+            victim = max(active, key=lambda j: (j["prio"], j["seq"]))
+            active_cids = {j["stub"].ctx_id for j in active}
+            # a waiter can only be seated by eviction when no slot is
+            # free — and a running EXCLUSIVE generation blocks every
+            # slot, so it counts as a full engine (else a foreground
+            # arrival would wait out its whole generation)
+            full = (len(active) >= self.decode_batch
+                    or any(getattr(j["request"], "exclusive", False)
+                           for j in active))
+            if not full or self._preemptable_head(
+                    victim["prio"], active_cids) is None:
+                break
+            # suspend BEFORE dropping the victim from ``active``: if the
+            # switch-out throws, _run_batch's handler still owns the job
+            # and fails it properly (stream resolves, slot released)
+            self.svc.suspend_call(victim["state"])
+            active.remove(victim)
+            victim["stream"].n_preempts += 1
+            self.preemptions += 1
+            self._requeue(victim)
+        free = self.decode_batch - len(active)
+        if free > 0 and not any(getattr(j["request"], "exclusive", False)
+                                for j in active):
+            cids = {j["stub"].ctx_id for j in active}
+            for job in self._pop_batch(free, cids):
+                self._start_job(job, active)
+
+    def _run_batch(self, jobs: List[dict],
+                   max_slices: Optional[int] = None,
+                   refill: bool = True) -> str:
+        """Run a batch of popped jobs until every member finishes, is
+        cancelled, or is suspended (-> re-queued).  ``max_slices``
+        bounds the slices run THIS call (used by ``pump``: the whole
+        surviving batch is then suspended and re-queued); preempted/
+        paused jobs keep their state and continue from the interrupted
+        decode on a later dispatch.  ``refill=False`` pins the batch to
+        the given jobs (the inline system-prompt path must not touch
+        the queue).  -> "done" | "paused" | "stopped" | "error"."""
+        active: List[dict] = []
+        try:
+            with self._svc_lock:
+                for job in jobs:
+                    self._start_job(job, active)
+                slices = 0
+                while active:
+                    self._run_slice(active)
+                    if not active:
+                        break
+                    slices += 1
+                    if max_slices is not None and slices >= max_slices:
+                        # suspend+requeue one at a time, popping as we
+                        # go: a mid-loop failure leaves only the
+                        # un-suspended jobs in ``active`` for the error
+                        # handler (never a job both queued and failed)
+                        while active:
+                            job = active[-1]
+                            self.svc.suspend_call(job["state"])
+                            active.pop()
+                            self._requeue(job)
+                        return "paused"
+                    if self._stop:              # abort mid-batch: cancel
+                        while active:
+                            job = active.pop()
+                            self._complete(job, cancelled=True)
+                        return "stopped"
+                    if self.slice_steps > 0 and refill:
+                        self._rebalance(active)
+            return "done"
+        except Exception as e:      # a failed batched step fails its batch
+            for job in active:
+                self._fail(job, e)
+            return "error"
+        except BaseException as e:          # KeyboardInterrupt/SystemExit:
+            for job in active:
+                self._fail(job, e)
+            raise
+
+    def _run_job(self, job, max_slices: Optional[int] = None) -> str:
+        """Run one job inline as a solo batch, outside the queue (the
+        system-prompt encode path)."""
+        return self._run_batch([job], max_slices=max_slices, refill=False)
 
     def _complete(self, job, cancelled: bool = False):
         """finish_call + records + prediction hook (under _svc_lock)."""
@@ -374,16 +521,19 @@ class ServiceRouter:
             self.aot_flushes += self.svc.prepare_switch(pred)
 
     def pump(self, max_slices: int = 1) -> bool:
-        """Inline dispatch of at most ``max_slices`` decode slices of the
-        highest-priority job, then return (the job re-queues if it isn't
-        finished).  Deterministic building block for tests that need to
-        interleave admissions with a running generation."""
+        """Inline dispatch of at most ``max_slices`` decode slices of a
+        batch formed from the highest-priority compatible jobs, then
+        return (unfinished members suspend and re-queue).  Deterministic
+        building block for tests that need to interleave admissions with
+        running generations.  A stopped router never dispatches: after
+        ``abort()`` the work it promised to cancel must not run."""
         assert not self.started, "pump() is for inline (start=False) mode"
-        with self._cv:
-            if not self._queue:
-                return False
-            _, _, _, job = heapq.heappop(self._queue)
-        self._run_job(job, max_slices=max_slices)
+        if self._stop:
+            return False
+        jobs = self._pop_batch(self.decode_batch, set())
+        if not jobs:
+            return False
+        self._run_batch(jobs, max_slices=max_slices)
         return True
 
     def drain(self):
@@ -397,8 +547,9 @@ class ServiceRouter:
             with self._cv:
                 if not self._queue:
                     return
-                _, _, _, job = heapq.heappop(self._queue)
-            self._run_job(job)
+                jobs = self._pop_locked(self.decode_batch, set())
+            if jobs:
+                self._run_batch(jobs)
 
     def shutdown(self):
         if self._stop and not self._queue:
@@ -451,6 +602,11 @@ class ServiceRouter:
             "preemptions": self.preemptions,
             "pred_hits": self._pred_hits,
             "pred_total": self._pred_total,
+            "decode_batch": self.decode_batch,
+            "decode_rounds": self.decode_rounds,
+            "decoded_tokens": self.decoded_tokens,
+            "tokens_per_round": (self.decoded_tokens / self.decode_rounds
+                                 if self.decode_rounds else 0.0),
         }
         for prio, name in _PRIO_NAMES.items():
             rs = [r for r in self.call_records if r["priority"] == prio]

@@ -11,20 +11,26 @@ ablations) are POLICIES of this one facade so benchmarks measure
 like-for-like.  The measured *context switching latency* (Fig. 9) is
 the time of ``ResidencyEngine.switch_in`` — the paper's QoS metric.
 
-The request path is stepwise (DESIGN.md §2): ``begin_call`` switches
-the context in and prefills the prompt, ``decode_step`` emits one
-token, ``finish_call`` compresses/AoT-swaps the result out.  The
-router runs generations in bounded decode slices and may
-``suspend_call`` / ``resume_call`` between slices — preemption is a
-real, measured context switch riding the ResidencyEngine.  ``callLLM``
-is the Table-1 compat shim over the same path; with default
-``SamplingParams`` (temperature=0 greedy) it is token-for-token
-identical to the pre-stream blocking implementation.
+The request path is stepwise (DESIGN.md §2): ``begin_call`` claims a
+decode slot, switches the context in and prefills the prompt;
+``decode_step`` emits one token; ``decode_step_batch`` emits one token
+for EACH of up to ``decode_batch`` resident generations through a
+single jitted batched step; ``finish_call`` compresses/AoT-swaps the
+result out and parks the slot.  The router runs generations in bounded
+decode slices and may ``suspend_call`` / ``resume_call`` between
+slices — preemption evicts one slot (a real, measured context switch
+riding the ResidencyEngine) while the rest of the batch keeps
+decoding.  ``callLLM`` is the Table-1 compat shim over the same path;
+with ``decode_batch=1`` and default ``SamplingParams`` (temperature=0
+greedy) it is token-for-token identical to the pre-batch serial
+implementation (the singleton path routes through the very same jitted
+``decode`` callable).
 """
 from __future__ import annotations
 
 import tempfile
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -58,6 +64,7 @@ _POLICY_FLAGS = {
 @dataclass
 class LLMSConfig:
     policy: str = "llms"
+    decode_batch: int = 1                  # working-cache decode slots (B)
     chunk_tokens: int = 16
     levels: Tuple[Tuple[int, float], ...] = comp.DEFAULT_LEVELS
     ratio_global: float = 0.5
@@ -76,6 +83,7 @@ class LLMSConfig:
 
     def __post_init__(self):
         assert self.policy in POLICIES, self.policy
+        assert self.decode_batch >= 1, self.decode_batch
         (self.compression, self.use_pipeline, self.use_lctru, self.use_aot,
          self.chunked, self.use_disk) = _POLICY_FLAGS[self.policy]
 
@@ -92,6 +100,7 @@ class GenerationState:
     sampler: Any
     prompt_len: int
     cache: Any = None
+    slot: Optional[int] = None              # decode slot while resident
     next_tok: Optional[int] = None          # sampled, not yet emitted
     generated: List[int] = field(default_factory=list)
     t_switch: float = 0.0
@@ -123,9 +132,35 @@ class LLMService:
         self.res = ResidencyEngine(self.exe, self.ctxs, self.store,
                                    self.swapper, self.queue, self.mem, cfg)
         self.records: List[Dict[str, Any]] = []
-        # (cid, cache, epoch) of the last active ctx: working-cache reuse
-        self._active: Optional[Tuple[int, Any, int]] = None
+        # cid -> (cache, epoch) of parked decode slots: working-cache
+        # reuse, one entry per idle slot (MRU last).  Mirrors
+        # ``res.slots.idle`` — the SlotAllocator decides WHICH parked
+        # slot to reclaim, this holds WHAT it cached.
+        self._reuse: "OrderedDict[int, Tuple[Any, int]]" = OrderedDict()
+        # open BatchRun over the current live batch (None between
+        # batches): while open, the member states' caches live MERGED in
+        # the run (st.cache is None) and are split back out whenever the
+        # membership changes or a member suspends/finishes.
+        self._brun: Optional[Any] = None
+        self._brun_states: Tuple[GenerationState, ...] = ()
         self._closed = False
+
+    @property
+    def decode_batch(self) -> int:
+        """Number of working-cache decode slots (B)."""
+        return self.exe.decode_slots
+
+    @property
+    def _active(self) -> Optional[Tuple[int, Any, int]]:
+        """Compat view of the most-recently-parked slot as the old
+        single-entry (cid, cache, epoch) reuse tuple."""
+        if not self._reuse:
+            return None
+        cid, (cache, epoch) = next(reversed(self._reuse.items()))
+        return (cid, cache, epoch)
+
+    def _drop_reuse(self, cid: int):
+        self._reuse.pop(cid, None)
 
     @property
     def contexts(self) -> Dict[int, Context]:
@@ -145,10 +180,10 @@ class LLMService:
 
     def delLLMCtx(self, stub: LLMCtxStub):
         self.ctxs.delete(stub.ctx_id)   # raises on busy: nothing changed
-        # drop the working-cache reuse tuple: a stale (cid, cache, epoch)
-        # for a deleted context would pin the full bf16 cache in memory
-        if self._active is not None and self._active[0] == stub.ctx_id:
-            self._active = None
+        # give the slot back and drop its reuse entry: a stale cache for
+        # a deleted context would pin a full bf16 slot in memory
+        self._drop_reuse(stub.ctx_id)
+        self.res.slots.release(stub.ctx_id)
 
     def bindLLMService(self, app: Any = None) -> "LLMService":
         return self
@@ -182,58 +217,128 @@ class LLMService:
                              sampler=request.sampling.make_sampler(),
                              prompt_len=len(prompt))
         self._switch_in(st)
-
-        # inference: extend with the new prompt (prefill)
-        t1 = time.perf_counter()
-        n0 = ctx.n_tokens
-        ctx.tokens[n0:n0 + len(prompt)] = prompt
-        cache, logits, dens = self.exe.extend(st.cache, prompt, n0)
-        self.ctxs.acc_density(ctx, dens, n0 + len(prompt))
-        ctx.n_tokens += len(prompt)
-        st.cache = cache
-        if request.max_new_tokens > 0:
-            st.next_tok = st.sampler(logits)
-        st.t_infer += time.perf_counter() - t1
-        ctx.busy += 1
+        try:
+            # inference: extend with the new prompt (prefill)
+            t1 = time.perf_counter()
+            n0 = ctx.n_tokens
+            ctx.tokens[n0:n0 + len(prompt)] = prompt
+            cache, logits, dens = self.exe.extend(st.cache, prompt, n0)
+            self.ctxs.acc_density(ctx, dens, n0 + len(prompt))
+            ctx.n_tokens += len(prompt)
+            st.cache = cache
+            if request.max_new_tokens > 0:
+                st.next_tok = st.sampler(logits)
+            st.t_infer += time.perf_counter() - t1
+            ctx.busy += 1
+        except BaseException:       # failed prefill must not leak the slot
+            self.res.slots.release(ctx.cid)
+            st.slot = st.cache = None
+            raise
         return st
 
     def decode_step(self, st: GenerationState) -> Optional[int]:
         """Emit the pending token and (if budget remains) run one decode
         step to sample the next.  -> the emitted token, or None when the
         generation is exhausted."""
-        if st.done or st.next_tok is None:
-            return None
-        assert not st.suspended, "resume_call before decode_step"
-        ctx = st.ctx
+        return self.decode_step_batch([st])[0]
+
+    def decode_step_batch(self, sts: Sequence[GenerationState]
+                          ) -> List[Optional[int]]:
+        """One decode round over up to ``decode_batch`` resident
+        generations: emit each state's pending token, then run a single
+        batched decode step for every state with budget remaining (a
+        lone survivor routes through the serial ``decode`` — so with
+        decode_batch=1 this IS the serial path, token for token).
+        -> emitted tokens parallel to ``sts`` (None where exhausted)."""
         t1 = time.perf_counter()
-        tok = st.next_tok
-        st.generated.append(tok)
-        ctx.tokens[ctx.n_tokens] = tok
-        ctx.n_tokens += 1
-        if len(st.generated) >= st.request.max_new_tokens:
-            st.next_tok = None
-        else:
-            cache, logits, mass = self.exe.decode(st.cache, tok)
+        out: List[Optional[int]] = []
+        live: List[GenerationState] = []
+        fed: List[int] = []
+        for st in sts:
+            if st.done or st.next_tok is None:
+                out.append(None)
+                continue
+            assert not st.suspended, "resume_call before decode_step"
+            ctx = st.ctx
+            tok = st.next_tok
+            st.generated.append(tok)
+            ctx.tokens[ctx.n_tokens] = tok
+            ctx.n_tokens += 1
+            out.append(tok)
+            if len(st.generated) >= st.request.max_new_tokens:
+                st.next_tok = None
+            else:
+                live.append(st)
+                fed.append(tok)
+        if live:
+            if len(live) == 1 or not self.exe.can_batch_decode:
+                self._flush_batch_run()
+                for st, tok in zip(live, fed):
+                    cache, logits, mass = self.exe.decode(st.cache, tok)
+                    st.cache = cache
+                    self.ctxs.acc_density(st.ctx, mass, st.ctx.n_tokens)
+                    st.next_tok = st.sampler(logits)
+            else:
+                same = (self._brun is not None
+                        and len(live) == len(self._brun_states)
+                        and all(a is b for a, b in
+                                zip(live, self._brun_states)))
+                if not same:
+                    # membership changed: split the old run back into its
+                    # states, merge the new batch once — steady rounds on
+                    # a stable batch are then a single jitted step
+                    self._flush_batch_run()
+                    self._brun = self.exe.begin_batch(
+                        [st.cache for st in live])
+                    self._brun_states = tuple(live)
+                    for st in live:
+                        st.cache = None         # lives in the merged run
+                logits, mass = self._brun.step(fed)
+                for i, st in enumerate(live):
+                    self.ctxs.acc_density(st.ctx, mass[i], st.ctx.n_tokens)
+                    st.next_tok = st.sampler(logits[i])
+        n_stepped = sum(tok is not None for tok in out)
+        if n_stepped:
+            share = (time.perf_counter() - t1) / n_stepped
+            for st, tok in zip(sts, out):
+                if tok is not None:
+                    st.t_infer += share
+        return out
+
+    def _flush_batch_run(self):
+        """Split an open BatchRun back into its member states' caches.
+        Called before anything reads or commits a member's cache
+        (suspend/finish/serial-decode/membership change)."""
+        if self._brun is None:
+            return
+        for st, cache in zip(self._brun_states, self._brun.split()):
             st.cache = cache
-            self.ctxs.acc_density(ctx, mass, ctx.n_tokens)
-            st.next_tok = st.sampler(logits)
-        st.t_infer += time.perf_counter() - t1
-        return tok
+        self._brun = None
+        self._brun_states = ()
 
     def suspend_call(self, st: GenerationState):
         """Preempt an in-flight generation: commit the partial result
-        (compress + AoT swap-out, exactly a switch-out) and drop the
-        cache reference.  The sampled-but-unemitted token stays in the
-        state, so resume continues the interrupted decode."""
+        (compress + AoT swap-out, exactly a switch-out) and park its
+        decode slot — the rest of a batch keeps decoding.  The
+        sampled-but-unemitted token stays in the state, so resume
+        continues the interrupted decode."""
         assert not (st.suspended or st.done)
+        self._flush_batch_run()
         t2 = time.perf_counter()
         self.res.compress_and_swap_out(st.ctx, st.cache)
         self.mem.reclaim(0, self.res.evict, locked=set())
         st.t_swapout += time.perf_counter() - t2
-        self._active = (st.ctx.cid, st.cache, self.res.epoch)
-        st.cache = None
+        self._park(st)
         st.suspended = True
         st.n_preempts += 1
+
+    def _park(self, st: GenerationState):
+        """Slot held -> idle: keep the cache for exact-reuse resume."""
+        self._reuse[st.ctx.cid] = (st.cache, self.res.epoch)
+        self._reuse.move_to_end(st.ctx.cid)
+        self.res.slots.park(st.ctx.cid)
+        st.cache = None
+        st.slot = None
 
     def resume_call(self, st: GenerationState):
         """Switch a suspended generation's context back in — a real,
@@ -249,14 +354,18 @@ class LLMService:
         busy/record bookkeeping runs even if the swap-out fails, so an
         errored call never bricks its context."""
         ctx = st.ctx
+        self._flush_batch_run()
         try:
             if not st.suspended:
                 t2 = time.perf_counter()
                 self.res.compress_and_swap_out(ctx, st.cache)
                 self.mem.reclaim(0, self.res.evict, locked=set())
                 st.t_swapout += time.perf_counter() - t2
-                self._active = (ctx.cid, st.cache, self.res.epoch)
+                self._park(st)
         finally:
+            if st.slot is not None:     # park failed: free the slot
+                self.res.slots.release(ctx.cid)
+                st.slot = None
             st.cache = None
             st.done = True
             ctx.busy -= 1
@@ -272,18 +381,25 @@ class LLMService:
         return st.generated
 
     def _switch_in(self, st: GenerationState):
-        """Context switching (the measured QoS metric): missing-state
-        restore is timed; resident assembly is inference (DESIGN.md §2).
-        The working-cache reuse fast path skips the restore entirely."""
+        """Claim a decode slot and switch the context in (the measured
+        QoS metric): missing-state restore is timed; resident assembly
+        is inference (DESIGN.md §2).  A parked slot still caching this
+        context (and untouched by eviction since — epoch match) is the
+        zero-restore fast path."""
         ctx = st.ctx
         t0 = time.perf_counter()
-        reuse = (self._active is not None and self._active[0] == ctx.cid
-                 and self._active[2] == self.res.epoch)
-        if reuse:
-            st.cache = self._active[1]
+        entry = self._reuse.pop(ctx.cid, None)
+        st.slot = self.res.slots.acquire(ctx.cid, self._drop_reuse)
+        if entry is not None and entry[1] == self.res.epoch:
+            st.cache = entry[0]
             st.t_switch += time.perf_counter() - t0
         else:
-            cache, t_sw = self.res.switch_in(ctx)
+            try:
+                cache, t_sw = self.res.switch_in(ctx)
+            except BaseException:
+                self.res.slots.release(ctx.cid)
+                st.slot = None
+                raise
             st.cache = cache
             st.t_switch += t_sw
             st.t_assemble += time.perf_counter() - t0 - t_sw
@@ -311,7 +427,9 @@ class LLMService:
     def _condense(self, ctx: Context, keep: int):
         """Context overflow: re-encode the recent tail at [0, keep)."""
         tail = self.ctxs.reset_for_condense(ctx, keep, self.exe.cs)
-        self._active = None
+        # the rebuilt state invalidates any parked slot cache of THIS ctx
+        self._drop_reuse(ctx.cid)
+        self.res.slots.release(ctx.cid)
         cache = self.exe.fresh_cache(0)
         ctx.tokens[:len(tail)] = tail
         cache, _, dens = self.exe.extend(cache, tail, 0)
@@ -330,6 +448,8 @@ class LLMService:
             "switch_p99_s": float(np.percentile(sw, 99)) if sw else 0.0,
             "mem_used": self.mem.used,
             "disk_bytes": self.store.total_bytes,
+            "decode_slots": self.decode_batch,
+            "slots_held": len(self.res.slots.held),
         }
 
     def close(self):

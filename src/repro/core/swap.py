@@ -63,7 +63,10 @@ class DiskStore:
 
     @property
     def total_bytes(self) -> int:
-        return sum(self._bytes.values())
+        # snapshot under the lock: concurrent writers mutate the dict
+        # mid-sum otherwise (RuntimeError / torn totals)
+        with self._lock:
+            return sum(self._bytes.values())
 
 
 class AsyncSwapper:
@@ -119,6 +122,8 @@ class AsyncSwapper:
         return self.submit(key, self.store.write, key, obj)
 
     def read(self, key: Key) -> Any:
+        """Synchronous read; blocks the CALLER (never a pool worker) on
+        any in-flight same-key write."""
         with self._lock:
             fut = self._pending.get(key)
         if fut is not None:
@@ -126,7 +131,44 @@ class AsyncSwapper:
         return self.store.read(key)
 
     def read_async(self, key: Key) -> Future:
-        return self.pool.submit(self.read, key)
+        """Read on the pool, AFTER any in-flight same-key write.
+
+        The read is chained off the pending write future (like same-key
+        writes in ``submit``), never submitted as a worker that blocks
+        on it: a worker parked in ``fut.result()`` while the chained
+        write sits queued behind it deadlocks the pool outright with
+        ``workers=1`` (and with N workers, N concurrent blocking reads).
+        """
+        with self._lock:
+            prev = self._pending.get(key)
+        if prev is None:
+            return self.pool.submit(self.store.read, key)
+        out: Future = Future()
+
+        def _start(f: Future):
+            werr = f.exception()
+            if werr is not None:
+                # parity with the blocking ``read`` (whose fut.result()
+                # raises): a failed write must surface, not be papered
+                # over with whatever stale bytes are on disk
+                out.set_exception(werr)
+                return
+            try:
+                inner = self.pool.submit(self.store.read, key)
+            except RuntimeError as e:              # pool already shut down
+                out.set_exception(e)
+                return
+
+            def _copy(f: Future):
+                err = f.exception()
+                if err is not None:
+                    out.set_exception(err)
+                else:
+                    out.set_result(f.result())
+            inner.add_done_callback(_copy)
+
+        prev.add_done_callback(_start)             # chain, don't block
+        return out
 
     def flush(self):
         with self._lock:

@@ -132,6 +132,10 @@ def main():
     ap.add_argument("--slice-steps", type=int, default=0,
                     help="decode-slice length K (0 = whole-generation "
                          "dispatch; >0 enables mid-generation preemption)")
+    ap.add_argument("--decode-batch", type=int, default=1,
+                    help="working-cache decode slots B: up to B queued "
+                         "generations decode as one jitted batch "
+                         "(1 = the serial paper-prototype path)")
     ap.add_argument("--pace", type=float, default=0.0,
                     help="wall seconds per trace second when replaying "
                          "arrival gaps (0 = compressed time)")
@@ -144,6 +148,7 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     sc = LLMSConfig(policy=args.policy, max_ctx_len=args.max_ctx,
                     memory_budget=int(args.budget_mib * 2**20),
+                    decode_batch=args.decode_batch,
                     swap_dir=tempfile.mkdtemp(prefix="llms_serve_"))
     events = synthesize(args.contexts, args.calls, cfg.vocab,
                         pattern=args.pattern, scale=0.1, seed=args.seed)

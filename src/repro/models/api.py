@@ -62,6 +62,13 @@ def cross_entropy(logits: Array, targets: Array, mask: Optional[Array] = None
 class ModelBase:
     """Common plumbing; families override the layer stack."""
 
+    # True when ``decode_step`` accepts a cache whose ``pos`` leaf is a
+    # (B,) vector of per-row positions (each batch row an independent
+    # decode slot).  Families opt in once their cache update / attention
+    # handle per-row offsets; the executor falls back to a serial loop
+    # over slots otherwise.
+    supports_batched_decode = False
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
 

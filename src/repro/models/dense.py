@@ -78,6 +78,7 @@ def _inner_group(L: int) -> int:
 
 class DenseModel(ModelBase):
     family_has_kv = True
+    supports_batched_decode = True
 
     # ------------------------------------------------------------------ #
     def init(self, key) -> Dict:
@@ -232,12 +233,22 @@ class DenseModel(ModelBase):
         return PrefillOut(logits, cache, density)
 
     def decode_step(self, params, tokens, cache, window=0, n_sinks=0,
-                    want_density=False):
+                    want_density=False, unroll: int = 1):
+        """``unroll`` feeds ``lax.scan(..., unroll=)`` over the layers.
+        The batched decode entry passes the full layer count: XLA CPU's
+        rolled scan emits per-iteration buffer shuffles that dominate a
+        multi-row step (~5x on the bench model), while the unrolled body
+        fuses clean.  The serial (B=1) path keeps the rolled scan — its
+        one-layer-sized HLO — and is numerically unaffected either way."""
         cfg = self.cfg
         x = C.constrain_batch(
             params["embed"][tokens].astype(jnp.bfloat16))  # (B, 1, d)
         pos = cache["pos"]
-        positions = pos[None] if pos.ndim == 0 else pos
+        # scalar pos: all rows decode at one position (serial working
+        # cache).  (B,) pos: per-row slot positions (batched decode) —
+        # rope needs a (B, 1) position table so each row rotates at its
+        # own offset.
+        positions = pos[None] if pos.ndim == 0 else pos[:, None]
 
         quantized = "k_scale" in cache       # int8 KV with fused dequant
 
@@ -292,7 +303,7 @@ class DenseModel(ModelBase):
         xs = (params["layers"], cache["k"], cache["v"])
         if quantized:
             xs = xs + (cache["k_scale"], cache["v_scale"])
-        x, ys = jax.lax.scan(body, x, xs)
+        x, ys = jax.lax.scan(body, x, xs, unroll=max(1, int(unroll)))
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
         new_cache = {"k": ys["k"], "v": ys["v"], "pos": pos + 1}

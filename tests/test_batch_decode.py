@@ -1,0 +1,319 @@
+"""Multi-context batched decode: decode_batch=1 token-identity with the
+serial path, deterministic batch interleaving via pump(), slot
+eviction under memory pressure, single-slot preemption while the rest
+of the batch keeps decoding, and the router stop-check satellite."""
+import tempfile
+import time
+
+import numpy as np
+import pytest
+
+from conftest import tiny_model
+from repro.core.requests import GenerationRequest
+from repro.core.scheduler import ServiceRouter
+from repro.core.service import LLMSConfig, LLMService
+
+
+def make_svc(decode_batch=1, policy="llms", budget=10_000_000, max_ctx=128):
+    cfg, model, params = tiny_model("smollm-360m")
+    sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx,
+                    memory_budget=budget, decode_batch=decode_batch,
+                    swap_dir=tempfile.mkdtemp())
+    return LLMService(model, params, sc), cfg
+
+
+def prompts_for(cfg, n, length=10, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab, length).tolist() for _ in range(n)]
+
+
+# --------------------------------------------------------------------- #
+# decode_batch=1 ≡ the serial seed path (the required invariant)
+# --------------------------------------------------------------------- #
+def test_batch1_token_identical_to_serial_path():
+    """With decode_batch=1 and default SamplingParams the routed batch
+    engine emits exactly the serial path's tokens (the singleton round
+    routes through the very same jitted ``decode`` callable)."""
+    svc_a, cfg = make_svc(decode_batch=1)
+    svc_b, _ = make_svc(decode_batch=1)
+    ps = prompts_for(cfg, 4, seed=3)
+    with svc_a, svc_b:
+        direct = []
+        stubs_a = [svc_a.newLLMCtx() for _ in ps]
+        for stub, p in zip(stubs_a, ps):
+            direct.append(svc_a.callLLM(stub, p, max_new_tokens=5)[1])
+        with ServiceRouter(svc_b, predict=False, slice_steps=2) as router:
+            app = router.register_app("a", "fg")
+            stubs_b = [app.new_ctx() for _ in ps]
+            streams = [app.stream(st, p, max_new_tokens=5)
+                       for st, p in zip(stubs_b, ps)]
+            router.drain()
+            routed = [s.result() for s in streams]
+    assert routed == direct
+    # the engine really was batch-1: every round emitted one token
+    assert router.stats()["tokens_per_round"] == 1.0
+
+
+def test_batched_output_matches_serial_reference():
+    """Greedy decode at decode_batch=4 produces the same tokens as four
+    independent serial generations (slots are independent rows)."""
+    svc_a, cfg = make_svc(decode_batch=1)
+    svc_b, _ = make_svc(decode_batch=4)
+    ps = prompts_for(cfg, 4, seed=7)
+    with svc_a, svc_b:
+        ref = []
+        for p in ps:
+            stub = svc_a.newLLMCtx()
+            ref.append(svc_a.callLLM(stub, p, max_new_tokens=6)[1])
+        with ServiceRouter(svc_b, predict=False, slice_steps=2) as router:
+            app = router.register_app("a", "fg")
+            streams = [app.stream(app.new_ctx(), p, max_new_tokens=6)
+                       for p in ps]
+            router.drain()
+            out = [s.result() for s in streams]
+    assert out == ref
+    st = router.stats()
+    assert st["decode_batch"] == 4
+    assert st["tokens_per_round"] > 1.0     # generations actually shared steps
+
+
+def test_decode_many_matches_serial_decode():
+    """The executor's one-shot batched entry (BatchRun merge/step/split)
+    produces the same logits-argmax and advanced caches as stepping each
+    slot serially."""
+    svc, cfg = make_svc(decode_batch=4)
+    with svc:
+        exe = svc.exe
+        caches, toks = [], []
+        rng = np.random.RandomState(43)
+        for i in range(3):                  # deliberately a non-bucket n
+            cache = exe.fresh_cache(0)
+            prompt = rng.randint(1, cfg.vocab, 6 + i).astype(np.int32)
+            cache, logits, _ = exe.extend(cache, prompt, 0)
+            caches.append(cache)
+            toks.append(int(np.argmax(logits)))
+        serial = [exe.decode(c, t) for c, t in zip(caches, toks)]
+        batched = exe.decode_many(caches, toks)
+        for (cs, ls, ms), (cb, lb, mb) in zip(serial, batched):
+            assert int(np.argmax(ls)) == int(np.argmax(lb))
+            assert int(cs["pos"]) == int(cb["pos"])
+            np.testing.assert_allclose(
+                np.asarray(cs["k"], np.float32),
+                np.asarray(cb["k"], np.float32), atol=2e-2)
+
+
+# --------------------------------------------------------------------- #
+# deterministic interleaving via pump() at decode_batch > 1
+# --------------------------------------------------------------------- #
+def test_pump_interleaves_batch_deterministically():
+    """One pump = one K-step slice over the whole batch: every live
+    stream gains exactly K tokens per pump, in admission order."""
+    svc, cfg = make_svc(decode_batch=3)
+    ps = prompts_for(cfg, 3, seed=11)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        app = router.register_app("a", "fg")
+        streams = [app.stream(app.new_ctx(), p, max_new_tokens=6)
+                   for p in ps]
+        for expect in (2, 4, 6):
+            assert router.pump()
+            assert [len(s.tokens) for s in streams] == [expect] * 3
+        assert not router.pump()            # everything finished
+        for s in streams:
+            assert s.done and len(s.result()) == 6
+        # between pumps the whole batch was parked: slots all idle
+        assert len(svc.res.slots.held) == 0
+        assert len(router.call_records) == 3
+
+
+def test_partial_batch_refills_between_slices():
+    """When a batch member finishes, a queued job takes its slot at the
+    next slice boundary instead of waiting for the round to end."""
+    svc, cfg = make_svc(decode_batch=2)
+    ps = prompts_for(cfg, 3, seed=13)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        app = router.register_app("a", "fg")
+        s1 = app.stream(app.new_ctx(), ps[0], max_new_tokens=2)   # short
+        s2 = app.stream(app.new_ctx(), ps[1], max_new_tokens=8)   # long
+        s3 = app.stream(app.new_ctx(), ps[2], max_new_tokens=4)   # queued
+        router.drain()
+        for s, n in ((s1, 2), (s2, 8), (s3, 4)):
+            assert len(s.result()) == n
+        # s3 was admitted mid-round: its first token landed before the
+        # long generation's last one
+        assert s3.t_first_token < s2.token_times[-1]
+
+
+# --------------------------------------------------------------------- #
+# slot eviction under memory pressure
+# --------------------------------------------------------------------- #
+def test_slot_eviction_under_memory_pressure():
+    """More contexts than slots under a tiny chunk budget: idle slots
+    are reclaimed LRU-first, the reuse map never exceeds B entries, and
+    the tokens still match an unconstrained serial run."""
+    svc_ref, cfg = make_svc(decode_batch=1)
+    svc, _ = make_svc(decode_batch=2, budget=40_000)
+    ps = prompts_for(cfg, 4, seed=17)
+    order = [0, 1, 2, 3, 0, 2, 1, 3]
+    with svc_ref, svc:
+        stubs_ref = [svc_ref.newLLMCtx() for _ in ps]
+        ref = [svc_ref.callLLM(stubs_ref[i], ps[i], max_new_tokens=3)[1]
+               for i in order]
+        stubs = [svc.newLLMCtx() for _ in ps]
+        out = []
+        for i in order:
+            out.append(svc.callLLM(stubs[i], ps[i], max_new_tokens=3)[1])
+            assert len(svc._reuse) <= 2
+            assert set(svc._reuse) == set(svc.res.slots.idle)
+        assert out == ref
+        # 4 contexts rotated through 2 slots: parked caches were evicted
+        assert set(svc.res.slots.idle) < {s.ctx_id for s in stubs}
+        assert svc.stats()["decode_slots"] == 2
+
+
+def test_slot_allocator_refuses_oversubscription():
+    """Holding more slots than exist is a scheduler bug and raises
+    before any state is corrupted."""
+    svc, cfg = make_svc(decode_batch=2)
+    ps = prompts_for(cfg, 3, seed=19)
+    with svc:
+        sts = []
+        for p in ps[:2]:
+            stub = svc.newLLMCtx()
+            sts.append(svc.begin_call(
+                stub, GenerationRequest(prompt=p, max_new_tokens=4)))
+        stub3 = svc.newLLMCtx()
+        with pytest.raises(RuntimeError):
+            svc.begin_call(stub3,
+                           GenerationRequest(prompt=ps[2], max_new_tokens=4))
+        # the refused call left nothing behind: finish the residents and
+        # the third context still serves
+        for st in sts:
+            while svc.decode_step(st) is not None:
+                pass
+            svc.finish_call(st)
+        assert len(svc.callLLM(stub3, ps[2], max_new_tokens=2)[1]) == 2
+
+
+# --------------------------------------------------------------------- #
+# preemption evicts ONE slot; the rest of the batch keeps decoding
+# --------------------------------------------------------------------- #
+def test_preemption_evicts_single_slot():
+    svc, cfg = make_svc(decode_batch=2)
+    ps = prompts_for(cfg, 3, seed=23)
+    with svc, ServiceRouter(svc, predict=False, start=True,
+                            slice_steps=2) as router:
+        bg = router.register_app("agent", "background")
+        fg = router.register_app("chat", "foreground")
+        fg_stub = fg.new_ctx()              # before the bg batch holds
+        bg_stubs = [bg.new_ctx(), bg.new_ctx()]     # the service lock
+        bgs = [bg.stream(stub, p, max_new_tokens=48)
+               for stub, p in zip(bg_stubs, ps[:2])]
+        deadline = time.time() + 120
+        while any(s.t_first_token is None for s in bgs):
+            assert time.time() < deadline, "bg batch never started"
+            time.sleep(0.001)
+        fg_s = fg.stream(fg_stub, ps[2], max_new_tokens=4)
+        fg_s.result(timeout=120)
+        router.drain()
+        assert router.preemptions >= 1
+        # exactly one background slot was evicted for the foreground
+        # request; its batch-mate kept its slot and kept decoding
+        preempted = [s for s in bgs if s.n_preempts > 0]
+        assert len(preempted) == 1
+        survivor = next(s for s in bgs if s.n_preempts == 0)
+        assert any(t > fg_s.t_first_token for t in survivor.token_times)
+        for s in bgs:                       # preemption loses no tokens
+            assert len(s.result(timeout=120)) == 48
+
+
+def test_exclusive_head_drains_batch_without_thrash():
+    """Regression: a queued exclusive request must not trigger repeated
+    preemptions it can never profit from (it needs the WHOLE engine),
+    and batch formation must not refill past it — the running batch
+    drains, then the exclusive job runs alone, then the rest."""
+    svc, cfg = make_svc(decode_batch=2)
+    ps = prompts_for(cfg, 4, seed=37)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        bg = router.register_app("agent", "background")
+        fg = router.register_app("chat", "foreground")
+        bgs = [bg.stream(bg.new_ctx(), p, max_new_tokens=6)
+               for p in ps[:2]]
+        router.pump()                       # bg batch underway, parked
+        solo = fg.submit_request(
+            fg.new_ctx(), GenerationRequest(prompt=ps[2], max_new_tokens=4,
+                                            exclusive=True))
+        late_bg = bg.stream(bg.new_ctx(), ps[3], max_new_tokens=2)
+        router.drain()
+        assert router.preemptions == 0      # no futile slot evictions
+        assert len(solo.result()) == 4
+        for s in bgs:
+            assert len(s.result()) == 6
+        assert len(late_bg.result()) == 2
+        # nothing behind the exclusive head jumped the line: the late bg
+        # job only decoded after the exclusive stream finished
+        assert late_bg.t_first_token > solo.t_done
+
+
+def test_running_exclusive_preempted_by_foreground():
+    """Regression: a running exclusive generation blocks every slot, so
+    it must count as a full engine for the preemption check — a
+    foreground arrival evicts it instead of waiting out its whole
+    generation."""
+    svc, cfg = make_svc(decode_batch=2)
+    ps = prompts_for(cfg, 2, seed=41)
+    with svc, ServiceRouter(svc, predict=False, start=True,
+                            slice_steps=2) as router:
+        bg = router.register_app("agent", "background")
+        fg = router.register_app("chat", "foreground")
+        fg_stub, bg_stub = fg.new_ctx(), bg.new_ctx()
+        solo = bg.submit_request(
+            bg_stub, GenerationRequest(prompt=ps[0], max_new_tokens=48,
+                                       exclusive=True))
+        deadline = time.time() + 120
+        while solo.t_first_token is None:
+            assert time.time() < deadline, "exclusive stream never started"
+            time.sleep(0.001)
+        fg_s = fg.stream(fg_stub, ps[1], max_new_tokens=4)
+        fg_s.result(timeout=120)
+        router.drain()
+        assert router.preemptions >= 1 and solo.n_preempts >= 1
+        assert fg_s.t_done < solo.t_done    # fg did not wait out 48 tokens
+        assert len(solo.result(timeout=120)) == 48
+
+
+def test_exclusive_request_runs_alone():
+    svc, cfg = make_svc(decode_batch=4)
+    ps = prompts_for(cfg, 3, seed=29)
+    with svc, ServiceRouter(svc, predict=False, slice_steps=2) as router:
+        app = router.register_app("a", "fg")
+        solo = app.submit_request(
+            app.new_ctx(),
+            GenerationRequest(prompt=ps[0], max_new_tokens=4,
+                              exclusive=True))
+        mates = [app.stream(app.new_ctx(), p, max_new_tokens=4)
+                 for p in ps[1:]]
+        assert router.pump()                # slice 1: the exclusive job only
+        assert len(solo.tokens) == 2
+        assert all(not s.tokens for s in mates)
+        router.drain()
+        assert len(solo.result()) == 4
+        assert all(len(s.result()) == 4 for s in mates)
+
+
+# --------------------------------------------------------------------- #
+# router stop-check satellite: no dispatch after abort()
+# --------------------------------------------------------------------- #
+def test_pump_refuses_work_after_abort():
+    """Regression: pump() used to pop and RUN a queued job after abort()
+    had promised to cancel it."""
+    svc, cfg = make_svc(decode_batch=1)
+    with svc:
+        router = ServiceRouter(svc, predict=False, slice_steps=2)
+        app = router.register_app("a", "fg")
+        stub = app.new_ctx()
+        s = app.stream(stub, prompts_for(cfg, 1, seed=31)[0],
+                       max_new_tokens=4)
+        router.abort()
+        assert s.cancelled
+        assert not router.pump()            # refuses: router is stopped
+        assert svc.contexts[stub.ctx_id].n_tokens == 0      # never ran
