@@ -26,7 +26,6 @@ Conventions (per chip, per step):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Dict
 
 from repro.configs import SHAPES, get_config

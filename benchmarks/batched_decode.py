@@ -9,7 +9,13 @@ throughput at batch 4 with foreground TTFT no worse than the sliced
 serial path.
 
   PYTHONPATH=src:. python benchmarks/batched_decode.py \
-      [--out BENCH_batched_decode.json]
+      [--out BENCH_batched_decode.json] [--reduced]
+
+``--reduced`` shrinks the trace (8 calls x 24 new tokens) for the CI
+bench-regression smoke: ratios (speedup, fg-TTFT ratio) are
+machine-portable, absolute tok/s are not — the committed baseline keeps
+a ``reduced`` section recorded with the same settings for
+``benchmarks/check_regression.py`` to gate against.
 """
 from __future__ import annotations
 
@@ -30,13 +36,13 @@ BUDGET = 4 << 20
 SLICE_STEPS = 4
 
 
-def run_pass(router, apps, events, stubs, session_of):
+def run_pass(router, apps, events, stubs, session_of, max_new):
     streams = []
     t0 = time.perf_counter()
     for ev in events:
         sess = session_of[ev.ctx_id]
         streams.append(sess.stream(stubs[ev.ctx_id], ev.prompt.tolist(),
-                                   max_new_tokens=MAX_NEW))
+                                   max_new_tokens=max_new))
     router.drain()
     wall = time.perf_counter() - t0
     for s in streams:
@@ -44,7 +50,7 @@ def run_pass(router, apps, events, stubs, session_of):
     return streams, wall
 
 
-def bench(decode_batch: int):
+def bench(decode_batch: int, n_calls: int = N_CALLS, max_new: int = MAX_NEW):
     cfg, _, _ = bench_model()
     svc = make_service("llms", BUDGET, decode_batch=decode_batch)
     # one conversation per context, one context per call: N_CALLS
@@ -54,7 +60,7 @@ def bench(decode_batch: int):
     # batch, so a ctx-clustered trace measures the scheduler, not the
     # engine)
     events = [dataclasses.replace(ev, ctx_id=i) for i, ev in enumerate(
-        bench_events(N_CALLS, N_CALLS, pattern="random", seed=0,
+        bench_events(n_calls, n_calls, pattern="random", seed=0,
                      scale=0.03))]
     with svc, ServiceRouter(svc, predict=True, start=False,
                             slice_steps=SLICE_STEPS) as router:
@@ -65,13 +71,14 @@ def bench(decode_batch: int):
         stubs = {cid: sess.new_ctx() for cid, sess in session_of.items()}
 
         set_disk_throttle(None)             # warm pass: compile everything
-        run_pass(router, apps, events, stubs, session_of)
+        run_pass(router, apps, events, stubs, session_of, max_new)
         svc.records.clear()
         router.call_records.clear()
         router.decode_rounds = router.decoded_tokens = 0
         set_disk_throttle(25e6, 2e-4)
 
-        streams, wall = run_pass(router, apps, events, stubs, session_of)
+        streams, wall = run_pass(router, apps, events, stubs, session_of,
+                                 max_new)
         gen_tokens = sum(len(s.tokens) for s in streams)
         rst = router.stats()
         out = {
@@ -92,17 +99,18 @@ def bench(decode_batch: int):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_batched_decode.json")
-    args = ap.parse_args()
-    serial = bench(1)
-    batched = bench(4)
+REDUCED_CALLS = 8
+REDUCED_MAX_NEW = 24
+
+
+def run_ab(n_calls: int, max_new: int):
+    serial = bench(1, n_calls, max_new)
+    batched = bench(4, n_calls, max_new)
     speedup = (batched["aggregate_tokens_per_s"]
                / serial["aggregate_tokens_per_s"])
-    report = {
-        "trace": {"apps": N_APPS, "contexts": N_CALLS, "calls": N_CALLS,
-                  "max_new": MAX_NEW, "slice_steps": SLICE_STEPS,
+    return {
+        "trace": {"apps": N_APPS, "contexts": n_calls, "calls": n_calls,
+                  "max_new": max_new, "slice_steps": SLICE_STEPS,
                   "priority_mix": "1 fg : 3 bg"},
         "serial": serial,
         "batch4": batched,
@@ -111,6 +119,25 @@ def main():
             batched["foreground_ttft_mean_s"]
             / max(serial["foreground_ttft_mean_s"], 1e-9), 3),
     }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_batched_decode.json")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI-sized trace only (the regression-gate A/B)")
+    ap.add_argument("--calls", type=int, default=None)
+    ap.add_argument("--max-new", type=int, default=None)
+    args = ap.parse_args()
+    if args.reduced:
+        n_calls = args.calls or REDUCED_CALLS
+        max_new = args.max_new or REDUCED_MAX_NEW
+        report = run_ab(n_calls, max_new)
+    else:
+        report = run_ab(args.calls or N_CALLS, args.max_new or MAX_NEW)
+        # the CI regression gate replays the reduced A/B on a different
+        # machine; only ratio metrics are portable, so record them here
+        report["reduced"] = run_ab(REDUCED_CALLS, REDUCED_MAX_NEW)
     with open(args.out, "w") as f:
         json.dump(report, f, indent=1)
     print(json.dumps(report, indent=1))

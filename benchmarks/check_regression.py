@@ -1,0 +1,80 @@
+"""CI bench regression gate: compare a fresh batched-decode A/B against
+the committed baseline and fail on a >30% regression.
+
+Only RATIO metrics are compared — both are measured serial-vs-batch on
+the SAME machine in the same process, so they are portable between this
+repo's container and a CI runner, unlike absolute tokens/s:
+
+  * ``aggregate_decode_speedup`` (batch-4 over serial throughput) must
+    not fall more than ``--tol`` below the baseline's,
+  * ``fg_ttft_ratio_batch4_vs_serial`` (lower = batching protects
+    foreground TTFT) must not rise more than ``--tol`` above it.
+
+The committed BENCH_batched_decode.json carries a ``reduced`` section
+recorded with the CI trace size; the gate compares like against like.
+
+  PYTHONPATH=src:. python benchmarks/check_regression.py \
+      --fresh /tmp/fresh.json [--baseline BENCH_batched_decode.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def section(doc: dict) -> dict:
+    """The comparable metrics of a bench JSON (reduced section if the
+    file is a full run that embeds one)."""
+    return doc.get("reduced", doc)
+
+
+def check(baseline: dict, fresh: dict, tol: float):
+    base, new = section(baseline), section(fresh)
+    failures = []
+
+    b_sp = base["aggregate_decode_speedup"]
+    f_sp = new["aggregate_decode_speedup"]
+    floor = b_sp * (1.0 - tol)
+    if f_sp < floor:
+        failures.append(
+            f"aggregate decode speedup regressed: {f_sp:.2f}x vs baseline "
+            f"{b_sp:.2f}x (floor {floor:.2f}x at tol {tol:.0%})")
+
+    b_tt = base["fg_ttft_ratio_batch4_vs_serial"]
+    f_tt = new["fg_ttft_ratio_batch4_vs_serial"]
+    ceil = b_tt * (1.0 + tol)
+    if f_tt > ceil:
+        failures.append(
+            f"foreground TTFT ratio regressed: {f_tt:.3f} vs baseline "
+            f"{b_tt:.3f} (ceiling {ceil:.3f} at tol {tol:.0%})")
+
+    report = {
+        "baseline_speedup": b_sp, "fresh_speedup": f_sp,
+        "baseline_fg_ttft_ratio": b_tt, "fresh_fg_ttft_ratio": f_tt,
+        "tolerance": tol, "failures": failures,
+    }
+    return failures, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_batched_decode.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tol", type=float, default=0.30)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures, report = check(baseline, fresh, args.tol)
+    print(json.dumps(report, indent=1))
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        sys.exit(1)
+    print("bench regression gate: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,7 +31,6 @@ from benchmarks.common import csv_line
 from repro.configs import get_config
 from repro.core import compression as comp
 from repro.core.chunks import ChunkCodec
-from repro.data.pipeline import markov_sample, markov_table
 from repro.launch.train import make_train_step
 from repro.models.registry import build_model
 from repro.train.optimizer import OptConfig, init_state

@@ -8,7 +8,6 @@ via the dry-run's ShapeDtypeStructs).
 """
 from __future__ import annotations
 
-import dataclasses
 
 from repro.configs.base import (
     EncoderConfig,

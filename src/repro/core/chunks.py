@@ -13,9 +13,8 @@ service directly (DESIGN.md §Arch-applicability).
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +50,24 @@ class CompressedChunk:
         return sum(p.nbytes + s.nbytes for p, s in self.data.values())
 
 
+@dataclass
+class QuantResidentChunk:
+    """One chunk's DECODE-GRID payload: leaf -> (codes (T, F) int8,
+    scales (T, F//hd) fp32), quantized per (token, kv-head) over the
+    trailing head_dim — the grid the fused decode-attention kernels
+    consume (kernels/decode_qattn.py), so switch-in is a pure scatter
+    of these bytes into the slot's int8 segments: no dequantization.
+    The per-leaf head_dim is recoverable as codes.F // scales.Fs."""
+    n_tokens: int
+    data: Dict[str, Tuple[np.ndarray, np.ndarray]]
+    shapes: Dict[str, Tuple[int, ...]]          # (T, F) block shapes
+    bits: int = 8                               # decode grid is int8
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes + s.nbytes for p, s in self.data.values())
+
+
 class ChunkCodec:
     """Extract / insert / (de)quantize chunks of a cache pytree."""
 
@@ -64,6 +81,26 @@ class ChunkCodec:
         self._q = jax.jit(kops.chunk_quantize, static_argnames=("bits",))
         self._dq = jax.jit(kops.chunk_dequantize,
                            static_argnames=("bits", "n_tokens"))
+
+        def _qth(blk, hd):
+            """(T, F) block -> decode-grid (codes (T, F) int8,
+            scales (T, F//hd) fp32): symmetric max-abs per (token,
+            flattened (layer, kv-head)) group over head_dim."""
+            from repro.kernels import ref as kref
+            T, F = blk.shape
+            codes, scale = kref.quantize_token_head_ref(
+                blk.reshape(T, F // hd, hd))
+            return codes.reshape(T, F), scale
+
+        def _dqth(codes, scale, hd, dtype):
+            from repro.kernels import ref as kref
+            T, F = codes.shape
+            out = kref.dequantize_token_head_ref(
+                codes.reshape(T, F // hd, hd), scale, dtype)
+            return out.reshape(T, F)
+
+        self._qth = jax.jit(_qth, static_argnames=("hd",))
+        self._dqth = jax.jit(_dqth, static_argnames=("hd", "dtype"))
 
     # -- canonical (T, F) view ------------------------------------------ #
     def extract(self, cache, lo: int, hi: int) -> Dict[str, Array]:
@@ -106,22 +143,99 @@ class ChunkCodec:
             new[name] = a.at[:, :, positions].set(t)
         return new
 
+    # -- decode-grid (quant-resident) payloads -------------------------- #
+    def quantize_resident_blocks(self, blocks: Dict[str, Array],
+                                 head_dims: Dict[str, int]
+                                 ) -> QuantResidentChunk:
+        """(T, F) float blocks -> decode-grid payload (e.g. re-gridding a
+        dequantized 4/2-bit storage chunk behind the fused kernel)."""
+        data, shapes = {}, {}
+        for name, blk in blocks.items():
+            codes, scale = self._qth(blk, hd=head_dims[name])
+            data[name] = (np.asarray(codes), np.asarray(scale))
+            shapes[name] = tuple(blk.shape)
+        return QuantResidentChunk(n_tokens=next(
+            iter(blocks.values())).shape[0], data=data, shapes=shapes)
+
+    def dequantize_resident(self, qc: QuantResidentChunk,
+                            dtype=jnp.bfloat16) -> Dict[str, Array]:
+        """Materialize a decode-grid payload as (T, F) bf16 blocks (the
+        full-dequant control path; the fused kernels compute exactly
+        these values inline)."""
+        out = {}
+        for name, (codes, scale) in qc.data.items():
+            hd = codes.shape[1] // scale.shape[1]
+            out[name] = self._dqth(jnp.asarray(codes), jnp.asarray(scale),
+                                   hd=hd, dtype=dtype)
+        return out
+
+    def scatter_quant(self, cache, positions: Array,
+                      codes: Dict[str, Array], scales: Dict[str, Array]):
+        """Write decode-grid (T, F) code blocks / (T, Fs) scale blocks
+        into the ``<leaf>_q`` / ``<leaf>_scale`` segments at token
+        ``positions`` (T,) and raise quant_mask there.  The pure-memcpy
+        switch-in of the QUANT_RESIDENT tier."""
+        new = dict(cache)
+        for name in codes:
+            for leaf, blk in ((f"{name}_q", codes[name]),
+                              (f"{name}_scale", scales[name])):
+                a = cache[leaf]
+                T = blk.shape[0]
+                shp = list(a.shape)
+                shp[TOKEN_AXIS] = T
+                t = blk.reshape([T] + [s for i, s in enumerate(shp)
+                                       if i != TOKEN_AXIS])
+                t = jnp.moveaxis(t, 0, TOKEN_AXIS).astype(a.dtype)
+                new[leaf] = a.at[:, :, positions].set(t)
+        new["quant_mask"] = cache["quant_mask"].at[:, :, positions].set(True)
+        return new
+
     def leaf_slice_shape(self, cache_shapes: Dict[str, Tuple[int, ...]],
                          name: str, T: int) -> Tuple[int, ...]:
         shp = list(cache_shapes[name])
         shp[TOKEN_AXIS] = T
         return tuple(shp)
 
+    def extract_mixed(self, cache, lo: int, hi: int) -> Dict[str, Array]:
+        """(T, F) blocks of the TRUE cache values of tokens [lo, hi):
+        the bf16 window where quant_mask is clear, the fused dequant of
+        the int8 segments where it is set.  The only valid re-encode
+        source for a mixed cache — the bf16 array is stale at
+        quant-resident positions."""
+        out = self.extract(cache, lo, hi)
+        if "quant_mask" not in cache:
+            return out
+        qm = cache["quant_mask"]                    # (1, B, S)
+        assert qm.shape[1] == 1, "mixed extract expects a batch-1 slot"
+        m = jax.lax.slice_in_dim(qm, lo, hi, axis=TOKEN_AXIS)
+        m = m.reshape(-1)[:, None]                  # (T, 1)
+        for name in self.leaves:
+            hd = cache[name].shape[-1]
+            cq = jnp.moveaxis(jax.lax.slice_in_dim(
+                cache[f"{name}_q"], lo, hi, axis=TOKEN_AXIS), TOKEN_AXIS, 0)
+            sc = jnp.moveaxis(jax.lax.slice_in_dim(
+                cache[f"{name}_scale"], lo, hi, axis=TOKEN_AXIS),
+                TOKEN_AXIS, 0)
+            T = cq.shape[0]
+            dq = (cq.reshape(T, -1, hd).astype(jnp.float32)
+                  * sc.reshape(T, -1)[..., None]).astype(out[name].dtype)
+            out[name] = jnp.where(m, dq.reshape(T, -1), out[name])
+        return out
+
     # -- compression ------------------------------------------------------ #
     def compress(self, cache, lo: int, hi: int, bits: int) -> CompressedChunk:
-        blocks = self.extract(cache, lo, hi)
+        return self.compress_blocks(self.extract(cache, lo, hi), bits)
+
+    def compress_blocks(self, blocks: Dict[str, Array],
+                        bits: int) -> CompressedChunk:
         data, shapes = {}, {}
         for name, blk in blocks.items():
             packed, scale = self._q(blk, bits=bits)
             data[name] = (np.asarray(packed), np.asarray(scale))
             shapes[name] = blk.shape
-        return CompressedChunk(bits=bits, n_tokens=hi - lo, data=data,
-                               shapes=shapes)
+        return CompressedChunk(bits=bits,
+                               n_tokens=next(iter(blocks.values())).shape[0],
+                               data=data, shapes=shapes)
 
     def decompress(self, cc: CompressedChunk) -> Dict[str, Array]:
         out = {}
@@ -152,6 +266,10 @@ class ChunkMeta:
     n_covered: int = 0             # context tokens the payload encodes: a
                                    # partial chunk that grew must re-encode
                                    # even if clean (KV is append-only)
+    quant: bool = False            # payload is a decode-grid
+                                   # QuantResidentChunk (QUANT_RESIDENT
+                                   # when in_memory: switch-in is a pure
+                                   # scatter behind the fused kernel)
 
 
 def chunk_ranges(n_tokens: int, cs: int) -> List[Tuple[int, int]]:

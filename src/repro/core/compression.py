@@ -21,7 +21,7 @@ tests.
 from __future__ import annotations
 
 import itertools
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

@@ -13,7 +13,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.chunks import ChunkMeta, CompressedChunk
+from repro.core.chunks import ChunkMeta, CompressedChunk, QuantResidentChunk
 from repro.core.lifecycle import MemoryManager
 from repro.core.swap import DiskStore
 
@@ -31,6 +31,12 @@ class Context:
     n_tokens: int = 0
     chunks: Dict[int, ChunkMeta] = field(default_factory=dict)
     payload: Dict[int, CompressedChunk] = field(default_factory=dict)
+    # decode-grid memo of packed 4/2-bit payloads (quant-resident tier):
+    # the unpack+re-grid to int8 runs once per re-encode, not per
+    # switch-in.  Charged at the PACKED payload size — the decodable
+    # int8 form is bookkept as if unpacked on the fly (DESIGN.md §2) —
+    # and dropped with the payload on evict/condense.
+    qmemo: Dict[int, "QuantResidentChunk"] = field(default_factory=dict)
     whole: Optional[Dict[str, np.ndarray]] = None   # non-chunked policies
     whole_tokens: int = 0
     alive: bool = True                      # lmk: killed => False
@@ -103,6 +109,7 @@ class ContextStore:
         self.mem.unregister((ctx.cid, -1))
         ctx.chunks.clear()
         ctx.payload.clear()
+        ctx.qmemo.clear()
         ctx.whole = None
         ctx.tokens[:] = 0
         ctx.n_tokens = 0

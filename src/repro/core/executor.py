@@ -116,6 +116,15 @@ class ModelExecutor:
         self.codec = ChunkCodec(mc.family, self.cs)
         self.recomputable = mc.family in ("dense", "mla_moe")
 
+        # quant-resident working cache: bf16 recent window + int8 chunk
+        # segments the fused decode-attention kernels read in place
+        self.quant_resident = bool(getattr(cfg, "quant_resident", False))
+        if self.quant_resident and not getattr(
+                model, "supports_quant_resident", False):
+            raise ValueError(
+                f"family {mc.family!r} does not support the quant-resident "
+                "working cache (models opt in via supports_quant_resident)")
+
         # working cache: decode_batch independent slot caches (the
         # paper's working-set lock generalized to a slot table); each
         # slot is a batch-1 cache restored/switched independently, and
@@ -128,7 +137,11 @@ class ModelExecutor:
         self.batch_buckets = _pow2_buckets(1, self.decode_slots)
         self.s_work = self.n_slots + self.tok_buckets[-1]
         self.pad_slot = self.s_work - 1
-        self.work_cache = model.init_cache(1, self.s_work)
+        if self.quant_resident:
+            self.work_cache = model.init_cache(1, self.s_work,
+                                               mixed_quant=True)
+        else:
+            self.work_cache = model.init_cache(1, self.s_work)
         self._zero_cache = self.work_cache
 
         self._fp = model_fingerprint(model, params)
@@ -148,6 +161,7 @@ class ModelExecutor:
                                   ).astype(jnp.float32)),
                 "insert": jax.jit(self.codec.insert),
                 "scatter": jax.jit(self.codec.scatter),
+                "scatter_quant": jax.jit(self.codec.scatter_quant),
                 "setpos": jax.jit(lambda c, p: {**c, "pos": p}),
             }
             _jit_cache_put(ck, cached)
@@ -157,6 +171,7 @@ class ModelExecutor:
         self.logits_fn = cached["logits"]
         self.insert_fn = cached["insert"]
         self.scatter_fn = cached["scatter"]
+        self.scatter_quant_fn = cached["scatter_quant"]
         self.setpos_fn = cached["setpos"]
 
         shapes = {k: v.shape for k, v in self.work_cache.items()
@@ -244,8 +259,12 @@ class ModelExecutor:
 
     def _batch_fns(self, nb: int):
         """(merge, step, split) jitted callables for batch bucket nb."""
+        # keyed on quant_resident too: merge/split close over the leaf
+        # list of THIS executor's cache structure (mixed caches carry
+        # k_q/v_q/scale/quant_mask leaves a plain cache doesn't)
         ck = (self._fp, self.cfg.window, self.cfg.n_sinks,
-              self.model.cfg.family, self.cs, "batch", nb)
+              self.model.cfg.family, self.cs, self.quant_resident,
+              "batch", nb)
         fns = _jit_cache_get(ck)
         if fns is None:
             model = self.model

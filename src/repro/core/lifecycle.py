@@ -14,7 +14,7 @@ owns only the eviction order plus the Claim/Reclaim bookkeeping.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Callable, Dict, Hashable, List, Optional, Set, Tuple
+from typing import Callable, Dict, Optional, Set, Tuple
 
 Key = Tuple[int, int]              # (ctx_id, chunk_idx)
 

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as comp
-from repro.core.chunks import ChunkMeta, CompressedChunk
+from repro.core.chunks import ChunkMeta, CompressedChunk, QuantResidentChunk
 from repro.core.context_store import Context, ContextStore
 from repro.core.executor import ModelExecutor
 from repro.core.lifecycle import LCTRUQueue, MemoryManager
@@ -115,6 +115,13 @@ class ResidencyEngine:
         self.profile = PipelineProfile()
         self.profiled = False
         self.epoch = 0                      # bumped on any eviction
+        # A/B control for the quant-resident tier: with the flag set,
+        # switch-in MATERIALIZES every quant payload into the bf16 slot
+        # (full-dequant baseline) instead of scattering codes behind the
+        # fused kernel.  Payload creation is unaffected, so the two legs
+        # decode from identical quantized representations — the
+        # token-identity contract benchmarks/tests rely on.
+        self.force_dequant = False
 
     # ------------------------------------------------------------------ #
     # switch-in: restore every chunk to memory (Load primitive)
@@ -131,15 +138,30 @@ class ResidencyEngine:
             return self._restore_whole_timed(ctx, cache)
 
         # ---- assembly of resident chunks (inference-side cost) -------- #
+        # quant mode: compressed chunks go BEHIND the fused kernel —
+        # decode-grid payloads scatter their codes verbatim (a pure
+        # memcpy, the QUANT_RESIDENT no-op switch-in), packed 4/2-bit
+        # payloads unpack + re-grid to int8; only bf16-raw (16-bit)
+        # chunks still materialize in the bf16 window
+        quant_mode = self.exe.quant_resident and not self.force_dequant
         by_bits: Dict[int, List[int]] = {}
+        q_idxs: List[int] = []
         for i, m in sorted(ctx.chunks.items()):
             if m.in_memory:
-                by_bits.setdefault(m.bits, []).append(i)
+                if quant_mode and m.bits != 16:
+                    q_idxs.append(i)
+                else:
+                    by_bits.setdefault(m.bits, []).append(i)
                 self.queue.touch((ctx.cid, i), m.bits)
                 m.last_access = time.time()
+        if q_idxs:
+            cache = self._assemble_quant(ctx, cache, q_idxs)
         for bits, idxs in by_bits.items():
+            # decode each payload once, not once per leaf
+            chunk_blocks = [self._payload_blocks(ctx.payload[i])
+                            for i in idxs]
             blocks = {name: jnp.concatenate(
-                [self._payload_blocks(ctx.payload[i])[name] for i in idxs])
+                [cb[name] for cb in chunk_blocks])
                 for name in exe.codec.leaves}
             pos = exe.chunk_positions(idxs)
             pos_b = exe.bucket_pad(pos, exe.pad_slot)
@@ -161,6 +183,47 @@ class ResidencyEngine:
             cache = self._restore_chunks(ctx, cache, re_idx, io_idx)
             jax.block_until_ready(cache[exe.codec.leaves[0]])
         return cache, time.perf_counter() - t0
+
+    def _assemble_quant(self, ctx: Context, cache, idxs: List[int]):
+        """QUANT_RESIDENT assembly: one scatter of decode-grid codes +
+        per-(token, kv-head) scales into the slot's int8 segments, no
+        dequantization.  8-bit chunks (QuantResidentChunk) contribute
+        their payload bytes verbatim; packed 4/2-bit chunks are unpacked
+        and re-gridded to int8 in place (lossless unpack + a <=1/254
+        relative re-rounding, far inside their quantization error)."""
+        exe = self.exe
+        codec = exe.codec
+        head_dims = {n: exe.work_cache[n].shape[-1] for n in codec.leaves}
+        codes = {n: [] for n in codec.leaves}
+        scales = {n: [] for n in codec.leaves}
+        for i in idxs:
+            cc = ctx.payload[i]
+            if not isinstance(cc, QuantResidentChunk):
+                cc = ctx.qmemo.get(i)
+                if cc is None:      # re-grid once per (re-)encode
+                    cc = codec.quantize_resident_blocks(
+                        self._payload_blocks(ctx.payload[i]), head_dims)
+                    ctx.qmemo[i] = cc
+            for n in codec.leaves:
+                codes[n].append(cc.data[n][0])
+                scales[n].append(cc.data[n][1])
+        pos = exe.chunk_positions(idxs)
+        pos_b = exe.bucket_pad(pos, exe.pad_slot)
+        pad = len(pos_b) - len(pos)
+
+        def assemble(parts):
+            # payloads are host numpy: concatenate + pad on the host and
+            # ship ONE array per leaf (jnp.concatenate would compile a
+            # kernel per (chunk-count, pad) combination)
+            out = np.concatenate([np.asarray(p) for p in parts])
+            if pad:
+                out = np.concatenate(
+                    [out, np.zeros((pad,) + out.shape[1:], out.dtype)])
+            return jnp.asarray(out)
+
+        cblk = {n: assemble(codes[n]) for n in codec.leaves}
+        sblk = {n: assemble(scales[n]) for n in codec.leaves}
+        return exe.scatter_quant_fn(cache, jnp.asarray(pos_b), cblk, sblk)
 
     def _plan_restore(self, ctx, missing: List[int]
                       ) -> Tuple[List[int], List[int]]:
@@ -206,10 +269,22 @@ class ResidencyEngine:
             futs = {i: self.swapper.pool.submit(
                 read_chunk_file, self.store._path((ctx.cid, i)))
                 for i in io_idx}
+            quant_mode = exe.quant_resident and not self.force_dequant
             for i in io_idx:
                 cc = futs[i].result()
-                cache = exe.insert_fn(cache, jnp.int32(i * exe.cs),
-                                      self._payload_blocks(cc))
+                if quant_mode and isinstance(cc, QuantResidentChunk):
+                    # decode-grid bytes go straight back behind the
+                    # fused kernel — the read IS the restore
+                    pos = jnp.asarray(exe.chunk_positions([i]))
+                    cache = exe.scatter_quant_fn(
+                        cache, pos,
+                        {n: jnp.asarray(cc.data[n][0])
+                         for n in exe.codec.leaves},
+                        {n: jnp.asarray(cc.data[n][1])
+                         for n in exe.codec.leaves})
+                else:
+                    cache = exe.insert_fn(cache, jnp.int32(i * exe.cs),
+                                          self._payload_blocks(cc))
                 self._mark_loaded(ctx, i, payload=cc)
             if re_idx:   # second phase (exact: I/O chunks now resident)
                 miss_pos = exe.chunk_positions(re_idx)
@@ -222,7 +297,11 @@ class ResidencyEngine:
         # recomputed chunks: re-encode payload at their assigned level
         for i in re_idx:
             m = ctx.chunks[i]
-            ctx.payload[i] = self._make_payload(cache, i, m.bits)
+            want_quant = self.exe.quant_resident and m.bits == 8
+            ctx.payload[i] = self._make_payload(cache, i, m.bits,
+                                                quant=want_quant)
+            ctx.qmemo.pop(i, None)
+            m.quant = want_quant
             m.in_memory, m.dirty = True, False    # already on disk
             self.mem.register((ctx.cid, i), m.nbytes, m.bits)
         return cache
@@ -231,8 +310,10 @@ class ResidencyEngine:
         if payload is None:
             payload = read_chunk_file(self.store._path((ctx.cid, i)))
         ctx.payload[i] = payload
+        ctx.qmemo.pop(i, None)
         m = ctx.chunks[i]
         m.in_memory, m.dirty = True, False
+        m.quant = isinstance(payload, QuantResidentChunk)
         self.mem.register((ctx.cid, i), m.nbytes, m.bits)
 
     # -- whole-context policies (swap / lmk) ----------------------------- #
@@ -283,23 +364,36 @@ class ResidencyEngine:
         return sum(v.nbytes for v in (ctx.whole or {}).values())
 
     # -- payload codecs ------------------------------------------------- #
-    def _payload_blocks(self, cc: CompressedChunk) -> Dict[str, jax.Array]:
+    def _payload_blocks(self, cc) -> Dict[str, jax.Array]:
+        if isinstance(cc, QuantResidentChunk):
+            return self.exe.codec.dequantize_resident(cc)
         if cc.bits == 16:
             return {k: jnp.asarray(p).astype(jnp.bfloat16)
                     for k, (p, _) in cc.data.items()}
         return self.exe.codec.decompress(cc)
 
-    def _make_payload(self, cache, i: int, bits: int) -> CompressedChunk:
+    def _make_payload(self, cache, i: int, bits: int, quant: bool = False):
+        """Encode chunk i from the slot cache.  ``quant=True`` -> a
+        decode-grid QuantResidentChunk; otherwise the storage codec at
+        ``bits``.  A mixed cache is read through ``extract_mixed`` — its
+        bf16 array is stale at quant-resident positions."""
         cs = self.exe.cs
         lo, hi = i * cs, (i + 1) * cs
+        codec = self.exe.codec
+        blocks = (codec.extract_mixed(cache, lo, hi)
+                  if self.exe.quant_resident
+                  else codec.extract(cache, lo, hi))
+        if quant:
+            head_dims = {n: self.exe.work_cache[n].shape[-1]
+                         for n in codec.leaves}
+            return codec.quantize_resident_blocks(blocks, head_dims)
         if bits == 16:
-            blocks = self.exe.codec.extract(cache, lo, hi)
             return CompressedChunk(
                 bits=16, n_tokens=cs,
                 data={k: (np.asarray(v, np.float16), np.zeros(0, np.float32))
                       for k, v in blocks.items()},
                 shapes={k: tuple(v.shape) for k, v in blocks.items()})
-        return self.exe.codec.compress(cache, lo, hi, bits)
+        return codec.compress_blocks(blocks, bits)
 
     # ------------------------------------------------------------------ #
     # compress + AoT swap-out (Reclaim is then free)
@@ -331,14 +425,35 @@ class ResidencyEngine:
                 m = ChunkMeta(idx=i)
                 ctx.chunks[i] = m
             want = int(bits[i])
+            # §3.2 Eq. 3 bucket -> residency representation: in quant
+            # mode an 8-bit chunk is PROMOTED to the decode grid (its
+            # payload becomes directly decodable; switch-in degenerates
+            # to a memcpy); 4/2-bit chunks keep the packed storage
+            # codec — still charged at packed size — and are re-gridded
+            # behind the fused kernel at assembly time
+            want_quant = self.exe.quant_resident and want == 8
             m.density = float(D[i])
             covered = min(ctx.n_tokens - i * cs, cs)
             if (m.dirty or want != m.bits or i not in ctx.payload
-                    or covered != m.n_covered):
-                cc = self._make_payload(cache, i, want)
+                    or covered != m.n_covered or m.quant != want_quant):
+                cc = self._make_payload(cache, i, want, quant=want_quant)
                 ctx.payload[i] = cc
+                ctx.qmemo.pop(i, None)
                 m.bits, m.nbytes, m.n_covered = want, cc.nbytes, covered
+                m.quant = want_quant
                 m.dirty, m.in_memory, m.on_disk = True, True, False
+            # AoT re-grid (§3.4 spirit): a packed 4/2-bit chunk whose
+            # payload was just (re-)encoded gets its decode-grid memo
+            # built NOW, at switch-out, so the next switch-in stays a
+            # pure scatter.  Built from the packed payload (not the raw
+            # cache) so assembly sees identical codes before and after
+            # an eviction/restore round trip.
+            if (self.exe.quant_resident and not m.quant and m.bits != 16
+                    and i not in ctx.qmemo and i in ctx.payload):
+                ctx.qmemo[i] = self.exe.codec.quantize_resident_blocks(
+                    self._payload_blocks(ctx.payload[i]),
+                    {n: self.exe.work_cache[n].shape[-1]
+                     for n in self.exe.codec.leaves})
             self.mem.register((ctx.cid, i), m.nbytes, m.bits)
             m.last_access = time.time()
 
@@ -414,6 +529,7 @@ class ResidencyEngine:
             m.dirty = False
         m.on_disk, m.in_memory = True, False
         ctx.payload.pop(idx, None)
+        ctx.qmemo.pop(idx, None)
 
     # ------------------------------------------------------------------ #
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):

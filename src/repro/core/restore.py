@@ -19,7 +19,6 @@ contiguous on disk.
 """
 from __future__ import annotations
 
-import io
 import os
 import pickle
 import struct
@@ -29,7 +28,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.chunks import CompressedChunk
+from repro.core.chunks import CompressedChunk, QuantResidentChunk
 
 # ----------------------------------------------------------------------- #
 # Disk throttle: benchmarks emulate a mobile storage tier (the paper's
@@ -77,11 +76,15 @@ def np_dequantize(packed: np.ndarray, scale: np.ndarray, bits: int,
 # --------------------------------------------------------------------- #
 # segmented chunk file format
 # --------------------------------------------------------------------- #
-def write_chunk_file(path: str, cc: CompressedChunk, n_layers: int) -> int:
+def write_chunk_file(path: str, cc, n_layers: int) -> int:
     """Serialize layer-major.  F must be layer-major (it is: the codec
-    flattens (L, B, heads, hd) with L outermost)."""
+    flattens (L, B, heads, hd) with L outermost).  Accepts both storage
+    grids: CompressedChunk (per-channel scales, header grid "channel")
+    and QuantResidentChunk (per-(token, kv-head) scales stored as
+    (Fs, T') f32 rows per layer, header grid "token_head")."""
+    grid = "token_head" if isinstance(cc, QuantResidentChunk) else "channel"
     header = {"bits": cc.bits, "n_tokens": cc.n_tokens, "n_layers": n_layers,
-              "leaves": {}}
+              "grid": grid, "leaves": {}}
     segs: List[bytes] = [b""] * n_layers
     for name, (packed, scale) in cc.data.items():
         Tp, F = packed.shape
@@ -89,12 +92,23 @@ def write_chunk_file(path: str, cc: CompressedChunk, n_layers: int) -> int:
         Fl = F // n_layers
         isz = packed.dtype.itemsize
         ssz = 0 if cc.bits == 16 else 4
-        header["leaves"][name] = {"Tp": Tp, "F": F, "Fl": Fl, "isz": isz,
-                                  "ssz": ssz, "shape": cc.shapes[name]}
+        meta = {"Tp": Tp, "F": F, "Fl": Fl, "isz": isz,
+                "ssz": ssz, "shape": cc.shapes[name]}
+        if grid == "token_head":
+            Fs = scale.shape[1]
+            assert Fs % n_layers == 0, (name, Fs, n_layers)
+            meta["Fs"] = Fs
+            meta["Fsl"] = Fs // n_layers
+            meta["sbytes"] = 4 * meta["Fsl"] * Tp
+            st = np.ascontiguousarray(scale.T, dtype=np.float32)  # (Fs, T')
+        header["leaves"][name] = meta
         pt = np.ascontiguousarray(packed.T)         # (F, T')
         for l in range(n_layers):
             segs[l] = segs[l] + pt[l * Fl:(l + 1) * Fl].tobytes()
-            if cc.bits != 16:
+            if grid == "token_head":
+                Fsl = meta["Fsl"]
+                segs[l] = segs[l] + st[l * Fsl:(l + 1) * Fsl].tobytes()
+            elif cc.bits != 16:
                 segs[l] = segs[l] + np.ascontiguousarray(
                     scale[l * Fl:(l + 1) * Fl], dtype=np.float32).tobytes()
     hdr = pickle.dumps(header, protocol=pickle.HIGHEST_PROTOCOL)
@@ -118,7 +132,7 @@ def _read_header(f) -> Tuple[dict, int]:
 
 def _segment_size(header: dict) -> int:
     return sum(m["Fl"] * m["Tp"] * m.get("isz", 1)
-               + m.get("ssz", 4) * m["Fl"]
+               + m.get("sbytes", m.get("ssz", 4) * m["Fl"])
                for m in header["leaves"].values())
 
 
@@ -131,23 +145,38 @@ def read_chunk_layer(f, header: dict, base: int, layer: int
     _throttle(seg)
     out, off = {}, 0
     bits, T = header["bits"], header["n_tokens"]
+    token_head = header.get("grid", "channel") == "token_head"
     for name, m in header["leaves"].items():
         dt = np.float16 if bits == 16 else np.int8
         nb = m["Fl"] * m["Tp"] * m.get("isz", 1)
         pt = np.frombuffer(buf[off:off + nb], dt).reshape(m["Fl"], m["Tp"])
         off += nb
-        ns = m.get("ssz", 4) * m["Fl"]
-        sc = np.frombuffer(buf[off:off + ns], np.float32)
-        off += ns
-        out[name] = np_dequantize(np.ascontiguousarray(pt.T), sc, bits, T)
+        if token_head:
+            ns = m["sbytes"]
+            sc = np.frombuffer(buf[off:off + ns], np.float32
+                               ).reshape(m["Fsl"], m["Tp"])
+            off += ns
+            codes = np.ascontiguousarray(pt.T)                  # (T, Fl)
+            hd = m["Fl"] // m["Fsl"]
+            out[name] = (codes.reshape(T, m["Fsl"], hd).astype(np.float32)
+                         * sc.T[..., None]).reshape(T, m["Fl"])
+        else:
+            ns = m.get("ssz", 4) * m["Fl"]
+            sc = np.frombuffer(buf[off:off + ns], np.float32)
+            off += ns
+            out[name] = np_dequantize(np.ascontiguousarray(pt.T), sc,
+                                      bits, T)
     return out
 
 
-def read_chunk_file(path: str) -> CompressedChunk:
-    """Whole-chunk read (non-pipelined swap-in path)."""
+def read_chunk_file(path: str):
+    """Whole-chunk read (non-pipelined swap-in path).  Returns the
+    payload in its storage grid: CompressedChunk for "channel" files,
+    QuantResidentChunk for "token_head" files."""
     with open(path, "rb") as f:
         header, base = _read_header(f)
         L = header["n_layers"]
+        token_head = header.get("grid", "channel") == "token_head"
         data, shapes = {}, {}
         per_leaf_packed = {n: [] for n in header["leaves"]}
         per_leaf_scale = {n: [] for n in header["leaves"]}
@@ -163,17 +192,27 @@ def read_chunk_file(path: str) -> CompressedChunk:
                 pt = np.frombuffer(buf[off:off + nb], dt
                                    ).reshape(m["Fl"], m["Tp"])
                 off += nb
-                ns = m.get("ssz", 4) * m["Fl"]
-                sc = np.frombuffer(buf[off:off + ns], np.float32)
+                if token_head:
+                    ns = m["sbytes"]
+                    sc = np.frombuffer(buf[off:off + ns], np.float32
+                                       ).reshape(m["Fsl"], m["Tp"])
+                else:
+                    ns = m.get("ssz", 4) * m["Fl"]
+                    sc = np.frombuffer(buf[off:off + ns], np.float32)
                 off += ns
                 per_leaf_packed[name].append(pt)
                 per_leaf_scale[name].append(sc)
         for name, m in header["leaves"].items():
             packed = np.concatenate(per_leaf_packed[name], axis=0).T
-            scale = np.concatenate(per_leaf_scale[name])
+            scale = np.concatenate(per_leaf_scale[name], axis=0)
+            if token_head:
+                scale = scale.T                              # (T, Fs)
             data[name] = (np.ascontiguousarray(packed),
                           np.ascontiguousarray(scale))
             shapes[name] = tuple(m["shape"])
+    if token_head:
+        return QuantResidentChunk(n_tokens=header["n_tokens"], data=data,
+                                  shapes=shapes)
     return CompressedChunk(bits=header["bits"], n_tokens=header["n_tokens"],
                            data=data, shapes=shapes)
 

@@ -65,6 +65,13 @@ _POLICY_FLAGS = {
 class LLMSConfig:
     policy: str = "llms"
     decode_batch: int = 1                  # working-cache decode slots (B)
+    # quant-resident decode (DESIGN.md §2): compressed chunks stay int8
+    # in the working cache and attention dequantizes in place (fused
+    # kernel), instead of materializing bf16 copies at switch-in.
+    # 8-bit (Eq. 3) chunks become directly decodable payloads; 4/2-bit
+    # chunks stay packed and re-grid behind the same kernel.  Requires a
+    # chunked policy and a family with supports_quant_resident.
+    quant_resident: bool = False
     chunk_tokens: int = 16
     levels: Tuple[Tuple[int, float], ...] = comp.DEFAULT_LEVELS
     ratio_global: float = 0.5
@@ -86,6 +93,11 @@ class LLMSConfig:
         assert self.decode_batch >= 1, self.decode_batch
         (self.compression, self.use_pipeline, self.use_lctru, self.use_aot,
          self.chunked, self.use_disk) = _POLICY_FLAGS[self.policy]
+        if self.quant_resident and not self.chunked:
+            raise ValueError(
+                f"quant_resident requires a chunked policy, not "
+                f"{self.policy!r} (whole-state caches have no chunk "
+                "segments to leave quantized)")
 
 
 @dataclass
@@ -440,8 +452,34 @@ class LLMService:
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
         self.res.profile_pipeline(n_points)
 
+    def decode_ready_contexts(self) -> int:
+        """Contexts whose next switch-in needs neither dequantization
+        nor disk I/O: generations holding a slot, parked slots whose
+        cached state survived every eviction since (epoch match), and —
+        with the quant-resident tier on — every context whose chunks
+        are all in memory (assembly is then a pure int8 scatter)."""
+        ready = set(self.res.slots.held)
+        for cid, (_, epoch) in self._reuse.items():
+            if epoch == self.res.epoch:
+                ready.add(cid)
+        if self.exe.quant_resident and not self.res.force_dequant:
+            for cid, ctx in self.contexts.items():
+                # scatter-ready means every chunk's decode-grid codes
+                # already exist: as the payload itself (m.quant) or as
+                # the AoT re-grid memo — a packed chunk freshly restored
+                # from disk has neither until its next switch-out
+                if (ctx.n_tokens and ctx.chunks
+                        and all(m.in_memory and m.bits != 16
+                                and (m.quant or i in ctx.qmemo)
+                                for i, m in ctx.chunks.items())):
+                    ready.add(cid)
+        return len(ready)
+
     def stats(self) -> Dict[str, float]:
         sw = [r["switch_s"] for r in self.records]
+        n_quant = sum(1 for ctx in self.contexts.values()
+                      for m in ctx.chunks.values()
+                      if m.in_memory and m.quant)
         return {
             "calls": len(sw),
             "switch_mean_s": float(np.mean(sw)) if sw else 0.0,
@@ -450,6 +488,8 @@ class LLMService:
             "disk_bytes": self.store.total_bytes,
             "decode_slots": self.decode_batch,
             "slots_held": len(self.res.slots.held),
+            "decode_ready_contexts": self.decode_ready_contexts(),
+            "quant_resident_chunks": n_quant,
         }
 
     def close(self):

@@ -11,7 +11,6 @@ from __future__ import annotations
 import os
 import pickle
 import threading
-import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Dict, Optional, Tuple
 

@@ -16,8 +16,6 @@ Oracle: kernels/ref.py::decode_qattn_ref.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -105,4 +103,106 @@ def decode_qattn(q: Array, k_q: Array, v_q: Array, k_scale: Array,
         ],
         interpret=interpret,
     )(qg, k_q, v_q, k_scale, v_scale, nv)
+    return out.reshape(B, H, hd)
+
+
+# --------------------------------------------------------------------- #
+# Mixed-precision decode attention: bf16 recent window + int8
+# quant-resident chunk segments, selected per position by quant_mask and
+# dequantized in VMEM (the quant-resident residency tier's hot path).
+# --------------------------------------------------------------------- #
+def _mixed_kernel(q_ref, k_ref, v_ref, kq_ref, vq_ref, ks_ref, vs_ref,
+                  qm_ref, nv_ref, o_ref, acc, mx, lx, *, bs, ns, scale, S,
+                  window, n_sinks):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        mx[...] = jnp.full_like(mx, NEG_INF)
+        lx[...] = jnp.zeros_like(lx)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (G, hd)
+    m = qm_ref[0, :][:, None]                           # (bs, 1) bool
+    # fused dequant THROUGH the storage dtype: a quant position must
+    # contribute exactly the value a full dequantization would have
+    # materialized into the bf16 cache (token-identity contract)
+    kd = (kq_ref[0, :, 0].astype(jnp.float32)
+          * ks_ref[0, :, 0][:, None]).astype(k_ref.dtype)
+    vd = (vq_ref[0, :, 0].astype(jnp.float32)
+          * vs_ref[0, :, 0][:, None]).astype(v_ref.dtype)
+    k = jnp.where(m, kd, k_ref[0, :, 0]).astype(jnp.float32)
+    v = jnp.where(m, vd, v_ref[0, :, 0]).astype(jnp.float32)
+    s = (q @ k.T) * scale                               # (G, bs)
+    k_pos = js * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    nv = nv_ref[0, 0]
+    valid = (k_pos < nv) & (k_pos < S)
+    if window > 0:
+        valid = valid & ((k_pos >= nv - window) | (k_pos < n_sinks))
+    s = jnp.where(valid, s, NEG_INF)
+    m_prev = mx[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    lx[...] = lx[...] * alpha + jnp.sum(p, axis=1)
+    acc[...] = acc[...] * alpha[:, None] + p @ v
+    mx[...] = m_new
+
+    @pl.when(js == ns - 1)
+    def _done():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(lx[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def decode_mqattn(q: Array, k: Array, v: Array, k_q: Array, v_q: Array,
+                  k_scale: Array, v_scale: Array, quant_mask: Array,
+                  n_valid, window: int = 0, n_sinks: int = 0,
+                  interpret: bool = False, bs: int = 256) -> Array:
+    """q (B,H,hd); k/v (B,S,KV,hd) bf16; k_q/v_q (B,S,KV,hd) int8;
+    scales (B,S,KV) fp32; quant_mask (B,S) bool; n_valid () or (B,).
+    Returns (B,H,hd) in q.dtype.  Oracle: ref.py::decode_mqattn_ref."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bs = min(bs, max(S, 8))
+    ns = (S + bs - 1) // bs
+    Sp = ns * bs
+    if Sp != S:
+        padw = ((0, 0), (0, Sp - S), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        k_q = jnp.pad(k_q, padw)
+        v_q = jnp.pad(v_q, padw)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, Sp - S), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, Sp - S), (0, 0)))
+        quant_mask = jnp.pad(quant_mask, ((0, 0), (0, Sp - S)))
+    qg = q.reshape(B, KV, G, hd)
+    nv = jnp.broadcast_to(jnp.asarray(n_valid, jnp.int32).reshape(-1),
+                          (B,)).reshape(B, 1)
+
+    out = pl.pallas_call(
+        functools.partial(_mixed_kernel, bs=bs, ns=ns,
+                          scale=1.0 / float(np.sqrt(hd)), S=S,
+                          window=window, n_sinks=n_sinks),
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, n, j: (b, n, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, n, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, n, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, n, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, n, j: (b, j, n, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, n, j: (b, j, n)),
+            pl.BlockSpec((1, bs, 1), lambda b, n, j: (b, j, n)),
+            pl.BlockSpec((1, bs), lambda b, n, j: (b, j)),
+            pl.BlockSpec((1, 1), lambda b, n, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, n, j: (b, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, k_q, v_q, k_scale, v_scale, quant_mask, nv)
     return out.reshape(B, H, hd)

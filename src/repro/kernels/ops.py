@@ -79,3 +79,21 @@ def decode_qattn(q: Array, k_q: Array, v_q: Array, k_scale: Array,
     from repro.kernels import decode_qattn as kdq
     return kdq.decode_qattn(q, k_q, v_q, k_scale, v_scale, n_valid, window,
                             n_sinks, interpret=(mode == "interpret"))
+
+
+# --------------------------------------------------------------------- #
+# mixed-precision decode attention (bf16 window + int8 quant-resident
+# segments, fused dequant behind a per-position select)
+# --------------------------------------------------------------------- #
+def decode_mqattn(q: Array, k: Array, v: Array, k_q: Array, v_q: Array,
+                  k_scale: Array, v_scale: Array, quant_mask: Array,
+                  n_valid, window: int = 0, n_sinks: int = 0,
+                  force: Optional[str] = None) -> Array:
+    mode = _mode(force)
+    if mode == "ref":
+        return ref.decode_mqattn_ref(q, k, v, k_q, v_q, k_scale, v_scale,
+                                     quant_mask, n_valid, window, n_sinks)
+    from repro.kernels import decode_qattn as kdq
+    return kdq.decode_mqattn(q, k, v, k_q, v_q, k_scale, v_scale,
+                             quant_mask, n_valid, window, n_sinks,
+                             interpret=(mode == "interpret"))

@@ -108,6 +108,32 @@ def attn_density_ref(q: Array, k: Array, v: Array,
 
 
 # --------------------------------------------------------------------- #
+# decode-grid quantization (per-(token, kv-head) symmetric scales)
+#
+# The chunk codec above is the STORAGE grid (per-channel scales over the
+# token axis).  The decode-attention kernels consume the DECODE grid:
+# one scale per (token, kv-head), shared across head_dim — the same grid
+# ``models/dense.decode_step`` uses for newly decoded tokens, so a
+# quant-resident chunk and a freshly quantized token dequantize through
+# one code path.
+# --------------------------------------------------------------------- #
+def quantize_token_head_ref(x: Array) -> Tuple[Array, Array]:
+    """x: (..., hd) float -> (codes int8 (..., hd), scales fp32 (...,)).
+    Symmetric max-abs over the trailing head_dim axis, qmax 127."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1) / 127.0, 1e-8)
+    codes = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127
+                     ).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_token_head_ref(codes: Array, scale: Array,
+                              dtype=jnp.bfloat16) -> Array:
+    """Inverse of quantize_token_head_ref -> (..., hd) in ``dtype``."""
+    return (codes.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+# --------------------------------------------------------------------- #
 # decode_qattn oracle: one-step attention over an int8 KV cache
 # --------------------------------------------------------------------- #
 def decode_qattn_ref(q: Array, k_q: Array, v_q: Array,
@@ -133,4 +159,40 @@ def decode_qattn_ref(q: Array, k_q: Array, v_q: Array,
     s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bngk,bknd->bngd", p, v)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- #
+# decode_mqattn oracle: one-step attention over a MIXED cache
+# (bf16 recent window + int8 quant-resident segments, fused dequant)
+# --------------------------------------------------------------------- #
+def decode_mqattn_ref(q: Array, k: Array, v: Array, k_q: Array, v_q: Array,
+                      k_scale: Array, v_scale: Array, quant_mask: Array,
+                      n_valid, window: int = 0, n_sinks: int = 0) -> Array:
+    """q: (B,H,hd); k/v: (B,S,KV,hd) bf16; k_q/v_q: (B,S,KV,hd) int8;
+    scales: (B,S,KV) fp32; quant_mask: (B,S) bool — True where the cache
+    entry lives in the quantized segments.  Dequantization is fused: a
+    quant position contributes ``(code * scale) -> cache dtype`` exactly
+    as if it had been materialized into the bf16 cache, so the mixed
+    path is equivalent to full dequantization.  Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    m = quant_mask[:, :, None, None]
+    kf = jnp.where(m, (k_q.astype(jnp.float32) * k_scale[..., None]
+                       ).astype(k.dtype), k).astype(jnp.float32)
+    vf = jnp.where(m, (v_q.astype(jnp.float32) * v_scale[..., None]
+                       ).astype(v.dtype), v).astype(jnp.float32)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bngd,bknd->bngk", qg, kf) / np.sqrt(hd)
+    k_pos = jnp.arange(S)
+    nv = jnp.asarray(n_valid)
+    nv = nv[None].repeat(B, 0) if nv.ndim == 0 else nv
+    valid = k_pos[None, :] < nv[:, None]
+    if window > 0:
+        valid = valid & ((k_pos[None, :] >= nv[:, None] - window)
+                         | (k_pos[None, :] < n_sinks))
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bngk,bknd->bngd", p, vf)
     return out.reshape(B, H, hd).astype(q.dtype)

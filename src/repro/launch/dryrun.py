@@ -28,7 +28,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ASSIGNED, SHAPES, get_config, shape_applicability

@@ -136,6 +136,12 @@ def main():
                     help="working-cache decode slots B: up to B queued "
                          "generations decode as one jitted batch "
                          "(1 = the serial paper-prototype path)")
+    ap.add_argument("--quant-resident", action="store_true",
+                    help="attend over quantized chunks in place: 8-bit "
+                         "chunks stay int8 in the working cache behind "
+                         "the fused decode kernel, 4/2-bit re-grid at "
+                         "assembly (requires a chunked policy + dense "
+                         "family)")
     ap.add_argument("--pace", type=float, default=0.0,
                     help="wall seconds per trace second when replaying "
                          "arrival gaps (0 = compressed time)")
@@ -149,6 +155,7 @@ def main():
     sc = LLMSConfig(policy=args.policy, max_ctx_len=args.max_ctx,
                     memory_budget=int(args.budget_mib * 2**20),
                     decode_batch=args.decode_batch,
+                    quant_resident=args.quant_resident,
                     swap_dir=tempfile.mkdtemp(prefix="llms_serve_"))
     events = synthesize(args.contexts, args.calls, cfg.vocab,
                         pattern=args.pattern, scale=0.1, seed=args.seed)

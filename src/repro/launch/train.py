@@ -8,15 +8,13 @@ ShapeDtypeStructs on the production mesh.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import SHAPES, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.models.api import ModelBase
 from repro.models.registry import build_model
 from repro.train.optimizer import OptConfig, apply_updates, init_state

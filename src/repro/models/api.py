@@ -69,6 +69,12 @@ class ModelBase:
     # over slots otherwise.
     supports_batched_decode = False
 
+    # True when ``init_cache(mixed_quant=True)`` builds a mixed-precision
+    # working cache (bf16 window + int8 quant-resident segments with
+    # per-(token, kv-head) scales + quant_mask) and ``decode_step`` /
+    # ``recompute`` attend through it (DESIGN.md §2 quant-resident tier).
+    supports_quant_resident = False
+
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
 

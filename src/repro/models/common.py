@@ -415,6 +415,160 @@ def decode_attention(q: Array, k_cache: Array, v_cache: Array,
 
 
 # --------------------------------------------------------------------- #
+# Mixed-precision decode attention: bf16 recent window + int8
+# quant-resident chunk segments (fused dequant, selected per position).
+#
+# The dequantized value of a quant position is computed THROUGH the
+# cache dtype — ``(code * scale) -> bf16`` — i.e. exactly the value a
+# full dequantization would have materialized into the bf16 cache, so
+# quant-resident decode is bit-identical to the full-dequant path
+# (tests/test_quant_resident.py asserts token identity).
+# --------------------------------------------------------------------- #
+
+# above this many cache positions the CPU path switches from the
+# plain select (bitwise-identical to ``decode_attention``) to the
+# blocked online-softmax scan, which dequantizes one key block at a
+# time and never materializes the full dequantized cache
+MIXED_BLOCKED_MIN_S = 4096
+
+
+def dequant_select(x_cache: Array, x_q: Array, x_scale: Array,
+                   quant_mask: Array) -> Array:
+    """Per-position select between the bf16 cache and the fused-dequant
+    int8 segments.  x_cache (B,S,KV,hd); x_q int8; x_scale (B,S,KV);
+    quant_mask (B,S) bool."""
+    dq = (x_q.astype(jnp.float32) * x_scale[..., None]).astype(x_cache.dtype)
+    return jnp.where(quant_mask[:, :, None, None], dq, x_cache)
+
+
+def mixed_decode_attention_blocked(q: Array, k_cache: Array, v_cache: Array,
+                                   k_q: Array, v_q: Array, k_scale: Array,
+                                   v_scale: Array, quant_mask: Array,
+                                   cur_pos: Array, window: int = 0,
+                                   n_sinks: int = 0,
+                                   want_density: bool = False,
+                                   block: int = 1024):
+    """Blocked-jnp fused-dequant reference: online softmax over key
+    blocks, dequantizing one (B, block, KV, hd) tile at a time — the
+    memory-bounded long-context form of ``mixed_decode_attention`` and
+    the CPU mirror of the Pallas kernel (kernels/decode_qattn.py::
+    decode_mqattn; oracle kernels/ref.py::decode_mqattn_ref)."""
+    B, _, H, hd = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    nblk = (S + block - 1) // block
+    pad = nblk * block - S
+    if pad:
+        padw = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, padw)
+        v_cache = jnp.pad(v_cache, padw)
+        k_q = jnp.pad(k_q, padw)
+        v_q = jnp.pad(v_q, padw)
+        k_scale = jnp.pad(k_scale, ((0, 0), (0, pad), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0)))
+        quant_mask = jnp.pad(quant_mask, ((0, 0), (0, pad)))
+
+    def blks(a):
+        r = a.reshape((B, nblk, block) + a.shape[2:])
+        return r.transpose((1, 0, 2) + tuple(range(3, r.ndim)))
+
+    kb, vb = blks(k_cache), blks(v_cache)
+    kqb, vqb = blks(k_q), blks(v_q)
+    ksb, vsb = blks(k_scale), blks(v_scale)
+    qmb = quant_mask.reshape(B, nblk, block).transpose(1, 0, 2)
+
+    qg = q.reshape(B, 1, KV, G, hd)
+    scale = 1.0 / np.sqrt(hd)
+    pos = jnp.asarray(cur_pos)
+    pos_b = pos if pos.ndim else pos[None].repeat(B, 0)    # (B,)
+
+    m0 = jnp.full((B, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G), jnp.float32)
+    acc0 = jnp.zeros((B, KV, G, hd), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc, idx = carry
+        kc, vc, kq, vq, ks, vs, qm = blk
+        kf = dequant_select(kc, kq, ks, qm).astype(jnp.float32)
+        vf = dequant_select(vc, vq, vs, qm).astype(jnp.float32)
+        s = jnp.einsum("bqngd,bknd->bngqk", qg, kf,
+                       preferred_element_type=jnp.float32)[:, :, :, 0] * scale
+        k_pos = idx * block + jax.lax.broadcasted_iota(
+            jnp.int32, (block,), 0)
+        valid = (k_pos[None, :] < pos_b[:, None]) & (k_pos < S)[None, :]
+        if window > 0:
+            in_win = k_pos[None, :] >= (pos_b[:, None] - window)
+            sink = k_pos[None, :] < n_sinks
+            valid = valid & (in_win | sink)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bngk,bknd->bngd", p, vf)
+        return (m_new, l_new, acc_new, idx + 1), None
+
+    (m, l, acc, _), _ = jax.lax.scan(
+        step, (m0, l0, acc0, jnp.int32(0)), (kb, vb, kqb, vqb, ksb, vsb, qmb))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    out = out.reshape(B, 1, H, hd)
+    if want_density:
+        # second pass over blocks: normalized attention mass per key
+        def dstep(idx):
+            kf = dequant_select(kb[idx], kqb[idx], ksb[idx],
+                                qmb[idx]).astype(jnp.float32)
+            s = jnp.einsum("bqngd,bknd->bngqk", qg, kf,
+                           preferred_element_type=jnp.float32
+                           )[:, :, :, 0] * scale
+            k_pos = idx * block + jax.lax.broadcasted_iota(
+                jnp.int32, (block,), 0)
+            valid = (k_pos[None, :] < pos_b[:, None]) & (k_pos < S)[None, :]
+            if window > 0:
+                in_win = k_pos[None, :] >= (pos_b[:, None] - window)
+                sink = k_pos[None, :] < n_sinks
+                valid = valid & (in_win | sink)
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+            p = jnp.exp(s - m[..., None]) / jnp.maximum(l, 1e-30)[..., None]
+            return (jnp.sum(p, axis=(1, 2)) / H).astype(jnp.float32)
+
+        masses = jax.lax.map(dstep, jnp.arange(nblk))       # (nblk, B, blk)
+        mass = masses.transpose(1, 0, 2).reshape(B, nblk * block)[:, :S]
+        return out, mass
+    return out
+
+
+def mixed_decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                           k_q: Array, v_q: Array, k_scale: Array,
+                           v_scale: Array, quant_mask: Array, cur_pos: Array,
+                           window: int = 0, n_sinks: int = 0,
+                           want_density: bool = False):
+    """One-step attention over a mixed cache.  q: (B,1,H,hd); k/v bf16 and
+    k_q/v_q int8 caches (B,S,KV,hd); scales (B,S,KV); quant_mask (B,S).
+
+    Dispatch: Pallas fused kernel on TPU (density falls back to the
+    blocked path), blocked online-softmax scan for long caches, plain
+    select + ``decode_attention`` numerics otherwise (bit-identical to
+    the full-dequant bf16 path)."""
+    S = k_cache.shape[1]
+    if jax.default_backend() == "tpu" and not want_density:
+        from repro.kernels import ops as kops
+        pos = jnp.asarray(cur_pos)
+        out = kops.decode_mqattn(q[:, 0], k_cache, v_cache, k_q, v_q,
+                                 k_scale, v_scale, quant_mask, pos,
+                                 window, n_sinks)
+        return out[:, None]
+    if S >= MIXED_BLOCKED_MIN_S:
+        return mixed_decode_attention_blocked(
+            q, k_cache, v_cache, k_q, v_q, k_scale, v_scale, quant_mask,
+            cur_pos, window, n_sinks, want_density)
+    k = dequant_select(k_cache, k_q, k_scale, quant_mask)
+    v = dequant_select(v_cache, v_q, v_scale, quant_mask)
+    return decode_attention(q, k, v, cur_pos, window=window,
+                            n_sinks=n_sinks, want_density=want_density)
+
+
+# --------------------------------------------------------------------- #
 # FFN
 # --------------------------------------------------------------------- #
 def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:

@@ -15,16 +15,14 @@ the same layer weights/scan.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import io_callback
 
-from repro.configs.base import ModelConfig
 from repro.models import common as C
-from repro.models.api import DecodeOut, ModelBase, PrefillOut, cross_entropy
+from repro.models.api import DecodeOut, ModelBase, PrefillOut
 
 Array = jax.Array
 
@@ -67,6 +65,25 @@ def blockwise_ce(x: Array, head: Array, targets: Array,
     return loss, {"loss": loss, "acc": acc / cnt}
 
 
+# the mixed-precision (quant-resident) cache leaves that ride along the
+# bf16 k/v through every entry point but are never written by them
+_QUANT_LEAVES = ("k_q", "v_q", "k_scale", "v_scale")
+
+
+def _quant_scan_xs(cache, xs):
+    """Append the per-layer quant-segment leaves to a layer-scan input."""
+    return xs + tuple(cache[n] for n in _QUANT_LEAVES)
+
+
+def _carry_quant_leaves(new_cache, cache, qm):
+    """Decode/recompute never write the quant segments: alias them (and
+    the updated quant mask) into the output cache."""
+    for n in _QUANT_LEAVES:
+        new_cache[n] = cache[n]
+    new_cache["quant_mask"] = qm
+    return new_cache
+
+
 def _inner_group(L: int) -> int:
     """Divisor of L nearest sqrt(L) (inner layer count for 2-level remat)."""
     best, target = L, L ** 0.5
@@ -79,6 +96,7 @@ def _inner_group(L: int) -> int:
 class DenseModel(ModelBase):
     family_has_kv = True
     supports_batched_decode = True
+    supports_quant_resident = True
 
     # ------------------------------------------------------------------ #
     def init(self, key) -> Dict:
@@ -250,14 +268,25 @@ class DenseModel(ModelBase):
         # own offset.
         positions = pos[None] if pos.ndim == 0 else pos[:, None]
 
-        quantized = "k_scale" in cache       # int8 KV with fused dequant
+        mixed = "k_q" in cache               # bf16 window + int8 segments
+        quantized = "k_scale" in cache and not mixed   # all-int8 cache
+
+        if mixed:
+            # the new token lands in the bf16 window: clear its
+            # quant-mask bit once (the mask is shared across layers)
+            S = cache["k"].shape[2]
+            s_pos = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+            idx = pos[None] if pos.ndim == 0 else pos
+            qm = cache["quant_mask"] & ~(s_pos[None, :] == idx[:, None])[None]
 
         def body(x, layer_in):
-            if quantized:
+            kq_c = vq_c = ks_c = vs_c = None
+            if mixed:
+                pl, k_c, v_c, kq_c, vq_c, ks_c, vs_c = layer_in
+            elif quantized:
                 pl, k_c, v_c, ks_c, vs_c = layer_in
             else:
                 pl, k_c, v_c = layer_in
-                ks_c = vs_c = None
             h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
             q, k, v = self._qkv(pl, h)
             q, k = self._rope(q, k, positions)
@@ -284,6 +313,13 @@ class DenseModel(ModelBase):
                                          k_scale=ks_c, v_scale=vs_c,
                                          window=window, n_sinks=n_sinks,
                                          want_density=want_density)
+            elif mixed:
+                k_c = C.ring_update(k_c, k, pos)
+                v_c = C.ring_update(v_c, v, pos)
+                out = C.mixed_decode_attention(
+                    q, k_c, v_c, kq_c, vq_c, ks_c, vs_c, qm[0], pos + 1,
+                    window=window, n_sinks=n_sinks,
+                    want_density=want_density)
             else:
                 k_c = C.ring_update(k_c, k, pos)
                 v_c = C.ring_update(v_c, v, pos)
@@ -301,13 +337,17 @@ class DenseModel(ModelBase):
             return x, ys
 
         xs = (params["layers"], cache["k"], cache["v"])
-        if quantized:
+        if mixed:
+            xs = _quant_scan_xs(cache, xs)
+        elif quantized:
             xs = xs + (cache["k_scale"], cache["v_scale"])
         x, ys = jax.lax.scan(body, x, xs, unroll=max(1, int(unroll)))
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
         new_cache = {"k": ys["k"], "v": ys["v"], "pos": pos + 1}
-        if quantized:
+        if mixed:
+            _carry_quant_leaves(new_cache, cache, qm)
+        elif quantized:
             new_cache["k_scale"] = ys["k_scale"]
             new_cache["v_scale"] = ys["v_scale"]
         out = DecodeOut(logits, new_cache)
@@ -315,7 +355,7 @@ class DenseModel(ModelBase):
             return out, jnp.mean(ys["mass"], axis=0)        # (B, S)
         return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+    def init_cache(self, batch, seq, dtype=jnp.bfloat16, mixed_quant=False):
         cfg = self.cfg
         shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
         cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
@@ -323,6 +363,17 @@ class DenseModel(ModelBase):
         if dtype == jnp.int8:       # quantized serving cache (+ scales)
             cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
             cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+        elif mixed_quant:
+            # mixed-precision working cache: bf16 recent window + int8
+            # quant-resident chunk segments with per-(token, kv-head)
+            # scales, selected per position by quant_mask.  The mask
+            # carries a dummy leading axis so axis 1 is the batch axis
+            # for every leaf (BatchRun merges/splits on axis 1).
+            cache["k_q"] = jnp.zeros(shape, jnp.int8)
+            cache["v_q"] = jnp.zeros(shape, jnp.int8)
+            cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
+            cache["quant_mask"] = jnp.zeros((1, batch, seq), bool)
         return cache
 
     # ------------------------------------------------------------------ #
@@ -346,19 +397,37 @@ class DenseModel(ModelBase):
         x = params["embed"][miss_tokens].astype(jnp.bfloat16)    # (B, M, d)
         S = cache["k"].shape[2]
         k_pos_all = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+        mixed = "k_q" in cache
+        if mixed:
+            # recomputed positions land in the bf16 window; resident
+            # quant segments are read THROUGH during attention (mixed-
+            # precision prefill-read; quant-resident prefill-WRITE is a
+            # deferred open item, ROADMAP.md)
+            qm = cache["quant_mask"] & ~jnp.any(
+                k_pos_all[None, :] == miss_pos[:, None], axis=0)[None, None]
 
         def body(x, layer_in):
-            pl, k_c, v_c = layer_in
+            kq_c = vq_c = ks_c = vs_c = None
+            if mixed:
+                pl, k_c, v_c, kq_c, vq_c, ks_c, vs_c = layer_in
+            else:
+                pl, k_c, v_c = layer_in
             h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
             q, k, v = self._qkv(pl, h)
             q, k = self._rope(q, k, miss_pos)
             # scatter the recomputed K/V into the resident cache
             k_c = k_c.at[:, miss_pos].set(k.astype(k_c.dtype))
             v_c = v_c.at[:, miss_pos].set(v.astype(v_c.dtype))
+            if mixed:
+                k_att = C.dequant_select(k_c, kq_c, ks_c, qm[0])
+                v_att = C.dequant_select(v_c, vq_c, vs_c, qm[0])
+            else:
+                k_att, v_att = k_c, v_c
             # attend: q at miss_pos over all valid tokens <= its position
             mask = C.causal_window_mask(miss_pos, k_pos_all, window, n_sinks)
             mask = mask & (k_pos_all < seq_len)[None, :]
-            ao = C.gqa_attention(q, k_c.astype(q.dtype), v_c.astype(q.dtype),
+            ao = C.gqa_attention(q, k_att.astype(q.dtype),
+                                 v_att.astype(q.dtype),
                                  mask, want_density=want_density)
             x = x + ao.out.reshape(*x.shape[:2], -1) @ pl["wo"]
             x = C.constrain_batch(self._ffn(pl, x))
@@ -367,11 +436,16 @@ class DenseModel(ModelBase):
                 ys["density"] = ao.key_density
             return x, ys
 
-        x, ys = jax.lax.scan(
-            body, x, (params["layers"], cache["k"], cache["v"]))
+        xs = (params["layers"], cache["k"], cache["v"])
+        if mixed:
+            xs = _quant_scan_xs(cache, xs)
+        x, ys = jax.lax.scan(body, x, xs)
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         density = jnp.mean(ys["density"], axis=0) if want_density else None
-        return {"k": ys["k"], "v": ys["v"], "pos": cache["pos"]}, x, density
+        new_cache = {"k": ys["k"], "v": ys["v"], "pos": cache["pos"]}
+        if mixed:
+            _carry_quant_leaves(new_cache, cache, qm)
+        return new_cache, x, density
 
     # ------------------------------------------------------------------ #
     # Paper Fig. 8: swapping-recompute PIPELINED restore.  The scan body
@@ -397,9 +471,20 @@ class DenseModel(ModelBase):
             "v": jax.ShapeDtypeStruct(
                 (Mio, cfg.n_kv_heads, cfg.head_dim), jnp.float32),
         }
+        mixed = "k_q" in cache
+        if mixed:
+            # recomputed AND disk-restored positions materialize in the
+            # bf16 window; surviving quant segments are read through
+            restored = (jnp.any(k_pos_all[None, :] == miss_pos[:, None], 0)
+                        | jnp.any(k_pos_all[None, :] == io_pos[:, None], 0))
+            qm = cache["quant_mask"] & ~restored[None, None]
 
         def body(x, layer_in):
-            l_idx, pl, k_c, v_c = layer_in
+            kq_c = vq_c = ks_c = vs_c = None
+            if mixed:
+                l_idx, pl, k_c, v_c, kq_c, vq_c, ks_c, vs_c = layer_in
+            else:
+                l_idx, pl, k_c, v_c = layer_in
             io = io_callback(fetch, io_shape, l_idx, ordered=True)
             k_c = k_c.at[:, io_pos].set(io["k"][None].astype(k_c.dtype))
             v_c = v_c.at[:, io_pos].set(io["v"][None].astype(v_c.dtype))
@@ -408,9 +493,15 @@ class DenseModel(ModelBase):
             q, k = self._rope(q, k, miss_pos)
             k_c = k_c.at[:, miss_pos].set(k.astype(k_c.dtype))
             v_c = v_c.at[:, miss_pos].set(v.astype(v_c.dtype))
+            if mixed:
+                k_att = C.dequant_select(k_c, kq_c, ks_c, qm[0])
+                v_att = C.dequant_select(v_c, vq_c, vs_c, qm[0])
+            else:
+                k_att, v_att = k_c, v_c
             mask = C.causal_window_mask(miss_pos, k_pos_all, window, n_sinks)
             mask = mask & (k_pos_all < seq_len)[None, :]
-            ao = C.gqa_attention(q, k_c.astype(q.dtype), v_c.astype(q.dtype),
+            ao = C.gqa_attention(q, k_att.astype(q.dtype),
+                                 v_att.astype(q.dtype),
                                  mask, want_density=want_density)
             x = x + ao.out.reshape(*x.shape[:2], -1) @ pl["wo"]
             x = C.constrain_batch(self._ffn(pl, x))
@@ -420,8 +511,13 @@ class DenseModel(ModelBase):
             return x, ys
 
         layer_ids = jnp.arange(cfg.n_layers, dtype=jnp.int32)
-        x, ys = jax.lax.scan(
-            body, x, (layer_ids, params["layers"], cache["k"], cache["v"]))
+        xs = (layer_ids, params["layers"], cache["k"], cache["v"])
+        if mixed:
+            xs = _quant_scan_xs(cache, xs)
+        x, ys = jax.lax.scan(body, x, xs)
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         density = jnp.mean(ys["density"], axis=0) if want_density else None
-        return {"k": ys["k"], "v": ys["v"], "pos": cache["pos"]}, x, density
+        new_cache = {"k": ys["k"], "v": ys["v"], "pos": cache["pos"]}
+        if mixed:
+            _carry_quant_leaves(new_cache, cache, qm)
+        return new_cache, x, density

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ShapeSpec
 from repro.models import common as C
-from repro.models.api import DecodeOut, ModelBase, PrefillOut, cross_entropy
+from repro.models.api import DecodeOut, ModelBase, PrefillOut
 from repro.models.dense import blockwise_ce
 
 Array = jax.Array

@@ -25,6 +25,9 @@ Array = jax.Array
 
 
 class MLAModel(DenseModel):
+    # overrides init_cache/decode_step/recompute without the mixed
+    # bf16+int8 cache: do not inherit the dense opt-in
+    supports_quant_resident = False
 
     def init(self, key):
         cfg = self.cfg

@@ -8,7 +8,6 @@ only ``init`` and ``_ffn`` change.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import common as C
 from repro.models.dense import DenseModel

@@ -28,6 +28,9 @@ Array = jax.Array
 
 
 class VLMModel(DenseModel):
+    # overrides init_cache/decode_step without the mixed bf16+int8
+    # cache: do not inherit the dense opt-in
+    supports_quant_resident = False
 
     def _counts(self):
         cfg = self.cfg

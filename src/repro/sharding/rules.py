@@ -17,10 +17,9 @@ want.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
@@ -137,9 +136,6 @@ def cache_pspecs(cfg: ModelConfig, cache_tree, shape: ShapeSpec,
     """Decode-cache shardings.  Leaves are (L, B, S, ...) for seq caches,
     family-specific for states.  B >= |dp| => batch over dp + seq over tp;
     tiny batch (long_500k) => seq over (dp..., tp)."""
-    dp_size = 1
-    for d in jax.devices()[:0]:
-        pass
     # |dp| isn't known here without the mesh; use the shape heuristic:
     big_batch = shape.global_batch >= 16
 

@@ -12,7 +12,6 @@ trees mirror the param tree so the sharding rules apply leaf-wise.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Tuple
 

@@ -7,10 +7,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
-import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED, REGISTRY, get_config, reduced
+from repro.configs import get_config, reduced
 from repro.models.registry import build_model
 
 _PARAMS_CACHE = {}

@@ -81,9 +81,97 @@ def test_decode_qattn_matches_ref(case):
                                rtol=2e-4, atol=2e-5)
 
 
+def _mixed_case(c, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed + c["S"]), 8)
+    q = jax.random.normal(ks[0], (c["B"], c["H"], c["hd"]), jnp.float32)
+    k = jax.random.normal(ks[1], (c["B"], c["S"], c["KV"], c["hd"]),
+                          jnp.bfloat16)
+    v = jax.random.normal(ks[2], (c["B"], c["S"], c["KV"], c["hd"]),
+                          jnp.bfloat16)
+    kq = jax.random.randint(ks[3], (c["B"], c["S"], c["KV"], c["hd"]),
+                            -127, 128, jnp.int32).astype(jnp.int8)
+    vq = jax.random.randint(ks[4], (c["B"], c["S"], c["KV"], c["hd"]),
+                            -127, 128, jnp.int32).astype(jnp.int8)
+    kscale = jax.random.uniform(ks[5], (c["B"], c["S"], c["KV"]),
+                                jnp.float32, 0.001, 0.02)
+    vscale = jax.random.uniform(ks[6], (c["B"], c["S"], c["KV"]),
+                                jnp.float32, 0.001, 0.02)
+    qm = jax.random.bernoulli(ks[7], 0.5, (c["B"], c["S"]))
+    return q, k, v, kq, vq, kscale, vscale, qm
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, S=96, H=8, KV=2, hd=32, nv=50, window=0, n_sinks=0),
+    dict(B=1, S=200, H=4, KV=4, hd=64, nv=200, window=0, n_sinks=0),
+    dict(B=3, S=128, H=8, KV=1, hd=16, nv=100, window=40, n_sinks=4),
+])
+def test_decode_mqattn_matches_ref(case):
+    """Pallas mixed kernel (interpret) vs oracle over half-quant caches."""
+    c = case
+    q, k, v, kq, vq, ks_, vs_, qm = _mixed_case(c)
+    o_ref = ref.decode_mqattn_ref(q, k, v, kq, vq, ks_, vs_, qm, c["nv"],
+                                  c["window"], c["n_sinks"])
+    o_k = kdq.decode_mqattn(q, k, v, kq, vq, ks_, vs_, qm, c["nv"],
+                            c["window"], c["n_sinks"], interpret=True, bs=32)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("case", [
+    dict(B=2, S=96, H=8, KV=2, hd=32, nv=50, window=0, n_sinks=0),
+    dict(B=3, S=128, H=8, KV=1, hd=16, nv=100, window=40, n_sinks=4),
+])
+@pytest.mark.parametrize("block", [32, 64])
+def test_mixed_blocked_jnp_matches_ref(case, block):
+    """The blocked-jnp fused-dequant CPU path (online softmax over key
+    blocks) vs the oracle, with and without the density statistic."""
+    from repro.models import common as C
+    c = case
+    q, k, v, kq, vq, ks_, vs_, qm = _mixed_case(c, seed=7)
+    o_ref = ref.decode_mqattn_ref(q, k, v, kq, vq, ks_, vs_, qm, c["nv"],
+                                  c["window"], c["n_sinks"])
+    qb = q[:, None].astype(jnp.bfloat16)
+    o_b = C.mixed_decode_attention_blocked(
+        qb, k, v, kq, vq, ks_, vs_, qm, jnp.int32(c["nv"]),
+        c["window"], c["n_sinks"], block=block)
+    np.testing.assert_allclose(np.asarray(o_b[:, 0], np.float32),
+                               np.asarray(o_ref, np.float32),
+                               rtol=3e-2, atol=3e-2)
+    o_b2, mass = C.mixed_decode_attention_blocked(
+        qb, k, v, kq, vq, ks_, vs_, qm, jnp.int32(c["nv"]),
+        c["window"], c["n_sinks"], want_density=True, block=block)
+    np.testing.assert_array_equal(np.asarray(o_b2), np.asarray(o_b))
+    mass = np.asarray(mass)
+    assert mass.shape == (c["B"], c["S"])
+    # each row's mass over visible keys sums to ~1 (normalized softmax)
+    np.testing.assert_allclose(mass.sum(axis=1), 1.0, rtol=1e-3)
+
+
+def test_mixed_select_identical_to_full_dequant_attention():
+    """The select path must be BITWISE identical to materializing the
+    dequantized values into the bf16 cache and running the plain decode
+    attention — the token-identity contract of the quant tier."""
+    from repro.models import common as C
+    c = dict(B=2, S=64, H=4, KV=2, hd=16, nv=40, window=0, n_sinks=0)
+    q, k, v, kq, vq, ks_, vs_, qm = _mixed_case(c, seed=3)
+    qb = q[:, None].astype(jnp.bfloat16)
+    mixed = C.mixed_decode_attention(qb, k, v, kq, vq, ks_, vs_, qm,
+                                     jnp.int32(c["nv"]))
+    k_mat = C.dequant_select(k, kq, ks_, qm)
+    v_mat = C.dequant_select(v, vq, vs_, qm)
+    full = C.decode_attention(qb, k_mat, v_mat, jnp.int32(c["nv"]))
+    np.testing.assert_array_equal(np.asarray(mixed, np.float32),
+                                  np.asarray(full, np.float32))
+
+
 def test_ops_dispatch_ref_on_cpu():
     from repro.kernels import ops
     x = jax.random.normal(jax.random.PRNGKey(0), (16, 64))
     p, s = ops.chunk_quantize(x, bits=4)
     y = ops.chunk_dequantize(p, s, bits=4, n_tokens=16)
     assert y.shape == x.shape
+    c = dict(B=1, S=64, H=4, KV=2, hd=16, nv=30, window=0, n_sinks=0)
+    q, k, v, kq, vq, ks_, vs_, qm = _mixed_case(c)
+    o = ops.decode_mqattn(q, k, v, kq, vq, ks_, vs_, qm, c["nv"])
+    assert o.shape == q.shape

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from conftest import make_batch, tiny_model
-from repro.configs import ASSIGNED, REGISTRY
+from repro.configs import REGISTRY
 
 ALL_ARCHS = sorted(REGISTRY)
 

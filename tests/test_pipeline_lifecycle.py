@@ -1,8 +1,6 @@
 """Properties of the Eq.-4 pipeline planner and the LCTRU lifecycle."""
 import itertools
 
-import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.lifecycle import LCTRUQueue, MemoryManager

@@ -1,0 +1,222 @@
+"""Quant-resident decode (compressed chunks attended in place).
+
+The contracts of DESIGN.md §2's third residency state:
+  * token IDENTITY: decoding over int8 chunk segments through the fused
+    dequant select emits exactly the tokens of the full-dequant bf16
+    path at 8-bit (serial AND batched),
+  * the byte budget charges quant-resident chunks at their compressed
+    payload size (well under the raw bf16 footprint),
+  * more contexts are decode-ready at a fixed budget than the slot
+    count (the tier's whole point),
+  * the decode-grid chunk-file round trip is byte-exact, so eviction
+    and restore do not perturb generations.
+"""
+import tempfile
+
+import numpy as np
+import pytest
+
+from conftest import tiny_model
+from repro.core.chunks import QuantResidentChunk
+from repro.core.restore import read_chunk_file, write_chunk_file
+from repro.core.scheduler import ServiceRouter
+from repro.core.service import LLMSConfig, LLMService
+
+
+def make_svc(policy="vllm_sq", budget=10_000_000, max_ctx=128, cs=16,
+             decode_batch=1, quant_resident=True):
+    cfg, model, params = tiny_model("smollm-360m")
+    sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx, chunk_tokens=cs,
+                    memory_budget=budget, decode_batch=decode_batch,
+                    quant_resident=quant_resident,
+                    swap_dir=tempfile.mkdtemp())
+    return LLMService(model, params, sc), cfg
+
+
+def prompts_for(cfg, n, length=12, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab, length).tolist() for _ in range(n)]
+
+
+def drive(svc, prompts, rounds=2, max_new=6):
+    """Two calls per context: the second switches quant chunks back in."""
+    stubs = [svc.newLLMCtx() for _ in prompts]
+    outs = []
+    for r in range(rounds):
+        for stub, p in zip(stubs, prompts):
+            outs.append(svc.callLLM(stub, p[r:] or p, max_new)[1])
+    return stubs, outs
+
+
+# --------------------------------------------------------------------- #
+# token identity: fused in-place decode == full dequantization (8-bit)
+# --------------------------------------------------------------------- #
+def test_quant_decode_token_identical_to_full_dequant():
+    """static8 makes every chunk an 8-bit decode-grid payload; the
+    force_dequant control materializes the SAME payloads into bf16 at
+    switch-in.  The fused select computes (code * scale) -> bf16 — the
+    very value the control scatters — so tokens must match exactly."""
+    svc_q, cfg = make_svc()
+    svc_d, _ = make_svc()
+    svc_d.res.force_dequant = True
+    ps = prompts_for(cfg, 3, seed=5)
+    with svc_q, svc_d:
+        _, toks_q = drive(svc_q, ps)
+        _, toks_d = drive(svc_d, ps)
+        assert any(c.chunks for c in svc_q.contexts.values())
+        assert all(m.quant for c in svc_q.contexts.values()
+                   for m in c.chunks.values())
+    assert toks_q == toks_d
+
+
+def test_quant_decode_token_identical_batched():
+    """Same identity through the batched [B, 1] decode entry
+    (decode_batch >= 1 acceptance criterion): distinct contexts decode
+    as one batch over their mixed slot caches."""
+    svc_q, cfg = make_svc(decode_batch=2)
+    svc_d, _ = make_svc(decode_batch=2)
+    svc_d.res.force_dequant = True
+    ps = prompts_for(cfg, 4, seed=11)
+
+    def run(svc):
+        with ServiceRouter(svc, predict=False, slice_steps=2) as router:
+            app = router.register_app("a", "fg")
+            stubs = [app.new_ctx() for _ in ps]
+            for r in range(2):
+                streams = [app.stream(st, p, max_new_tokens=5)
+                           for st, p in zip(stubs, ps)]
+                router.drain()
+            return [list(s.tokens) for s in streams]
+
+    with svc_q, svc_d:
+        assert run(svc_q) == run(svc_d)
+
+
+def test_quant_fidelity_under_eviction():
+    """Eviction + restore of decode-grid chunks is byte-exact (the qc
+    file round trip scatters the same codes), so a starved budget
+    generates the same tokens as an ample one."""
+    svc_big, cfg = make_svc(budget=10_000_000)
+    ps = prompts_for(cfg, 3, seed=9)
+    with svc_big:
+        _, big = drive(svc_big, ps)
+    svc_small, _ = make_svc(budget=12_000)
+    with svc_small:
+        _, small = drive(svc_small, ps)
+        evicted = sum(1 for c in svc_small.contexts.values()
+                      for m in c.chunks.values() if not m.in_memory)
+    assert evicted > 0
+    assert big == small
+
+
+# --------------------------------------------------------------------- #
+# accounting: compressed-size residency, decode-ready count
+# --------------------------------------------------------------------- #
+def test_budget_charges_quant_chunks_at_compressed_size():
+    svc, cfg = make_svc()
+    ps = prompts_for(cfg, 2)
+    with svc:
+        drive(svc, ps, rounds=1)
+        raw = None
+        for c in svc.contexts.values():
+            for i, m in c.chunks.items():
+                if not m.in_memory:
+                    continue
+                assert m.quant
+                qc = c.payload[i]
+                assert isinstance(qc, QuantResidentChunk)
+                assert m.nbytes == qc.nbytes
+                raw = svc.exe.codec.raw_chunk_bytes(
+                    {k: v for k, v in qc.shapes.items()})
+                # int8 codes + per-(token, kv-head) scales ~ 0.56x bf16
+                assert qc.nbytes < 0.7 * raw
+        assert raw is not None
+        charged = sum(m.nbytes for c in svc.contexts.values()
+                      for m in c.chunks.values() if m.in_memory)
+        assert svc.mem.used == charged
+
+
+def test_decode_ready_contexts_exceed_slots():
+    """The headline: at one decode slot, the quant tier keeps MANY
+    contexts decode-ready (switch-in is an int8 scatter), while the
+    full-dequant baseline is warm only up to its parked slots."""
+    svc_q, cfg = make_svc(decode_batch=1)
+    svc_d, _ = make_svc(decode_batch=1)
+    svc_d.res.force_dequant = True
+    ps = prompts_for(cfg, 4, seed=2)
+    with svc_q, svc_d:
+        drive(svc_q, ps, rounds=1)
+        drive(svc_d, ps, rounds=1)
+        assert svc_q.decode_ready_contexts() == len(ps)
+        assert svc_d.decode_ready_contexts() <= svc_d.decode_batch
+        assert svc_q.stats()["quant_resident_chunks"] > 0
+
+
+def test_quant_resident_requires_chunked_policy():
+    with pytest.raises(ValueError):
+        LLMSConfig(policy="swap", quant_resident=True)
+
+
+def test_quant_resident_capability_gating():
+    """Families that override the dense cache/decode entry points
+    without mixed-precision support must refuse quant_resident at
+    construction — not crash inside init_cache (MLA/VLM inherit from
+    DenseModel but do not inherit the opt-in)."""
+    for arch in ("deepseek-v2-lite-16b", "llama-3.2-vision-90b"):
+        cfg, model, params = tiny_model(arch)
+        sc = LLMSConfig(policy="llms", quant_resident=True, max_ctx_len=128,
+                        swap_dir=tempfile.mkdtemp())
+        with pytest.raises(ValueError, match="quant-resident"):
+            LLMService(model, params, sc)
+
+
+# --------------------------------------------------------------------- #
+# decode-grid chunk files: byte-exact round trip
+# --------------------------------------------------------------------- #
+def test_token_head_chunk_file_roundtrip(tmp_path):
+    rng = np.random.RandomState(3)
+    L, KV, hd, T = 4, 2, 8, 16
+    F, Fs = L * KV * hd, L * KV
+    qc = QuantResidentChunk(
+        n_tokens=T,
+        data={"k": (rng.randint(-127, 128, (T, F)).astype(np.int8),
+                    rng.rand(T, Fs).astype(np.float32)),
+              "v": (rng.randint(-127, 128, (T, F)).astype(np.int8),
+                    rng.rand(T, Fs).astype(np.float32))},
+        shapes={"k": (T, F), "v": (T, F)})
+    path = str(tmp_path / "qc.chunk")
+    write_chunk_file(path, qc, n_layers=L)
+    back = read_chunk_file(path)
+    assert isinstance(back, QuantResidentChunk)
+    assert back.n_tokens == T and back.bits == 8
+    for leaf in ("k", "v"):
+        np.testing.assert_array_equal(back.data[leaf][0], qc.data[leaf][0])
+        np.testing.assert_array_equal(back.data[leaf][1], qc.data[leaf][1])
+
+
+def test_extract_mixed_reads_through_quant_segments():
+    """extract_mixed must report the fused-dequant values at masked
+    positions (the bf16 array is stale there) — the re-encode source."""
+    import jax.numpy as jnp
+    svc, cfg = make_svc()
+    with svc:
+        codec = svc.exe.codec
+        cache = svc.exe.fresh_cache(0)
+        rng = np.random.RandomState(0)
+        T = svc.exe.cs
+        blocks = {n: jnp.asarray(rng.randn(
+            T, int(np.prod([s for i, s in enumerate(cache[n].shape)
+                            if i != 2]))).astype(np.float32))
+            for n in codec.leaves}
+        head_dims = {n: cache[n].shape[-1] for n in codec.leaves}
+        qc = codec.quantize_resident_blocks(blocks, head_dims)
+        cache = svc.exe.scatter_quant_fn(
+            cache, jnp.arange(T),
+            {n: jnp.asarray(qc.data[n][0]) for n in codec.leaves},
+            {n: jnp.asarray(qc.data[n][1]) for n in codec.leaves})
+        got = codec.extract_mixed(cache, 0, T)
+        want = codec.dequantize_resident(qc)
+        for n in codec.leaves:
+            np.testing.assert_array_equal(
+                np.asarray(got[n], np.float32),
+                np.asarray(want[n], np.float32))

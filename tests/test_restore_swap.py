@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.chunks import ChunkCodec, CompressedChunk
+from repro.core.chunks import CompressedChunk
 from repro.core.restore import (LayerFeed, np_dequantize, read_chunk_file,
                                 read_chunk_layer, write_chunk_file,
                                 _read_header)

@@ -2,7 +2,6 @@
 policy plumbing, AoT/lifecycle invariants, and the Table-1 API."""
 import tempfile
 
-import jax
 import numpy as np
 import pytest
 
@@ -39,6 +38,7 @@ def test_generation_fidelity_under_pressure():
     evictions = sum(1 for c in svc_small.contexts.values()
                     for m in c.chunks.values() if not m.in_memory)
     svc_small.close()
+    assert evictions > 0
     assert big == small
     assert svc_small is not None
 

@@ -8,8 +8,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ASSIGNED, REGISTRY, SHAPES, get_config
 from repro.models.registry import build_model
-from repro.sharding.rules import (AXIS_SIZE, _axsize, batch_pspecs,
-                                  cache_pspecs, param_pspecs, state_pspecs)
+from repro.sharding.rules import (_axsize, cache_pspecs, param_pspecs,
+                                  state_pspecs)
 from repro.train.optimizer import OptConfig, init_state
 
 ARCHS = sorted(REGISTRY)

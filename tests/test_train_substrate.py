@@ -12,8 +12,7 @@ import pytest
 from repro.data.pipeline import SyntheticLM
 from repro.trace.synth import PATTERNS, TABLE3, synthesize
 from repro.train import checkpoint as ckpt
-from repro.train.optimizer import (OptConfig, apply_updates, global_norm,
-                                   init_state)
+from repro.train.optimizer import OptConfig, apply_updates, init_state
 
 
 def _quadratic_state(cfg, key=0):
