@@ -1,26 +1,42 @@
-"""CI bench regression gate: compare a fresh batched-decode A/B against
-the committed baseline and fail on a >30% regression.
+"""CI bench regression gate: compare a fresh A/B against the committed
+baseline and fail on a >30% regression.
 
-Only RATIO metrics are compared — both are measured serial-vs-batch on
-the SAME machine in the same process, so they are portable between this
-repo's container and a CI runner, unlike absolute tokens/s:
+Only RATIO metrics are compared — both sides of each ratio are measured
+on the SAME machine in the same process, so the ratios are portable
+between this repo's container and a CI runner, unlike absolute
+tokens/s.  Three bench kinds are gated (``--kind``):
 
-  * ``aggregate_decode_speedup`` (batch-4 over serial throughput) must
-    not fall more than ``--tol`` below the baseline's,
-  * ``fg_ttft_ratio_batch4_vs_serial`` (lower = batching protects
-    foreground TTFT) must not rise more than ``--tol`` above it.
+  * ``batched`` (default, BENCH_batched_decode.json):
+    ``aggregate_decode_speedup`` must not fall more than ``--tol``
+    below the baseline's, ``fg_ttft_ratio_batch4_vs_serial`` must not
+    rise more than ``--tol`` above it.
+  * ``quant`` (BENCH_quant_resident.json): ``switch_in_speedup``
+    (full-dequant over quant-resident switch-in) must not fall more
+    than ``--tol`` below the baseline's, and the 8-bit token-identity
+    probe must still hold.
+  * ``paged`` (BENCH_paged_pool.json): ``switch_in_speedup`` (slot
+    over paged switch-in) must not fall below the floor, the
+    join/leave ``change_round_cost_ratio`` must not rise above the
+    ceiling, and both token-identity probes must hold.
 
-The committed BENCH_batched_decode.json carries a ``reduced`` section
-recorded with the CI trace size; the gate compares like against like.
+The committed JSONs carry a ``reduced`` section recorded with the CI
+trace size; the gate compares like against like.
 
   PYTHONPATH=src:. python benchmarks/check_regression.py \
-      --fresh /tmp/fresh.json [--baseline BENCH_batched_decode.json]
+      --fresh /tmp/fresh.json [--kind batched] \
+      [--baseline BENCH_batched_decode.json]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+DEFAULT_BASELINES = {
+    "batched": "BENCH_batched_decode.json",
+    "quant": "BENCH_quant_resident.json",
+    "paged": "BENCH_paged_pool.json",
+}
 
 
 def section(doc: dict) -> dict:
@@ -29,45 +45,84 @@ def section(doc: dict) -> dict:
     return doc.get("reduced", doc)
 
 
-def check(baseline: dict, fresh: dict, tol: float):
+def _floor(failures, name, base, new, tol):
+    floor = base * (1.0 - tol)
+    if new < floor:
+        failures.append(
+            f"{name} regressed: {new:.2f} vs baseline {base:.2f} "
+            f"(floor {floor:.2f} at tol {tol:.0%})")
+
+
+def _ceiling(failures, name, base, new, tol):
+    ceil = base * (1.0 + tol)
+    if new > ceil:
+        failures.append(
+            f"{name} regressed: {new:.3f} vs baseline {base:.3f} "
+            f"(ceiling {ceil:.3f} at tol {tol:.0%})")
+
+
+def _identity(failures, name, new):
+    if not new.get(name, False):
+        failures.append(f"{name} no longer holds")
+
+
+def check(kind: str, baseline: dict, fresh: dict, tol: float):
     base, new = section(baseline), section(fresh)
-    failures = []
+    failures: list = []
+    report = {"kind": kind, "tolerance": tol}
 
-    b_sp = base["aggregate_decode_speedup"]
-    f_sp = new["aggregate_decode_speedup"]
-    floor = b_sp * (1.0 - tol)
-    if f_sp < floor:
-        failures.append(
-            f"aggregate decode speedup regressed: {f_sp:.2f}x vs baseline "
-            f"{b_sp:.2f}x (floor {floor:.2f}x at tol {tol:.0%})")
+    if kind == "batched":
+        _floor(failures, "aggregate decode speedup",
+               base["aggregate_decode_speedup"],
+               new["aggregate_decode_speedup"], tol)
+        _ceiling(failures, "foreground TTFT ratio",
+                 base["fg_ttft_ratio_batch4_vs_serial"],
+                 new["fg_ttft_ratio_batch4_vs_serial"], tol)
+        report.update(
+            baseline_speedup=base["aggregate_decode_speedup"],
+            fresh_speedup=new["aggregate_decode_speedup"],
+            baseline_fg_ttft_ratio=base["fg_ttft_ratio_batch4_vs_serial"],
+            fresh_fg_ttft_ratio=new["fg_ttft_ratio_batch4_vs_serial"])
+    elif kind == "quant":
+        _floor(failures, "quant-resident switch-in speedup",
+               base["switch_in_speedup"], new["switch_in_speedup"], tol)
+        _identity(failures, "token_identical_8bit", new)
+        report.update(baseline_speedup=base["switch_in_speedup"],
+                      fresh_speedup=new["switch_in_speedup"])
+    elif kind == "paged":
+        _floor(failures, "paged-pool switch-in speedup",
+               base["switch_in_speedup"], new["switch_in_speedup"], tol)
+        _ceiling(failures, "join/leave round cost ratio",
+                 base["join_leave"]["change_round_cost_ratio"],
+                 new["join_leave"]["change_round_cost_ratio"], tol)
+        _identity(failures, "token_identical_batch1", new)
+        _identity(failures, "token_identical_batch4", new)
+        report.update(
+            baseline_speedup=base["switch_in_speedup"],
+            fresh_speedup=new["switch_in_speedup"],
+            baseline_join_ratio=base["join_leave"][
+                "change_round_cost_ratio"],
+            fresh_join_ratio=new["join_leave"]["change_round_cost_ratio"])
+    else:
+        raise SystemExit(f"unknown bench kind: {kind}")
 
-    b_tt = base["fg_ttft_ratio_batch4_vs_serial"]
-    f_tt = new["fg_ttft_ratio_batch4_vs_serial"]
-    ceil = b_tt * (1.0 + tol)
-    if f_tt > ceil:
-        failures.append(
-            f"foreground TTFT ratio regressed: {f_tt:.3f} vs baseline "
-            f"{b_tt:.3f} (ceiling {ceil:.3f} at tol {tol:.0%})")
-
-    report = {
-        "baseline_speedup": b_sp, "fresh_speedup": f_sp,
-        "baseline_fg_ttft_ratio": b_tt, "fresh_fg_ttft_ratio": f_tt,
-        "tolerance": tol, "failures": failures,
-    }
+    report["failures"] = failures
     return failures, report
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", default="BENCH_batched_decode.json")
+    ap.add_argument("--kind", default="batched",
+                    choices=sorted(DEFAULT_BASELINES))
+    ap.add_argument("--baseline", default=None)
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--tol", type=float, default=0.30)
     args = ap.parse_args()
-    with open(args.baseline) as f:
+    with open(args.baseline or DEFAULT_BASELINES[args.kind]) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
-    failures, report = check(baseline, fresh, args.tol)
+    failures, report = check(args.kind, baseline, fresh, args.tol)
     print(json.dumps(report, indent=1))
     if failures:
         for msg in failures:

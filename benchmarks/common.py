@@ -47,14 +47,14 @@ def bench_model(arch: str = "llama2-7b"):
 def make_service(policy: str, budget: int, max_ctx: int = 256,
                  chunk_tokens: int = 16, arch: str = "llama2-7b",
                  profile: bool = True, ratio_global: float = 0.5,
-                 decode_batch: int = 1,
-                 quant_resident: bool = False) -> LLMService:
+                 decode_batch: int = 1, quant_resident: bool = False,
+                 paged_pool: bool = True) -> LLMService:
     cfg, model, params = bench_model(arch)
     set_disk_throttle(DISK_BW, DISK_LAT)
     sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx,
                     chunk_tokens=chunk_tokens, memory_budget=budget,
                     ratio_global=ratio_global, decode_batch=decode_batch,
-                    quant_resident=quant_resident,
+                    quant_resident=quant_resident, paged_pool=paged_pool,
                     swap_dir=tempfile.mkdtemp(prefix=f"llms_{policy}_"))
     svc = LLMService(model, params, sc)
     if profile and sc.use_pipeline:

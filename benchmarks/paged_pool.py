@@ -1,0 +1,240 @@
+"""A/B: continuous batching over the paged, unified KV pool vs the
+per-slot working caches.
+
+Same llms policy, same byte budget, same trace — the only difference
+is ``paged_pool``.  The slot baseline pays a scatter into a per-slot
+working cache at EVERY switch-in (quant-resident: int8 memcpy for
+8-bit chunks, a dequant pass for the rest); the pool keeps chunks
+resident in one global page arena, so a steady-state switch-in is a
+page-table read — admissions happen once per chunk lifetime, and
+re-encoded tail chunks re-admit ahead of time at swap-out.  Reports:
+
+  * steady-state switch-in latency per leg (timed restore + assembly),
+    the in-process speedup between the legs, and the speedup against
+    the COMMITTED quant-resident slot baseline in
+    BENCH_quant_resident.json (the ~7 ms this change attacks; must
+    come out >= 5x),
+  * join/leave decode-round cost: per-round batched-decode wall time
+    in rounds whose batch membership just changed vs steady-membership
+    rounds — a join/leave only rewrites page-table rows, so the ratio
+    must stay ~1 (the previous engine paid a cache merge/split here),
+  * token identity probes: the paged path must emit exactly the slot
+    path's tokens at decode_batch=1 and decode_batch=4.
+
+  PYTHONPATH=src:. python benchmarks/paged_pool.py \
+      [--out BENCH_paged_pool.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import DISK_BW, DISK_LAT, bench_model, make_service
+from repro.core.restore import set_disk_throttle
+from repro.core.scheduler import ServiceRouter
+
+N_CTX = 12
+ROUNDS = 3
+PROMPT = 48
+MAX_NEW = 8
+BUDGET = 2 << 20
+COMMITTED_BASELINE = "BENCH_quant_resident.json"
+
+
+def run_leg(paged: bool, budget: int = BUDGET):
+    """One steady-state switch-in measurement (the quant_resident.py
+    protocol: warm + shape-trace passes, then ROUNDS measured rounds
+    over N_CTX interleaved contexts)."""
+    cfg, _, _ = bench_model()
+    svc = make_service("llms", budget, quant_resident=True,
+                       paged_pool=paged)
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, PROMPT).tolist()
+               for _ in range(N_CTX)]
+    with svc:
+        stubs = [svc.newLLMCtx() for _ in range(N_CTX)]
+
+        def one_round(r, max_new=MAX_NEW):
+            toks = []
+            for stub, p in zip(stubs, prompts):
+                toks.append(svc.callLLM(stub, p[r:r + 8], max_new)[1])
+            return toks
+
+        set_disk_throttle(None)             # warm pass: compile everything
+        one_round(0)
+        wstubs = [svc.newLLMCtx() for _ in range(2)]
+        for r in range(2 * ROUNDS + 1):
+            for stub in wstubs:
+                svc.callLLM(stub, prompts[0][r:r + (8 if r else PROMPT)],
+                            MAX_NEW)
+        for stub in wstubs:
+            svc.delLLMCtx(stub)
+        for r in range(ROUNDS):
+            one_round(1 + r)
+        svc.records.clear()
+        set_disk_throttle(DISK_BW, DISK_LAT)
+
+        t0 = time.perf_counter()
+        all_toks = [one_round(1 + ROUNDS + r) for r in range(ROUNDS)]
+        wall = time.perf_counter() - t0
+
+        recs = svc.records
+        sw = [r["switch_s"] + r["assemble_s"] for r in recs]
+        gen = sum(len(t) for toks in all_toks for t in toks)
+        out = {
+            "paged_pool": paged,
+            "budget_bytes": budget,
+            "calls": len(recs),
+            "switch_in_mean_ms": round(float(np.mean(sw)) * 1e3, 4),
+            "switch_in_median_ms": round(float(np.median(sw)) * 1e3, 4),
+            "switch_in_p95_ms": round(
+                float(np.percentile(sw, 95)) * 1e3, 4),
+            "generated_tokens": gen,
+            "decode_tokens_per_s": round(gen / wall, 2),
+        }
+        if paged:
+            out.update({k: v for k, v in svc.stats().items()
+                        if k.startswith("pool_")})
+    return out, all_toks
+
+
+def join_leave_probe():
+    """Continuous batching: time every batched decode round of a mixed
+    short/long routed workload at decode_batch=4 and compare rounds
+    whose membership just changed against steady-membership rounds."""
+    cfg, _, _ = bench_model()
+    svc = make_service("llms", 64 << 20, decode_batch=4,
+                       quant_resident=True, profile=False)
+    set_disk_throttle(None)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab, 24).tolist() for _ in range(12)]
+    rounds = []                             # (seconds, member cid set)
+    orig = svc.decode_step_batch
+
+    def timed(states):
+        t0 = time.perf_counter()
+        out = orig(states)
+        rounds.append((time.perf_counter() - t0,
+                       frozenset(s.ctx.cid for s in states)))
+        return out
+
+    with svc:
+        def one_pass(measure):
+            svc.decode_step_batch = timed if measure else orig
+            with ServiceRouter(svc, predict=False,
+                               slice_steps=4) as router:
+                app = router.register_app("a", "fg")
+                streams = [app.stream(app.new_ctx(), p,
+                                      max_new_tokens=6 + 10 * (i % 2))
+                           for i, p in enumerate(prompts)]
+                router.drain()
+                for s in streams:
+                    s.result()
+            return router
+
+        one_pass(False)                     # warm: compile every bucket
+        rounds.clear()
+        router = one_pass(True)
+
+    steady, changed = [], []
+    for i, (dt, members) in enumerate(rounds):
+        if i == 0:
+            continue
+        (changed if members != rounds[i - 1][1] else steady).append(dt)
+    return {
+        "decode_rounds": len(rounds),
+        "membership_change_rounds": len(changed),
+        "joins_mid_slice": router.joins_mid_slice,
+        "steady_round_mean_ms": round(float(np.mean(steady)) * 1e3, 4),
+        "change_round_mean_ms": round(float(np.mean(changed)) * 1e3, 4),
+        "change_round_cost_ratio": round(
+            float(np.median(changed) / np.median(steady)), 3),
+    }
+
+
+def identity_probe(decode_batch: int) -> bool:
+    """Paged vs slot tokens, greedy, same prompts/trace."""
+    cfg, _, _ = bench_model()
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(1, cfg.vocab, 24).tolist() for _ in range(6)]
+    toks = {}
+    for paged in (True, False):
+        svc = make_service("llms", 64 << 20, decode_batch=decode_batch,
+                           quant_resident=True, paged_pool=paged,
+                           profile=False)
+        set_disk_throttle(None)
+        with svc:
+            if decode_batch == 1:
+                out = []
+                stubs = [svc.newLLMCtx() for _ in prompts]
+                for r in range(2):          # round 2 = switch-in path
+                    for stub, p in zip(stubs, prompts):
+                        out.append(svc.callLLM(stub, p[r:], 6)[1])
+            else:
+                with ServiceRouter(svc, predict=False,
+                                   slice_steps=2) as router:
+                    app = router.register_app("a", "fg")
+                    streams = [app.stream(app.new_ctx(), p,
+                                          max_new_tokens=6)
+                               for p in prompts]
+                    router.drain()
+                    out = [s.result() for s in streams]
+        toks[paged] = out
+    return toks[True] == toks[False]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_paged_pool.json")
+    args = ap.parse_args()
+
+    slot, _ = run_leg(False)
+    paged, _ = run_leg(True)
+    join_leave = join_leave_probe()
+    ident1 = identity_probe(1)
+    ident4 = identity_probe(4)
+
+    committed_ms = None
+    if os.path.exists(COMMITTED_BASELINE):
+        with open(COMMITTED_BASELINE) as f:
+            committed_ms = json.load(f)["quant_resident"][
+                "switch_in_mean_ms"]
+
+    paged_ms = paged["switch_in_mean_ms"]
+    report = {
+        "trace": {"contexts": N_CTX, "rounds": ROUNDS,
+                  "prompt_tokens": PROMPT, "max_new": MAX_NEW,
+                  "policy": "llms", "quant_resident": True,
+                  "budget_bytes": BUDGET},
+        "slot_baseline": slot,
+        "paged_pool": paged,
+        "switch_in_speedup": round(
+            slot["switch_in_mean_ms"] / max(paged_ms, 1e-9), 2),
+        "committed_quant_baseline_ms": committed_ms,
+        "switch_in_speedup_vs_committed": (
+            round(committed_ms / max(paged_ms, 1e-9), 2)
+            if committed_ms is not None else None),
+        "join_leave": join_leave,
+        "token_identical_batch1": bool(ident1),
+        "token_identical_batch4": bool(ident4),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1)
+    print(json.dumps(report, indent=1))
+
+    assert ident1, "paged decode diverged from slot path at batch 1"
+    assert ident4, "paged decode diverged from slot path at batch 4"
+    assert join_leave["change_round_cost_ratio"] < 1.5, \
+        "membership-change rounds pay a merge-like cost"
+    if committed_ms is not None:
+        assert committed_ms / max(paged_ms, 1e-9) >= 5.0, \
+            f"steady-state switch-in {paged_ms} ms is not >=5x faster " \
+            f"than the committed {committed_ms} ms slot baseline"
+
+
+if __name__ == "__main__":
+    main()

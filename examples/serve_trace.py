@@ -21,10 +21,11 @@ from repro.trace.synth import synthesize
 
 
 def run(policy: str, events, model, params, budget: int,
-        slice_steps: int = 0, decode_batch: int = 1):
+        slice_steps: int = 0, decode_batch: int = 1,
+        paged_pool: bool = True):
     with LLMService(model, params, LLMSConfig(
             policy=policy, max_ctx_len=128, memory_budget=budget,
-            decode_batch=decode_batch,
+            decode_batch=decode_batch, paged_pool=paged_pool,
             swap_dir=tempfile.mkdtemp())) as svc:
         if svc.cfg.use_pipeline:
             svc.profile_pipeline()
@@ -69,6 +70,10 @@ def main():
     ap.add_argument("--decode-batch", type=int, default=1,
                     help="decode slots: queued generations batch up to "
                          "this many per jitted step")
+    ap.add_argument("--paged-pool", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="decode over the unified paged KV pool "
+                         "(--no-paged-pool restores per-slot caches)")
     args = ap.parse_args()
 
     cfg = reduced(get_config("llama2-7b"))
@@ -81,10 +86,20 @@ def main():
     for policy in ("llms", args.policy):
         st = run(policy, events, model, params, budget,
                  slice_steps=args.slice_steps,
-                 decode_batch=args.decode_batch)
+                 decode_batch=args.decode_batch,
+                 paged_pool=args.paged_pool)
         print(f"{policy:10s} mean switch {st['switch_mean_s']*1e3:8.3f} ms  "
               f"p99 {st['switch_p99_s']*1e3:8.3f} ms  "
               f"mem {st['mem_used']:>8d} B")
+        if st.get("paged_pool"):
+            print(f"  pool       bf16 {st['pool_pages16_used']}/"
+                  f"{st['pool_pages16_total']} pages  int8 "
+                  f"{st['pool_pages8_used']}/{st['pool_pages8_total']}  "
+                  f"faults={st['pool_page_faults']}  "
+                  f"table-read switch-ins={st['pool_pt_switch_ins']}  "
+                  f"admit switch-ins={st['pool_admit_switch_ins']}  "
+                  f"reclaims={st['pool_reclaims']}  mid-slice joins="
+                  f"{st['router'].get('joins_mid_slice', 0)}")
         for prio in ("foreground", "background"):
             if prio in st["router"]:
                 r = st["router"][prio]

@@ -11,10 +11,14 @@ Everything above (residency, scheduler) treats this layer as "run the
 model on these tokens/positions"; nothing here knows about
 chunks-on-disk, budgets, or apps.
 
-``extend`` (prefill), ``decode`` (one token, one slot) and
-``decode_many`` (one token for each of B slots in a single jitted
-``[B, 1]`` step) are the stepwise entry points the request/stream
-protocol is built on: ``LLMService`` drives one decode round per
+``extend`` (prefill) and ``decode`` (one token, one slot) are the
+stepwise slot-cache entry points; when the paged KV pool is enabled
+(``cfg.paged_pool``, dense family) the ``paged_extend``/``paged_decode``
+entries run the same computations directly over the global page arenas
+— per-slot page-table rows gather each context's chunks into the dense
+layout inside the jitted step, so batch membership changes cost a
+page-table row swap instead of the merge/split copies the old BatchRun
+path paid.  ``LLMService`` drives one decode round per
 ``decode_step``/``decode_step_batch`` so the router can slice
 generations, batch compatible contexts, and preempt between slices
 (DESIGN.md §2).
@@ -127,8 +131,9 @@ class ModelExecutor:
 
         # working cache: decode_batch independent slot caches (the
         # paper's working-set lock generalized to a slot table); each
-        # slot is a batch-1 cache restored/switched independently, and
-        # decode_many stacks the hot slots into one [B, 1] jitted step.
+        # slot is a batch-1 cache restored/switched independently.  In
+        # paged mode the slots are page-table views into the pool and
+        # decode runs one [B, 1] jitted step over gathered page rows.
         self.decode_slots = max(1, int(getattr(cfg, "decode_batch", 1) or 1))
         self.can_batch_decode = bool(
             getattr(model, "supports_batched_decode", False))
@@ -185,6 +190,104 @@ class ModelExecutor:
             self.leaf_dims = {"ckv": (mc.mla.kv_lora_rank,),
                               "kpe": (mc.mla.qk_rope_head_dim,)}
 
+        # paged KV pool: dense-family contexts decode as views into one
+        # global page arena instead of owning slot caches.  Other
+        # families (rwkv6, encdec, vlm, mla_moe) keep the slot path —
+        # their cache layouts either aren't chunk-paged (recurrent
+        # state) or override the dense decode entry points.
+        self.paged = (
+            bool(getattr(cfg, "paged_pool", False))
+            and bool(getattr(cfg, "chunked", False))
+            and mc.family == "dense"
+            and bool(getattr(model, "supports_paged_pool", False))
+            and self.can_batch_decode
+            and self.s_work % self.cs == 0)
+        self.pages_per_ctx = self.s_work // self.cs
+        if self.paged:
+            C = self.pages_per_ctx
+            # +1 everywhere: page 0 is the reserved scratch page.  The
+            # bf16 arena must at least fit every decode slot's full page
+            # row or a single round could not be satisfied.
+            self.pool_pages16 = max(
+                int(getattr(cfg, "pool_pages_16", 0) or 16 * C + 1),
+                self.decode_slots * C + 1)
+            self.pool_pages8 = (
+                int(getattr(cfg, "pool_pages_8", 0) or 16 * C + 1)
+                if self.quant_resident else 1)
+            pk = (self._fp, cfg.window, cfg.n_sinks, mc.family, self.cs,
+                  self.quant_resident, "paged")
+            pcached = _jit_cache_get(pk)
+            if pcached is None:
+                cw = dict(window=cfg.window, n_sinks=cfg.n_sinks)
+                L = mc.n_layers
+                leaves = tuple(self.codec.leaves)
+                dims = dict(self.leaf_dims)
+                cs, nl = self.cs, self.n_layers
+
+                # admission converts the chunk-file block layout
+                # (cs, L*prod(dims)) used by the codec/payload paths
+                # into the page layout (L, cs, *dims) inside the jit, so
+                # host code hands over exactly the payload blocks.
+                def admit16(arenas, page, blocks):
+                    out = dict(arenas)
+                    for n in leaves:
+                        t = blocks[n].reshape(cs, nl, 1, *dims[n])[:, :, 0]
+                        t = jnp.moveaxis(t, 0, 1)
+                        out[n + "16"] = arenas[n + "16"].at[:, page].set(
+                            t.astype(arenas[n + "16"].dtype))
+                    return out
+
+                def admit8(arenas, page, codes, scales):
+                    out = dict(arenas)
+                    for n in leaves:
+                        t = codes[n].reshape(cs, nl, 1, *dims[n])[:, :, 0]
+                        out[n + "8"] = arenas[n + "8"].at[:, page].set(
+                            jnp.moveaxis(t, 0, 1))
+                        s = scales[n].reshape(cs, nl, *dims[n][:-1])
+                        out[n + "8s"] = arenas[n + "8s"].at[:, page].set(
+                            jnp.moveaxis(s, 0, 1))
+                    return out
+
+                def read16(arenas, page):
+                    return {n: jnp.moveaxis(
+                        arenas[n + "16"][:, page], 0, 1).reshape(cs, -1)
+                        for n in leaves}
+
+                # fresh tail pages must start as zeros: the slot path's
+                # never-written positions are exactly zero (fresh_cache
+                # is the shared zero cache), and unwritten-but-attended
+                # positions (e.g. a call's final emitted token) must
+                # encode identically on both paths
+                def zero16(arenas, page):
+                    out = dict(arenas)
+                    for n in leaves:
+                        a = arenas[n + "16"]
+                        out[n + "16"] = a.at[:, page].set(
+                            jnp.zeros(a.shape[:1] + a.shape[2:], a.dtype))
+                    return out
+
+                pcached = {
+                    # unroll mirrors the old batched-decode entry: XLA
+                    # CPU's rolled scan shuffles the gathered multi-row
+                    # cache every layer and dominates the step
+                    "decode": jax.jit(functools.partial(
+                        model.decode_paged, want_density=True,
+                        unroll=L if L <= 48 else 1, **cw)),
+                    "extend": jax.jit(functools.partial(
+                        model.extend_paged, want_density=True, **cw)),
+                    "admit16": jax.jit(admit16),
+                    "admit8": jax.jit(admit8),
+                    "read16": jax.jit(read16),
+                    "zero16": jax.jit(zero16),
+                }
+                _jit_cache_put(pk, pcached)
+            self.paged_decode_fn = pcached["decode"]
+            self.paged_extend_fn = pcached["extend"]
+            self.admit16_fn = pcached["admit16"]
+            self.admit8_fn = pcached["admit8"]
+            self.read16_fn = pcached["read16"]
+            self.zero16_fn = pcached["zero16"]
+
     @property
     def max_request_tokens(self) -> int:
         """Largest prompt+generation a single request may add: half the
@@ -231,73 +334,78 @@ class ModelExecutor:
         return (out.cache, np.asarray(out.logits[0]),
                 np.asarray(mass[0], np.float64))
 
-    # -- multi-context batched decode --------------------------------- #
-    def begin_batch(self, caches: Sequence[Any]) -> "BatchRun":
-        """Open a persistent batched-decode run over the given slot
-        caches (see ``BatchRun``)."""
-        assert self.can_batch_decode and len(caches) > 1
-        return BatchRun(self, caches)
+    # -- paged KV pool entry points ----------------------------------- #
+    def init_arenas(self):
+        """Fresh page arenas — one fixed buffer per (leaf, kind).  Page 0
+        is the reserved scratch/zero page every unowned page-table entry
+        points at; its contents are garbage after the first write and
+        never attended (the causal/seq-len masks zero those positions)."""
+        assert self.paged
+        arenas = {}
+        for n in self.codec.leaves:
+            dims = self.leaf_dims[n]
+            arenas[n + "16"] = jnp.zeros(
+                (self.n_layers, self.pool_pages16, self.cs, *dims),
+                self.work_cache[n].dtype)
+            if self.quant_resident:
+                arenas[n + "8"] = jnp.zeros(
+                    (self.n_layers, self.pool_pages8, self.cs, *dims),
+                    jnp.int8)
+                arenas[n + "8s"] = jnp.zeros(
+                    (self.n_layers, self.pool_pages8, self.cs, *dims[:-1]),
+                    jnp.float32)
+        return arenas
 
-    def decode_many(self, caches: Sequence[Any], toks: Sequence[int]
-                    ) -> List[Tuple[Any, np.ndarray, np.ndarray]]:
-        """One decode step for each slot: slot i's cache advances by its
-        token ``toks[i]`` at its own position, in a single jitted
-        ``[B, 1]`` step.  One-shot convenience over ``begin_batch`` —
-        steady-state callers (``LLMService.decode_step_batch``) keep the
-        ``BatchRun`` open across rounds instead, so the merge/split
-        copies are paid per membership change, not per token.  Models
-        without per-row position support fall back to a serial loop.
-        -> list of (cache', logits, density-mass) per slot, same order.
-        """
-        n = len(caches)
-        if n == 1 or not self.can_batch_decode:
-            return [self.decode(c, t) for c, t in zip(caches, toks)]
-        run = self.begin_batch(caches)
-        logits, mass = run.step(toks)
-        outs = run.split()
-        return [(outs[i], logits[i], mass[i]) for i in range(n)]
+    def paged_extend(self, arenas, prompt: np.ndarray, n0: int,
+                     pt16, pt8, qmask):
+        """Paged form of ``extend``: append ``prompt`` at [n0, n0+M) for
+        the single context whose page-table row is ``pt16[0]`` (and
+        ``pt8[0]``/``qmask[0]`` under quant_resident, else None).
+        Padded positions land on the scratch page 0.
+        -> (arenas', last-token logits, per-position density mass)."""
+        M = len(prompt)
+        pos = np.arange(n0, n0 + M, dtype=np.int32)
+        pos_b = self.bucket_pad(pos, self.pad_slot)
+        toks_b = self.bucket_pad(np.asarray(prompt, np.int32), 0)
+        arenas, hidden, dens = self.paged_extend_fn(
+            self.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
+            arenas, jnp.asarray(pt16),
+            None if pt8 is None else jnp.asarray(pt8),
+            None if qmask is None else jnp.asarray(qmask),
+            jnp.int32(n0 + M))
+        logits = np.asarray(self.logits_fn(self.params, hidden[:, M - 1]))[0]
+        return arenas, logits, np.asarray(dens[0], np.float64)
 
-    def _batch_fns(self, nb: int):
-        """(merge, step, split) jitted callables for batch bucket nb."""
-        # keyed on quant_resident too: merge/split close over the leaf
-        # list of THIS executor's cache structure (mixed caches carry
-        # k_q/v_q/scale/quant_mask leaves a plain cache doesn't)
-        ck = (self._fp, self.cfg.window, self.cfg.n_sinks,
-              self.model.cfg.family, self.cs, self.quant_resident,
-              "batch", nb)
-        fns = _jit_cache_get(ck)
-        if fns is None:
-            model = self.model
-            cw = dict(window=self.cfg.window, n_sinks=self.cfg.n_sinks)
-            # unroll the layer scan in the batched step: XLA CPU's rolled
-            # scan shuffles the full multi-row cache every iteration and
-            # dominates the step (~5x on the bench model); cap the unroll
-            # so very deep models keep bounded compile times
-            if getattr(model, "supports_batched_decode", False):
-                L = model.cfg.n_layers
-                cw["unroll"] = L if L <= 48 else 1
-            leaves = [k for k in self._zero_cache if k != "pos"]
-
-            def merge(caches):
-                out = {name: jnp.concatenate(
-                    [c[name] for c in caches], axis=1) for name in leaves}
-                out["pos"] = jnp.stack([c["pos"] for c in caches])
-                return out
-
-            def step(params, toks, merged):
-                out, mass = model.decode_step(
-                    params, toks, merged, want_density=True, **cw)
-                return out.cache, out.logits, mass
-
-            def split(merged):
-                return tuple(
-                    {**{name: merged[name][:, i:i + 1] for name in leaves},
-                     "pos": merged["pos"][i]}
-                    for i in range(nb))
-
-            fns = (jax.jit(merge), jax.jit(step), jax.jit(split))
-            _jit_cache_put(ck, fns)
-        return fns
+    def paged_decode(self, arenas, toks: Sequence[int], pos: Sequence[int],
+                     pt16, pt8, qmask):
+        """One decode round for n contexts over the pool: row i advances
+        by ``toks[i]`` at its own position ``pos[i]``, batch-bucketed.
+        Pad rows get the all-zero page-table row (scratch page) and are
+        sliced off the outputs.  -> (arenas', logits [n, V],
+        density-mass [n, S])."""
+        n = len(toks)
+        nb = next(b for b in self.batch_buckets if b >= n)
+        toks_b = np.zeros((nb, 1), np.int32)
+        toks_b[:n, 0] = toks
+        pos_b = np.zeros(nb, np.int32)
+        pos_b[:n] = pos
+        C = pt16.shape[1]
+        pt16_b = np.zeros((nb, C), np.int32)
+        pt16_b[:n] = pt16
+        pt8_b = qmask_b = None
+        if pt8 is not None:
+            pt8_b = np.zeros((nb, C), np.int32)
+            pt8_b[:n] = pt8
+            qmask_b = np.zeros((nb, C), bool)
+            qmask_b[:n] = qmask
+        arenas, logits, mass = self.paged_decode_fn(
+            self.params, jnp.asarray(toks_b), arenas,
+            jnp.asarray(pt16_b),
+            None if pt8_b is None else jnp.asarray(pt8_b),
+            None if qmask_b is None else jnp.asarray(qmask_b),
+            jnp.asarray(pos_b))
+        return (arenas, np.asarray(logits)[:n],
+                np.asarray(mass, np.float64)[:n])
 
     def run_pipelined(self, feed, toks_b, miss_b, io_pos_b, cache, n_total):
         """Dispatch the layer-pipelined recompute scan, with ``feed``
@@ -330,37 +438,3 @@ class ModelExecutor:
                                   n_sinks=self.cfg.n_sinks))
             _jit_cache_put(ck, fn)
         return fn
-
-
-class BatchRun:
-    """A persistent merged working cache over n decode slots.
-
-    Merging n batch-1 slot caches into one ``[nb, ...]`` cache (padded
-    to a power-of-two bucket) costs real copies; a decode round on the
-    MERGED cache does not.  Keeping the run open while the batch
-    membership is stable makes the steady-state round exactly one jitted
-    ``[nb, 1]`` model step — ``split()`` pays the copies back out only
-    when a generation leaves the batch (finish/suspend/cancel).
-    """
-
-    def __init__(self, exe: ModelExecutor, caches: Sequence[Any]):
-        self.exe = exe
-        self.n = len(caches)
-        self.nb = next(b for b in exe.batch_buckets if b >= self.n)
-        self._merge_fn, self._step_fn, self._split_fn = exe._batch_fns(self.nb)
-        pad = (exe._zero_cache,) * (self.nb - self.n)
-        self.merged = self._merge_fn(tuple(caches) + pad)
-
-    def step(self, toks: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
-        """Advance every slot by its token -> (logits [n, V],
-        density-mass [n, S])."""
-        toks_b = np.zeros((self.nb, 1), np.int32)
-        toks_b[:self.n, 0] = toks
-        self.merged, logits, mass = self._step_fn(
-            self.exe.params, jnp.asarray(toks_b), self.merged)
-        return (np.asarray(logits)[:self.n],
-                np.asarray(mass, np.float64)[:self.n])
-
-    def split(self) -> List[Any]:
-        """Per-slot batch-1 caches reflecting every step so far."""
-        return list(self._split_fn(self.merged)[:self.n])

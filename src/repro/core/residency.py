@@ -38,6 +38,7 @@ from repro.core.chunks import ChunkMeta, CompressedChunk, QuantResidentChunk
 from repro.core.context_store import Context, ContextStore
 from repro.core.executor import ModelExecutor
 from repro.core.lifecycle import LCTRUQueue, MemoryManager
+from repro.core.pagepool import BF16, QUANT, PagePool
 from repro.core.pipeline import PipelineProfile, fit_linear, plan_split
 from repro.core.restore import LayerFeed, read_chunk_file, write_chunk_file
 from repro.core.swap import AsyncSwapper, DiskStore
@@ -112,6 +113,15 @@ class ResidencyEngine:
         self.mem = mem
         self.cfg = cfg
         self.slots = SlotAllocator(exe.decode_slots)
+        # paged KV pool: per-context page tables replace slot-cache
+        # ownership for dense families (see core/pagepool.py).  With
+        # pool_persist (default) a context's pages SURVIVE switch-out —
+        # the next switch-in is a page-table read; pool_persist=False is
+        # the slot-like A/B baseline (pages freed at swap-out, every
+        # switch-in re-admits).
+        self.pool: Optional[PagePool] = (
+            PagePool(exe, ctxs) if exe.paged else None)
+        self.pool_persist = True
         self.profile = PipelineProfile()
         self.profiled = False
         self.epoch = 0                      # bumped on any eviction
@@ -131,6 +141,8 @@ class ResidencyEngine:
         I/O + recompute) is the timed QoS path; resident-chunk assembly
         into the bf16 working cache is not (see LLMService.callLLM)."""
         exe = self.exe
+        if self.pool is not None:
+            return self._switch_in_paged(ctx)
         cache = exe.fresh_cache(ctx.n_tokens)
         if ctx.n_tokens == 0:
             return cache, 0.0
@@ -154,8 +166,47 @@ class ResidencyEngine:
                     by_bits.setdefault(m.bits, []).append(i)
                 self.queue.touch((ctx.cid, i), m.bits)
                 m.last_access = time.time()
+        # slot-path quant assembly (paged_pool=False only; the pool
+        # admits quant pages once instead): scatter each decode-grid
+        # payload's codes + scales behind the fused kernel, re-gridding
+        # packed 4/2-bit payloads to int8 via the qmemo
         if q_idxs:
-            cache = self._assemble_quant(ctx, cache, q_idxs)
+            codec = exe.codec
+            head_dims = {n: exe.work_cache[n].shape[-1]
+                         for n in codec.leaves}
+            codes = {n: [] for n in codec.leaves}
+            scales = {n: [] for n in codec.leaves}
+            for i in q_idxs:
+                cc = ctx.payload[i]
+                if not isinstance(cc, QuantResidentChunk):
+                    cc = ctx.qmemo.get(i)
+                    if cc is None:      # re-grid once per (re-)encode
+                        cc = codec.quantize_resident_blocks(
+                            self._payload_blocks(ctx.payload[i]), head_dims)
+                        ctx.qmemo[i] = cc
+                for n in codec.leaves:
+                    codes[n].append(cc.data[n][0])
+                    scales[n].append(cc.data[n][1])
+            pos = exe.chunk_positions(q_idxs)
+            pos_b = exe.bucket_pad(pos, exe.pad_slot)
+            pad = len(pos_b) - len(pos)
+
+            def assemble(parts):
+                # payloads are host numpy: concatenate + pad on the host
+                # and ship ONE array per leaf, ONE scatter for the whole
+                # quant tier (per-chunk dispatches would dominate the
+                # QoS path, and jnp.concatenate would compile a kernel
+                # per (chunk-count, pad) combination)
+                out = np.concatenate([np.asarray(p) for p in parts])
+                if pad:
+                    out = np.concatenate(
+                        [out, np.zeros((pad,) + out.shape[1:], out.dtype)])
+                return jnp.asarray(out)
+
+            cache = exe.scatter_quant_fn(
+                cache, jnp.asarray(pos_b),
+                {n: assemble(codes[n]) for n in codec.leaves},
+                {n: assemble(scales[n]) for n in codec.leaves})
         for bits, idxs in by_bits.items():
             # decode each payload once, not once per leaf
             chunk_blocks = [self._payload_blocks(ctx.payload[i])
@@ -184,46 +235,122 @@ class ResidencyEngine:
             jax.block_until_ready(cache[exe.codec.leaves[0]])
         return cache, time.perf_counter() - t0
 
-    def _assemble_quant(self, ctx: Context, cache, idxs: List[int]):
-        """QUANT_RESIDENT assembly: one scatter of decode-grid codes +
-        per-(token, kv-head) scales into the slot's int8 segments, no
-        dequantization.  8-bit chunks (QuantResidentChunk) contribute
-        their payload bytes verbatim; packed 4/2-bit chunks are unpacked
-        and re-gridded to int8 in place (lossless unpack + a <=1/254
-        relative re-rounding, far inside their quantization error)."""
-        exe = self.exe
-        codec = exe.codec
-        head_dims = {n: exe.work_cache[n].shape[-1] for n in codec.leaves}
-        codes = {n: [] for n in codec.leaves}
-        scales = {n: [] for n in codec.leaves}
-        for i in idxs:
-            cc = ctx.payload[i]
-            if not isinstance(cc, QuantResidentChunk):
-                cc = ctx.qmemo.get(i)
-                if cc is None:      # re-grid once per (re-)encode
-                    cc = codec.quantize_resident_blocks(
-                        self._payload_blocks(ctx.payload[i]), head_dims)
-                    ctx.qmemo[i] = cc
-            for n in codec.leaves:
-                codes[n].append(cc.data[n][0])
-                scales[n].append(cc.data[n][1])
-        pos = exe.chunk_positions(idxs)
-        pos_b = exe.bucket_pad(pos, exe.pad_slot)
-        pad = len(pos_b) - len(pos)
+    # ------------------------------------------------------------------ #
+    # paged switch-in: a page-table read plus first-admission faults
+    # ------------------------------------------------------------------ #
+    def _switch_in_paged(self, ctx: Context) -> Tuple[None, float]:
+        """Pool-mode switch-in.  Chunks whose pages survive from a
+        previous residency cost NOTHING (their table entries are read at
+        decode time); in-memory chunks without pages are admitted once
+        (the page fault — ``codec``-layout payload -> page arena);
+        missing chunks are restored from disk first (the timed QoS
+        path).  Returns (None, t): there is no per-slot cache — the
+        decode entry gathers straight from the pool."""
+        exe, pool = self.exe, self.pool
+        pool.table(ctx.cid)
+        pool.touch(ctx.cid)
+        if ctx.n_tokens == 0:
+            return None, 0.0
+        quant_mode = exe.quant_resident and not self.force_dequant
 
-        def assemble(parts):
-            # payloads are host numpy: concatenate + pad on the host and
-            # ship ONE array per leaf (jnp.concatenate would compile a
-            # kernel per (chunk-count, pad) combination)
-            out = np.concatenate([np.asarray(p) for p in parts])
-            if pad:
-                out = np.concatenate(
-                    [out, np.zeros((pad,) + out.shape[1:], out.dtype)])
-            return jnp.asarray(out)
+        # ---- untimed: resident chunks (table read / first admission) -- #
+        admitted = 0
+        for i, m in sorted(ctx.chunks.items()):
+            if m.in_memory:
+                if pool.kind(ctx.cid, i) == 0:
+                    self._admit_chunk(ctx, i, quant_mode)
+                    admitted += 1
+                else:
+                    pool.pt_switch_ins += 1
+                self.queue.touch((ctx.cid, i), m.bits)
+                m.last_access = time.time()
+        pool.admit_switch_ins += admitted
 
-        cblk = {n: assemble(codes[n]) for n in codec.leaves}
-        sblk = {n: assemble(scales[n]) for n in codec.leaves}
-        return exe.scatter_quant_fn(cache, jnp.asarray(pos_b), cblk, sblk)
+        # ---- timed: reclaim + disk restore of missing chunks ---------- #
+        t0 = time.perf_counter()
+        missing = sorted(i for i, m in ctx.chunks.items() if not m.in_memory)
+        if missing:
+            need = sum(ctx.chunks[i].nbytes for i in missing)
+            self.mem.reclaim(need, self.evict, locked={ctx.cid})
+            # pure-I/O restore: eviction guarantees on_disk before a
+            # chunk leaves memory, so the payload bytes always exist;
+            # the pipelined recompute path stays a slot-mode feature
+            futs = {i: self._read_chunk_async((ctx.cid, i))
+                    for i in missing}
+            for i in missing:
+                self._mark_loaded(ctx, i, payload=futs[i].result())
+                # a surviving page (evicted-while-busy chunk) already
+                # holds exactly this payload's values — skip the admit
+                if pool.kind(ctx.cid, i) == 0:
+                    self._admit_chunk(ctx, i, quant_mode)
+        if admitted or missing:
+            jax.block_until_ready(
+                pool.arenas[exe.codec.leaves[0] + "16"])
+        return None, time.perf_counter() - t0
+
+    def _admit_chunk(self, ctx: Context, i: int, quant_mode: bool):
+        """Page-fault one in-memory chunk into the pool.  Full
+        decode-grid chunks take a QUANT page (codes + scales attended in
+        place); everything else — bf16-raw, packed 4/2-bit, and partial
+        tail chunks — dequantizes into a BF16 page.  The dequant math is
+        the same fused-select arithmetic, so both kinds yield the exact
+        values the slot path would attend."""
+        exe, pool, codec = self.exe, self.pool, self.exe.codec
+        m = ctx.chunks[i]
+        cc = ctx.payload[i]
+        if quant_mode and m.bits != 16 and m.n_covered == exe.cs:
+            qc = cc
+            if not isinstance(qc, QuantResidentChunk):
+                qc = ctx.qmemo.get(i)
+                if qc is None:
+                    head_dims = {n: exe.work_cache[n].shape[-1]
+                                 for n in codec.leaves}
+                    qc = codec.quantize_resident_blocks(
+                        self._payload_blocks(cc), head_dims)
+                    ctx.qmemo[i] = qc
+            page = pool.alloc8(ctx.cid, i)
+            pool.arenas = exe.admit8_fn(
+                pool.arenas, page,
+                {n: jnp.asarray(qc.data[n][0]) for n in codec.leaves},
+                {n: jnp.asarray(qc.data[n][1]) for n in codec.leaves})
+        else:
+            blocks = self._payload_blocks(cc)
+            page = pool.alloc16(ctx.cid, i)
+            pool.arenas = exe.admit16_fn(pool.arenas, page, blocks)
+        pool.page_faults += 1
+
+    def ensure_extend_range(self, ctx: Context, c_lo: int, c_hi: int):
+        """Give chunks [c_lo, c_hi] writable bf16 pages ahead of a paged
+        prefill-append.  Fresh tail chunks get pages straight off the
+        free list (their garbage is never attended until written);
+        anything already admitted as a quant page is converted back to
+        bf16 — append must be able to write into the chunk."""
+        pool = self.pool
+        for ci in range(c_lo, c_hi + 1):
+            k = pool.kind(ctx.cid, ci)
+            if k == BF16:
+                continue
+            if k == QUANT or ci in ctx.payload:
+                blocks = self._payload_blocks(ctx.payload[ci])
+                pool.free_chunk(ctx.cid, ci)
+                page = pool.alloc16(ctx.cid, ci)
+                pool.arenas = self.exe.admit16_fn(pool.arenas, page, blocks)
+                pool.page_faults += 1
+            else:
+                self._alloc_fresh16(ctx.cid, ci)
+
+    def ensure_tail(self, ctx: Context, ci: int):
+        """Give the decode tail chunk a writable bf16 page."""
+        if self.pool.kind(ctx.cid, ci) == 0:
+            self._alloc_fresh16(ctx.cid, ci)
+
+    def _alloc_fresh16(self, cid: int, ci: int):
+        """Allocate AND zero a fresh bf16 page: recycled pages hold
+        their previous owner's data, but the slot path's never-written
+        positions are exactly zero — and some of them are attended (and
+        encoded at swap-out), so both paths must agree there."""
+        page = self.pool.alloc16(cid, ci)
+        self.pool.arenas = self.exe.zero16_fn(self.pool.arenas, page)
 
     def _plan_restore(self, ctx, missing: List[int]
                       ) -> Tuple[List[int], List[int]]:
@@ -251,7 +378,10 @@ class ResidencyEngine:
             io_pos_b = np.concatenate(
                 [exe.chunk_positions(io_idx),
                  np.full(pad_chunks * exe.cs, exe.pad_slot, np.int32)])
-            paths = [self.store._path((ctx.cid, i)) for i in io_idx]
+            for i in io_idx:        # settle in-flight AoT writes first:
+                self.swapper.wait((ctx.cid, i))     # the feed reads the
+            paths = [self.store._path((ctx.cid, i))  # paths directly
+                     for i in io_idx]
             feed = LayerFeed(paths, exe.codec.leaves, exe.n_layers,
                              exe.cs, exe.leaf_dims, pad_chunks=pad_chunks,
                              pool=self.swapper.pool)
@@ -266,9 +396,8 @@ class ResidencyEngine:
                 self._mark_loaded(ctx, i, payload=None)
         else:
             # async whole-chunk reads, insert as they land
-            futs = {i: self.swapper.pool.submit(
-                read_chunk_file, self.store._path((ctx.cid, i)))
-                for i in io_idx}
+            futs = {i: self._read_chunk_async((ctx.cid, i))
+                    for i in io_idx}
             quant_mode = exe.quant_resident and not self.force_dequant
             for i in io_idx:
                 cc = futs[i].result()
@@ -306,9 +435,23 @@ class ResidencyEngine:
             self.mem.register((ctx.cid, i), m.nbytes, m.bits)
         return cache
 
+    def _read_chunk_async(self, key):
+        """Read a chunk file on the I/O pool, ORDERED AFTER any
+        in-flight same-key AoT write: ``flush_dirty`` marks ``on_disk``
+        when it SUBMITS the write, so reading the path directly races
+        the writer's ``os.replace`` (FileNotFoundError under load)."""
+        return self.swapper.submit(key, read_chunk_file,
+                                   self.store._path(key))
+
+    def _read_chunk(self, key):
+        """Synchronous chunk-file read; blocks the caller on any
+        in-flight same-key write first (see ``_read_chunk_async``)."""
+        self.swapper.wait(key)
+        return read_chunk_file(self.store._path(key))
+
     def _mark_loaded(self, ctx, i: int, payload):
         if payload is None:
-            payload = read_chunk_file(self.store._path((ctx.cid, i)))
+            payload = self._read_chunk((ctx.cid, i))
         ctx.payload[i] = payload
         ctx.qmemo.pop(i, None)
         m = ctx.chunks[i]
@@ -372,28 +515,65 @@ class ResidencyEngine:
                     for k, (p, _) in cc.data.items()}
         return self.exe.codec.decompress(cc)
 
-    def _make_payload(self, cache, i: int, bits: int, quant: bool = False):
-        """Encode chunk i from the slot cache.  ``quant=True`` -> a
-        decode-grid QuantResidentChunk; otherwise the storage codec at
-        ``bits``.  A mixed cache is read through ``extract_mixed`` — its
-        bf16 array is stale at quant-resident positions."""
-        cs = self.exe.cs
-        lo, hi = i * cs, (i + 1) * cs
+    def _encode_blocks(self, blocks, bits: int, quant: bool):
+        """(T, F) blocks -> payload: decode-grid QuantResidentChunk when
+        ``quant``, else the storage codec at ``bits``."""
         codec = self.exe.codec
-        blocks = (codec.extract_mixed(cache, lo, hi)
-                  if self.exe.quant_resident
-                  else codec.extract(cache, lo, hi))
         if quant:
             head_dims = {n: self.exe.work_cache[n].shape[-1]
                          for n in codec.leaves}
             return codec.quantize_resident_blocks(blocks, head_dims)
         if bits == 16:
             return CompressedChunk(
-                bits=16, n_tokens=cs,
+                bits=16, n_tokens=next(iter(blocks.values())).shape[0],
                 data={k: (np.asarray(v, np.float16), np.zeros(0, np.float32))
                       for k, v in blocks.items()},
                 shapes={k: tuple(v.shape) for k, v in blocks.items()})
         return codec.compress_blocks(blocks, bits)
+
+    def _make_payload(self, cache, i: int, bits: int, quant: bool = False):
+        """Encode chunk i from the slot cache.  A mixed cache is read
+        through ``extract_mixed`` — its bf16 array is stale at
+        quant-resident positions."""
+        cs = self.exe.cs
+        lo, hi = i * cs, (i + 1) * cs
+        codec = self.exe.codec
+        blocks = (codec.extract_mixed(cache, lo, hi)
+                  if self.exe.quant_resident
+                  else codec.extract(cache, lo, hi))
+        return self._encode_blocks(blocks, bits, quant)
+
+    def _make_payload_paged(self, ctx: Context, i: int, bits: int,
+                            quant: bool = False):
+        """Encode chunk i from the pool.  A bf16 page is read back
+        through the jitted page reader; a quant page (or an unadmitted
+        chunk) re-encodes from its existing payload — the page holds
+        exactly the payload's codes, so nothing is lost."""
+        exe, pool = self.exe, self.pool
+        if pool.kind(ctx.cid, i) == BF16:
+            page = int(pool._tables[ctx.cid]["p16"][i])
+            blocks = exe.read16_fn(pool.arenas, page)
+        else:
+            cc = ctx.payload.get(i)
+            if cc is not None:
+                blocks = self._payload_blocks(cc)
+            elif ctx.chunks[i].on_disk:
+                # evicted out from under a busy context by another
+                # context's reclaim — eviction wrote it to disk first
+                # (possibly asynchronously, via an earlier AoT flush)
+                blocks = self._payload_blocks(
+                    self._read_chunk((ctx.cid, i)))
+            else:
+                # the chunk was never written at all: its only tokens
+                # are emitted-but-never-decoded (the call's final token
+                # has no decode round).  The slot path encodes the zero
+                # cache here — match it exactly.
+                blocks = {n: jnp.zeros(
+                    (exe.cs, int(np.prod(
+                        [s for a, s in enumerate(exe.leaf_shapes[n])
+                         if a != 2]))), jnp.bfloat16)
+                    for n in exe.codec.leaves}
+        return self._encode_blocks(blocks, bits, quant)
 
     # ------------------------------------------------------------------ #
     # compress + AoT swap-out (Reclaim is then free)
@@ -436,12 +616,34 @@ class ResidencyEngine:
             covered = min(ctx.n_tokens - i * cs, cs)
             if (m.dirty or want != m.bits or i not in ctx.payload
                     or covered != m.n_covered or m.quant != want_quant):
-                cc = self._make_payload(cache, i, want, quant=want_quant)
+                if self.pool is not None:
+                    cc = self._make_payload_paged(ctx, i, want,
+                                                  quant=want_quant)
+                    # drop-on-encode: the page now disagrees with the
+                    # canonical payload (re-encoding is lossy), so free
+                    # it — the next switch-in re-admits from the payload
+                    # and attends exactly what the slot path would
+                    self.pool.free_chunk(ctx.cid, i)
+                else:
+                    cc = self._make_payload(cache, i, want,
+                                            quant=want_quant)
                 ctx.payload[i] = cc
                 ctx.qmemo.pop(i, None)
                 m.bits, m.nbytes, m.n_covered = want, cc.nbytes, covered
                 m.quant = want_quant
                 m.dirty, m.in_memory, m.on_disk = True, True, False
+                # AoT re-admit (§3.4 spirit, like the qmemo re-grid
+                # below): pay the page write NOW, at switch-out, so the
+                # next switch-in is a pure page-table read — of exactly
+                # the payload-roundtrip values the slot path would
+                # scatter.  Best-effort: an exhausted pool just leaves
+                # the chunk paged-out for a later switch-in fault.
+                if (self.pool is not None and self.pool_persist
+                        and not self.force_dequant):
+                    try:
+                        self._admit_chunk(ctx, i, self.exe.quant_resident)
+                    except RuntimeError:
+                        pass
             # AoT re-grid (§3.4 spirit): a packed 4/2-bit chunk whose
             # payload was just (re-)encoded gets its decode-grid memo
             # built NOW, at switch-out, so the next switch-in stays a
@@ -456,6 +658,13 @@ class ResidencyEngine:
                      for n in self.exe.codec.leaves})
             self.mem.register((ctx.cid, i), m.nbytes, m.bits)
             m.last_access = time.time()
+
+        # pool_persist=False (and the force_dequant control): behave
+        # like the slot path — pages die with the residency, so every
+        # switch-in pays the full re-admission
+        if self.pool is not None and not (self.pool_persist
+                                          and not self.force_dequant):
+            self.pool.free_ctx(ctx.cid)
 
         if cfg.use_aot and cfg.use_disk:
             self.flush_dirty(ctx)
@@ -530,6 +739,12 @@ class ResidencyEngine:
         m.on_disk, m.in_memory = True, False
         ctx.payload.pop(idx, None)
         ctx.qmemo.pop(idx, None)
+        # free the chunk's pool pages too — unless the context is mid-
+        # generation: a busy context's pages are its authoritative state
+        # (the payload just written covers only the last swap-out), and
+        # its own swap-out will re-encode + drop them
+        if self.pool is not None and not ctx.busy:
+            self.pool.free_chunk(cid, idx)
 
     # ------------------------------------------------------------------ #
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):

@@ -34,6 +34,15 @@ plus one context switch instead of somebody else's whole generation.
 formed at dispatch time runs to completion without re-checking the
 queue.
 
+**Continuous batching (paged pool).**  When the service decodes over
+the paged KV pool (``svc.paged``), batch membership also changes
+MID-slice: a generation that finishes frees its batch row that round
+and a compatible queued job joins the next round — joining is one
+prefill plus a fresh page-table row, and the survivors' caches are
+untouched (no merge/split), so the engine never decodes below
+capacity while work is queued.  Preemption still happens only at
+slice boundaries (``_rebalance``).
+
 ``NextContextPredictor`` is a first-order transition table over the
 observed context-switch history — the same process that generates the
 synthetic traces (trace/synth.py markov pattern), so it is the right
@@ -147,6 +156,7 @@ class ServiceRouter:
         self.preemptions = 0
         self.decode_rounds = 0              # batched decode rounds run
         self.decoded_tokens = 0             # tokens emitted across rounds
+        self.joins_mid_slice = 0            # continuous-batching joins
         self._pred_next: Optional[int] = None
         self._pred_hits = 0
         self._pred_total = 0
@@ -349,13 +359,24 @@ class ServiceRouter:
             self._fail(job, e)              # fail the job AND abort dispatch
             raise
 
-    def _run_slice(self, active: List[dict]):
+    def _run_slice(self, active: List[dict], refill: bool = False):
         """One decode slice over the running batch: up to ``slice_steps``
         rounds (K=0: until every member is exhausted), each round one
         batched decode emitting one token per live generation.  Jobs
         that finish or cancel leave ``active`` in place; the survivors
-        keep decoding."""
+        keep decoding.
+
+        With the paged KV pool, membership is CONTINUOUS: a member that
+        finishes frees its row this round and a compatible queued job
+        joins the very next round — joining is a prefill plus a new
+        page-table row, with no cache merge for the survivors, so there
+        is no reason to wait for the slice boundary.  (Slot-cache mode
+        keeps boundary-only refill via ``_rebalance``; an exclusive
+        queue head still blocks refill because ``_pop_locked`` refuses
+        to pop it into a non-empty batch.)"""
         K = self.slice_steps
+        cont = (refill and K > 0
+                and bool(getattr(self.svc, "paged", False)))
         n = 0
         while active and (K <= 0 or n < K):
             live = []
@@ -368,6 +389,16 @@ class ServiceRouter:
                     self._complete(job)
                 else:
                     live.append(job)
+            if (cont and len(live) < self.decode_batch
+                    and not any(getattr(j["request"], "exclusive", False)
+                                for j in live)):
+                cids = {j["stub"].ctx_id for j in live}
+                for job in self._pop_batch(self.decode_batch - len(live),
+                                           cids):
+                    if self._start_job(job, active):
+                        if not job["state"].exhausted:
+                            live.append(job)
+                        self.joins_mid_slice += 1
             if not live:
                 return
             toks = self.svc.decode_step_batch([j["state"] for j in live])
@@ -431,7 +462,7 @@ class ServiceRouter:
                     self._start_job(job, active)
                 slices = 0
                 while active:
-                    self._run_slice(active)
+                    self._run_slice(active, refill)
                     if not active:
                         break
                     slices += 1
@@ -605,6 +636,7 @@ class ServiceRouter:
             "decode_batch": self.decode_batch,
             "decode_rounds": self.decode_rounds,
             "decoded_tokens": self.decoded_tokens,
+            "joins_mid_slice": self.joins_mid_slice,
             "tokens_per_round": (self.decoded_tokens / self.decode_rounds
                                  if self.decode_rounds else 0.0),
         }

@@ -72,6 +72,16 @@ class LLMSConfig:
     # chunks stay packed and re-grid behind the same kernel.  Requires a
     # chunked policy and a family with supports_quant_resident.
     quant_resident: bool = False
+    # paged, unified KV pool (DESIGN.md §1/§4): dense-family contexts
+    # decode as page-table views into one global chunk-granular page
+    # arena — switch-in for a pool-resident context is a table read, and
+    # batch membership changes cost a table-row swap (true continuous
+    # batching).  On by default; families/policies that can't page fall
+    # back to slot caches transparently.  pool_pages_* override the
+    # arena sizes in pages (0 = auto).
+    paged_pool: bool = True
+    pool_pages_16: int = 0
+    pool_pages_8: int = 0
     chunk_tokens: int = 16
     levels: Tuple[Tuple[int, float], ...] = comp.DEFAULT_LEVELS
     ratio_global: float = 0.5
@@ -98,6 +108,8 @@ class LLMSConfig:
                 f"quant_resident requires a chunked policy, not "
                 f"{self.policy!r} (whole-state caches have no chunk "
                 "segments to leave quantized)")
+        if not self.chunked:
+            self.paged_pool = False     # pages ARE chunks
 
 
 @dataclass
@@ -149,12 +161,10 @@ class LLMService:
         # ``res.slots.idle`` — the SlotAllocator decides WHICH parked
         # slot to reclaim, this holds WHAT it cached.
         self._reuse: "OrderedDict[int, Tuple[Any, int]]" = OrderedDict()
-        # open BatchRun over the current live batch (None between
-        # batches): while open, the member states' caches live MERGED in
-        # the run (st.cache is None) and are split back out whenever the
-        # membership changes or a member suspends/finishes.
-        self._brun: Optional[Any] = None
-        self._brun_states: Tuple[GenerationState, ...] = ()
+        # paged mode: generations are views into the unified KV pool
+        # (st.cache stays None); batch membership is carried by
+        # page-table rows, so there is no merged-cache state to manage
+        self.paged = self.exe.paged
         self._closed = False
 
     @property
@@ -196,6 +206,8 @@ class LLMService:
         # a deleted context would pin a full bf16 slot in memory
         self._drop_reuse(stub.ctx_id)
         self.res.slots.release(stub.ctx_id)
+        if self.paged:                  # return its pages + page table
+            self.res.pool.drop(stub.ctx_id)
 
     def bindLLMService(self, app: Any = None) -> "LLMService":
         return self
@@ -234,10 +246,19 @@ class LLMService:
             t1 = time.perf_counter()
             n0 = ctx.n_tokens
             ctx.tokens[n0:n0 + len(prompt)] = prompt
-            cache, logits, dens = self.exe.extend(st.cache, prompt, n0)
+            if self.paged:
+                pool = self.res.pool
+                cs = self.exe.cs
+                self.res.ensure_extend_range(
+                    ctx, n0 // cs, (n0 + len(prompt) - 1) // cs)
+                pt16, pt8, qmask = pool.rows([ctx.cid])
+                pool.arenas, logits, dens = self.exe.paged_extend(
+                    pool.arenas, prompt, n0, pt16, pt8, qmask)
+            else:
+                cache, logits, dens = self.exe.extend(st.cache, prompt, n0)
+                st.cache = cache
             self.ctxs.acc_density(ctx, dens, n0 + len(prompt))
             ctx.n_tokens += len(prompt)
-            st.cache = cache
             if request.max_new_tokens > 0:
                 st.next_tok = st.sampler(logits)
             st.t_infer += time.perf_counter() - t1
@@ -283,32 +304,17 @@ class LLMService:
                 live.append(st)
                 fed.append(tok)
         if live:
-            if len(live) == 1 or not self.exe.can_batch_decode:
-                self._flush_batch_run()
+            if self.paged:
+                self._decode_round_paged(live, fed)
+            else:
+                # slot mode decodes members serially: the pool carries
+                # the batched path, and non-paged families don't support
+                # per-row positions in one jitted step
                 for st, tok in zip(live, fed):
                     cache, logits, mass = self.exe.decode(st.cache, tok)
                     st.cache = cache
                     self.ctxs.acc_density(st.ctx, mass, st.ctx.n_tokens)
                     st.next_tok = st.sampler(logits)
-            else:
-                same = (self._brun is not None
-                        and len(live) == len(self._brun_states)
-                        and all(a is b for a, b in
-                                zip(live, self._brun_states)))
-                if not same:
-                    # membership changed: split the old run back into its
-                    # states, merge the new batch once — steady rounds on
-                    # a stable batch are then a single jitted step
-                    self._flush_batch_run()
-                    self._brun = self.exe.begin_batch(
-                        [st.cache for st in live])
-                    self._brun_states = tuple(live)
-                    for st in live:
-                        st.cache = None         # lives in the merged run
-                logits, mass = self._brun.step(fed)
-                for i, st in enumerate(live):
-                    self.ctxs.acc_density(st.ctx, mass[i], st.ctx.n_tokens)
-                    st.next_tok = st.sampler(logits[i])
         n_stepped = sum(tok is not None for tok in out)
         if n_stepped:
             share = (time.perf_counter() - t1) / n_stepped
@@ -317,16 +323,26 @@ class LLMService:
                     st.t_infer += share
         return out
 
-    def _flush_batch_run(self):
-        """Split an open BatchRun back into its member states' caches.
-        Called before anything reads or commits a member's cache
-        (suspend/finish/serial-decode/membership change)."""
-        if self._brun is None:
-            return
-        for st, cache in zip(self._brun_states, self._brun.split()):
-            st.cache = cache
-        self._brun = None
-        self._brun_states = ()
+    def _decode_round_paged(self, live: List[GenerationState],
+                            fed: List[int]):
+        """One continuous-batching round over the pool: each live
+        generation contributes its page-table row and its own position —
+        membership changes between rounds swap table rows, never caches
+        (no merge/split)."""
+        pool = self.res.pool
+        cs = self.exe.cs
+        pos = []
+        for st in live:
+            p = st.ctx.n_tokens - 1         # the just-emitted token
+            self.res.ensure_tail(st.ctx, p // cs)
+            pool.touch(st.ctx.cid)
+            pos.append(p)
+        pt16, pt8, qmask = pool.rows([st.ctx.cid for st in live])
+        pool.arenas, logits, mass = self.exe.paged_decode(
+            pool.arenas, fed, pos, pt16, pt8, qmask)
+        for i, st in enumerate(live):
+            self.ctxs.acc_density(st.ctx, mass[i], st.ctx.n_tokens)
+            st.next_tok = st.sampler(logits[i])
 
     def suspend_call(self, st: GenerationState):
         """Preempt an in-flight generation: commit the partial result
@@ -335,7 +351,6 @@ class LLMService:
         sampled-but-unemitted token stays in the state, so resume
         continues the interrupted decode."""
         assert not (st.suspended or st.done)
-        self._flush_batch_run()
         t2 = time.perf_counter()
         self.res.compress_and_swap_out(st.ctx, st.cache)
         self.mem.reclaim(0, self.res.evict, locked=set())
@@ -345,9 +360,16 @@ class LLMService:
         st.n_preempts += 1
 
     def _park(self, st: GenerationState):
-        """Slot held -> idle: keep the cache for exact-reuse resume."""
-        self._reuse[st.ctx.cid] = (st.cache, self.res.epoch)
-        self._reuse.move_to_end(st.ctx.cid)
+        """Slot held -> idle.  Slot mode keeps the cache for exact-reuse
+        resume; paged-persist mode records only the epoch — the pages
+        themselves stay in the pool, so the entry just marks the context
+        warm (decode-ready) until an eviction invalidates it."""
+        if not self.paged:
+            self._reuse[st.ctx.cid] = (st.cache, self.res.epoch)
+            self._reuse.move_to_end(st.ctx.cid)
+        elif self.res.pool_persist and not self.res.force_dequant:
+            self._reuse[st.ctx.cid] = (None, self.res.epoch)
+            self._reuse.move_to_end(st.ctx.cid)
         self.res.slots.park(st.ctx.cid)
         st.cache = None
         st.slot = None
@@ -366,7 +388,6 @@ class LLMService:
         busy/record bookkeeping runs even if the swap-out fails, so an
         errored call never bricks its context."""
         ctx = st.ctx
-        self._flush_batch_run()
         try:
             if not st.suspended:
                 t2 = time.perf_counter()
@@ -402,7 +423,12 @@ class LLMService:
         t0 = time.perf_counter()
         entry = self._reuse.pop(ctx.cid, None)
         st.slot = self.res.slots.acquire(ctx.cid, self._drop_reuse)
-        if entry is not None and entry[1] == self.res.epoch:
+        # paged mode never short-circuits: pages may have been dropped
+        # on re-encode at swap-out, and switch_in is where stale table
+        # entries are re-admitted — it is already near-free when the
+        # pages survived (a table read)
+        if (not self.paged and entry is not None
+                and entry[1] == self.res.epoch):
             st.cache = entry[0]
             st.t_switch += time.perf_counter() - t0
         else:
@@ -442,12 +468,26 @@ class LLMService:
         # the rebuilt state invalidates any parked slot cache of THIS ctx
         self._drop_reuse(ctx.cid)
         self.res.slots.release(ctx.cid)
-        cache = self.exe.fresh_cache(0)
         ctx.tokens[:len(tail)] = tail
-        cache, _, dens = self.exe.extend(cache, tail, 0)
-        self.ctxs.acc_density(ctx, dens, len(tail))
-        ctx.n_tokens = len(tail)
-        self.res.compress_and_swap_out(ctx, cache)
+        if self.paged:
+            # the rebuilt state also invalidates every page this ctx held
+            pool = self.res.pool
+            pool.drop(ctx.cid)
+            self.res.ensure_extend_range(ctx, 0,
+                                         (len(tail) - 1) // self.exe.cs)
+            pt16, pt8, qmask = pool.rows([ctx.cid])
+            pool.arenas, _, dens = self.exe.paged_extend(
+                pool.arenas, np.asarray(tail, np.int32), 0,
+                pt16, pt8, qmask)
+            self.ctxs.acc_density(ctx, dens, len(tail))
+            ctx.n_tokens = len(tail)
+            self.res.compress_and_swap_out(ctx, None)
+        else:
+            cache = self.exe.fresh_cache(0)
+            cache, _, dens = self.exe.extend(cache, tail, 0)
+            self.ctxs.acc_density(ctx, dens, len(tail))
+            ctx.n_tokens = len(tail)
+            self.res.compress_and_swap_out(ctx, cache)
 
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
         self.res.profile_pipeline(n_points)
@@ -480,7 +520,7 @@ class LLMService:
         n_quant = sum(1 for ctx in self.contexts.values()
                       for m in ctx.chunks.values()
                       if m.in_memory and m.quant)
-        return {
+        out = {
             "calls": len(sw),
             "switch_mean_s": float(np.mean(sw)) if sw else 0.0,
             "switch_p99_s": float(np.percentile(sw, 99)) if sw else 0.0,
@@ -490,7 +530,11 @@ class LLMService:
             "slots_held": len(self.res.slots.held),
             "decode_ready_contexts": self.decode_ready_contexts(),
             "quant_resident_chunks": n_quant,
+            "paged_pool": bool(self.paged),
         }
+        if self.paged:
+            out.update(self.res.pool.stats())
+        return out
 
     def close(self):
         """Idempotent; flushes pending AoT writes before shutdown so an

@@ -129,6 +129,15 @@ class AsyncSwapper:
             fut.result()                           # wait for in-flight write
         return self.store.read(key)
 
+    def wait(self, key: Key):
+        """Block the CALLER (never a pool worker) until any in-flight
+        same-key job completes.  A failed write surfaces here, like the
+        blocking ``read``."""
+        with self._lock:
+            fut = self._pending.get(key)
+        if fut is not None:
+            fut.result()
+
     def read_async(self, key: Key) -> Future:
         """Read on the pool, AFTER any in-flight same-key write.
 

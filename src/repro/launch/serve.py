@@ -136,6 +136,11 @@ def main():
                     help="working-cache decode slots B: up to B queued "
                          "generations decode as one jitted batch "
                          "(1 = the serial paper-prototype path)")
+    ap.add_argument("--paged-pool", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="decode over the unified paged KV pool "
+                         "(switch-in = a page-table read; "
+                         "--no-paged-pool restores per-slot caches)")
     ap.add_argument("--quant-resident", action="store_true",
                     help="attend over quantized chunks in place: 8-bit "
                          "chunks stay int8 in the working cache behind "
@@ -156,6 +161,7 @@ def main():
                     memory_budget=int(args.budget_mib * 2**20),
                     decode_batch=args.decode_batch,
                     quant_resident=args.quant_resident,
+                    paged_pool=args.paged_pool,
                     swap_dir=tempfile.mkdtemp(prefix="llms_serve_"))
     events = synthesize(args.contexts, args.calls, cfg.vocab,
                         pattern=args.pattern, scale=0.1, seed=args.seed)

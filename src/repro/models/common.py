@@ -569,6 +569,39 @@ def mixed_decode_attention(q: Array, k_cache: Array, v_cache: Array,
 
 
 # --------------------------------------------------------------------- #
+# Paged KV pool: dense cache view over page arenas
+# --------------------------------------------------------------------- #
+def paged_cache_view(arenas, leaves, pt16, pt8=None, quant_chunks=None,
+                     pos=None):
+    """Materialize the dense slot-cache view of a paged KV pool.
+
+    ``arenas`` holds per-leaf page arenas: ``<leaf>16`` (L, P16, cs,
+    ...) bf16 and — in quant-resident mode — ``<leaf>8`` int8 codes
+    plus ``<leaf>8s`` per-(token, kv-head) fp32 scales (L, P8, cs,
+    ...).  ``pt16``/``pt8`` are (B, C) page-table rows (one chunk per
+    entry, page 0 = scratch); ``quant_chunks`` (B, C) bool marks which
+    chunks live in the int8 arena.  The gather produces exactly the
+    (L, B, S, ...) mixed-cache layout ``decode_step``/``recompute``
+    consume, so every downstream attention op — and therefore every
+    emitted token — is bit-identical to the slot-cache path.
+    """
+    from repro.kernels.paged import gather_pages
+    cache = {"pos": pos}
+    for n in leaves:
+        cache[n] = gather_pages(arenas[n + "16"], pt16)
+    if pt8 is not None:
+        for n in leaves:
+            cache[n + "_q"] = gather_pages(arenas[n + "8"], pt8)
+            cache[n + "_scale"] = gather_pages(arenas[n + "8s"], pt8)
+        B, C = quant_chunks.shape
+        cs = arenas[leaves[0] + "16"].shape[2]
+        qm = jnp.broadcast_to(quant_chunks[:, :, None], (B, C, cs))
+        # dummy leading axis: axis 1 stays the batch axis for every leaf
+        cache["quant_mask"] = qm.reshape(B, C * cs)[None]
+    return cache
+
+
+# --------------------------------------------------------------------- #
 # FFN
 # --------------------------------------------------------------------- #
 def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:

@@ -97,6 +97,12 @@ class DenseModel(ModelBase):
     family_has_kv = True
     supports_batched_decode = True
     supports_quant_resident = True
+    # decode/prefill can run directly over the chunk-granular paged KV
+    # pool (executor arenas + residency page tables); requires the
+    # dense (L, B, S, KV, hd) k/v layout, so subclasses that change the
+    # cache structure are additionally gated on family == "dense" by
+    # the executor
+    supports_paged_pool = True
 
     # ------------------------------------------------------------------ #
     def init(self, key) -> Dict:
@@ -368,7 +374,7 @@ class DenseModel(ModelBase):
             # quant-resident chunk segments with per-(token, kv-head)
             # scales, selected per position by quant_mask.  The mask
             # carries a dummy leading axis so axis 1 is the batch axis
-            # for every leaf (BatchRun merges/splits on axis 1).
+            # for every leaf (the paged gather stacks rows on axis 1).
             cache["k_q"] = jnp.zeros(shape, jnp.int8)
             cache["v_q"] = jnp.zeros(shape, jnp.int8)
             cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
@@ -446,6 +452,66 @@ class DenseModel(ModelBase):
         if mixed:
             _carry_quant_leaves(new_cache, cache, qm)
         return new_cache, x, density
+
+    # ------------------------------------------------------------------ #
+    # Paged KV pool entries: decode/prefill directly over page arenas.
+    # Both gather the per-slot page rows into the SAME dense mixed-cache
+    # layout the slot entries consume, run the unchanged decode_step /
+    # recompute body, and scatter only the newly written tokens back
+    # into their bf16 tail pages — so slots are views into the pool and
+    # the emitted tokens are bit-identical to the slot-cache path.
+    # ------------------------------------------------------------------ #
+    def decode_paged(self, params, tokens, arenas, pt16, pt8, quant_chunks,
+                     pos, window: int = 0, n_sinks: int = 0,
+                     want_density: bool = False, unroll: int = 1):
+        """One [B, 1] decode round over the pool.  tokens (B, 1);
+        pt16/pt8 (B, C) page-table rows; quant_chunks (B, C) bool (None
+        with pt8=None outside quant-resident mode); pos (B,) per-slot
+        decode positions.  -> (arenas', logits[, mass]).  Batch
+        membership is carried entirely by the page-table rows: joining
+        or leaving the batch changes only pt16/pt8/pos, never copies
+        cache state (no merge/split)."""
+        cs = arenas["k16"].shape[2]
+        cache = C.paged_cache_view(arenas, ("k", "v"), pt16, pt8,
+                                   quant_chunks, pos)
+        out = self.decode_step(params, tokens, cache, window, n_sinks,
+                               want_density, unroll)
+        mass = None
+        if want_density:
+            out, mass = out
+        rows = jnp.arange(tokens.shape[0])
+        pages = pt16[rows, pos // cs]
+        offs = pos % cs
+        new_arenas = dict(arenas)
+        for n in ("k", "v"):
+            val = out.cache[n][:, rows, pos]            # (L, B, KV, hd)
+            new_arenas[n + "16"] = arenas[n + "16"].at[
+                :, pages, offs].set(val)
+        if want_density:
+            return new_arenas, out.logits, mass
+        return new_arenas, out.logits
+
+    def extend_paged(self, params, miss_tokens, miss_pos, arenas, pt16,
+                     pt8, quant_chunks, seq_len, window: int = 0,
+                     n_sinks: int = 0, want_density: bool = False):
+        """Chunked prefill-append over the pool (B = 1): the paged form
+        of ``recompute``'s append mode.  miss_pos positions must map to
+        bf16 pages already allocated in pt16 (padding positions map to
+        the scratch page 0).  -> (arenas', hidden (1, M, d), density)."""
+        cs = arenas["k16"].shape[2]
+        cache = C.paged_cache_view(arenas, ("k", "v"), pt16, pt8,
+                                   quant_chunks, jnp.int32(0))
+        new_cache, x, density = self.recompute(
+            params, miss_tokens, miss_pos, cache, seq_len, window,
+            n_sinks, want_density)
+        pages = pt16[0, miss_pos // cs]
+        offs = miss_pos % cs
+        new_arenas = dict(arenas)
+        for n in ("k", "v"):
+            val = new_cache[n][:, 0, miss_pos]          # (L, M, KV, hd)
+            new_arenas[n + "16"] = arenas[n + "16"].at[
+                :, pages, offs].set(val)
+        return new_arenas, x, density
 
     # ------------------------------------------------------------------ #
     # Paper Fig. 8: swapping-recompute PIPELINED restore.  The scan body

@@ -77,29 +77,40 @@ def test_batched_output_matches_serial_reference():
     assert st["tokens_per_round"] > 1.0     # generations actually shared steps
 
 
-def test_decode_many_matches_serial_decode():
-    """The executor's one-shot batched entry (BatchRun merge/step/split)
-    produces the same logits-argmax and advanced caches as stepping each
-    slot serially."""
+def test_paged_decode_matches_serial_decode():
+    """The executor's paged [B, 1] entry — per-row page-table gather,
+    one jitted step, tail-page scatter-back — produces the same
+    logits-argmax and density mass as stepping each context's slot
+    cache serially through the singleton ``decode`` entry."""
     svc, cfg = make_svc(decode_batch=4)
     with svc:
-        exe = svc.exe
-        caches, toks = [], []
+        exe, pool = svc.exe, svc.res.pool
+        assert svc.paged
         rng = np.random.RandomState(43)
+        slot_caches, toks, pos, ctxs = [], [], [], []
         for i in range(3):                  # deliberately a non-bucket n
-            cache = exe.fresh_cache(0)
             prompt = rng.randint(1, cfg.vocab, 6 + i).astype(np.int32)
+            cache = exe.fresh_cache(0)      # slot-path reference
             cache, logits, _ = exe.extend(cache, prompt, 0)
-            caches.append(cache)
+            slot_caches.append(cache)
+            ctx = svc.ctxs.create()         # paged twin of the same ctx
+            svc.res.ensure_extend_range(ctx, 0, (len(prompt) - 1) // exe.cs)
+            pt16, pt8, qmask = pool.rows([ctx.cid])
+            pool.arenas, plogits, _ = exe.paged_extend(
+                pool.arenas, prompt, 0, pt16, pt8, qmask)
+            assert int(np.argmax(logits)) == int(np.argmax(plogits))
+            ctxs.append(ctx)
             toks.append(int(np.argmax(logits)))
-        serial = [exe.decode(c, t) for c, t in zip(caches, toks)]
-        batched = exe.decode_many(caches, toks)
-        for (cs, ls, ms), (cb, lb, mb) in zip(serial, batched):
-            assert int(np.argmax(ls)) == int(np.argmax(lb))
-            assert int(cs["pos"]) == int(cb["pos"])
-            np.testing.assert_allclose(
-                np.asarray(cs["k"], np.float32),
-                np.asarray(cb["k"], np.float32), atol=2e-2)
+            pos.append(len(prompt))
+        serial = [exe.decode(c, t) for c, t in zip(slot_caches, toks)]
+        pt16, pt8, qmask = pool.rows([c.cid for c in ctxs])
+        pool.arenas, blogits, bmass = exe.paged_decode(
+            pool.arenas, toks, pos, pt16, pt8, qmask)
+        for i, (_, ls, ms) in enumerate(serial):
+            assert int(np.argmax(ls)) == int(np.argmax(blogits[i]))
+            np.testing.assert_allclose(np.asarray(ms, np.float32),
+                                       np.asarray(bmass[i], np.float32),
+                                       atol=2e-2)
 
 
 # --------------------------------------------------------------------- #

@@ -82,8 +82,10 @@ def test_active_feed_cleared_after_pipelined_restore():
     LayerFeed published forever (pinning its chunk buffers and exposing
     a stale feed to later retraces)."""
     cfg, model, params = tiny_model("smollm-360m")
+    # paged_pool=False: the pipelined recompute restore is a slot-path
+    # mechanism — paged switch-ins admit from payload/disk instead.
     sc = LLMSConfig(policy="llms", max_ctx_len=128, memory_budget=15_000,
-                    swap_dir=tempfile.mkdtemp())
+                    swap_dir=tempfile.mkdtemp(), paged_pool=False)
     rng = np.random.RandomState(0)
     pipelined = {"n": 0}
     with LLMService(model, params, sc) as svc:

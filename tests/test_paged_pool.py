@@ -1,0 +1,227 @@
+"""Paged, unified KV pool: token identity with the slot-cache path
+(serial and batch-4, quant-resident on and off), page reclamation under
+pool pressure, continuous join/leave that must not perturb running
+contexts, and the pool telemetry satellite."""
+import tempfile
+
+import numpy as np
+
+from conftest import tiny_model
+from repro.core.scheduler import ServiceRouter
+from repro.core.service import LLMSConfig, LLMService
+
+
+def make_svc(policy="llms", budget=10_000_000, max_ctx=128, cs=16,
+             decode_batch=1, quant_resident=False, paged=True,
+             pool_pages_16=0):
+    cfg, model, params = tiny_model("smollm-360m")
+    sc = LLMSConfig(policy=policy, max_ctx_len=max_ctx, chunk_tokens=cs,
+                    memory_budget=budget, decode_batch=decode_batch,
+                    quant_resident=quant_resident, paged_pool=paged,
+                    pool_pages_16=pool_pages_16,
+                    swap_dir=tempfile.mkdtemp())
+    return LLMService(model, params, sc), cfg
+
+
+def prompts_for(cfg, n, length=12, seed=0):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(1, cfg.vocab, length).tolist() for _ in range(n)]
+
+
+def drive(svc, prompts, rounds=2, max_new=6):
+    """Interleaved calls per context: every later round switches each
+    context back in (paged: a page-table read; slot: a scatter)."""
+    stubs = [svc.newLLMCtx() for _ in prompts]
+    outs = []
+    for r in range(rounds):
+        for stub, p in zip(stubs, prompts):
+            outs.append(svc.callLLM(stub, p[r:] or p, max_new)[1])
+    return stubs, outs
+
+
+# --------------------------------------------------------------------- #
+# token identity vs the slot-cache path
+# --------------------------------------------------------------------- #
+def test_paged_serial_tokens_match_slot_path():
+    """Serial greedy decode over the paged pool emits exactly the
+    slot-cache path's tokens, across interleaved multi-context calls
+    (so round 2+ exercises switch-in via page table vs scatter)."""
+    svc_p, cfg = make_svc(paged=True)
+    svc_s, _ = make_svc(paged=False)
+    ps = prompts_for(cfg, 3, seed=11)
+    with svc_p, svc_s:
+        assert svc_p.paged and not svc_s.paged
+        _, out_p = drive(svc_p, ps)
+        _, out_s = drive(svc_s, ps)
+    assert out_p == out_s
+
+
+def test_paged_quant_resident_tokens_match_slot_path():
+    """With quant-resident chunks (static8: every full chunk is an
+    8-bit decode-grid payload) the paged in-place attend over QUANT
+    pages matches the slot path's scattered quant cache."""
+    svc_p, cfg = make_svc(policy="vllm_sq", quant_resident=True)
+    svc_s, _ = make_svc(policy="vllm_sq", quant_resident=True, paged=False)
+    ps = prompts_for(cfg, 3, seed=5)
+    with svc_p, svc_s:
+        _, out_p = drive(svc_p, ps)
+        _, out_s = drive(svc_s, ps)
+        st = svc_p.stats()
+    assert out_p == out_s
+    assert st["pool_pages8_used"] > 0       # quant pages really in play
+
+
+def _batch4_vs_serial(policy, quant):
+    svc_ref, cfg = make_svc(policy=policy, quant_resident=quant,
+                            paged=False)
+    svc_b, _ = make_svc(policy=policy, quant_resident=quant,
+                        decode_batch=4)
+    ps = prompts_for(cfg, 4, seed=7)
+    with svc_ref, svc_b:
+        ref = [svc_ref.callLLM(svc_ref.newLLMCtx(), p, 6)[1] for p in ps]
+        with ServiceRouter(svc_b, predict=False, slice_steps=2) as router:
+            app = router.register_app("a", "fg")
+            streams = [app.stream(app.new_ctx(), p, max_new_tokens=6)
+                       for p in ps]
+            router.drain()
+            out = [s.result() for s in streams]
+    assert out == ref
+    assert router.stats()["tokens_per_round"] > 1.0
+
+
+def test_paged_batch4_matches_slot_serial():
+    """Four generations sharing paged decode rounds emit the same
+    tokens as four independent slot-cache generations."""
+    _batch4_vs_serial("llms", quant=False)
+
+
+def test_paged_batch4_quant_matches_slot_serial():
+    _batch4_vs_serial("vllm_sq", quant=True)
+
+
+# --------------------------------------------------------------------- #
+# page reclamation under pool pressure
+# --------------------------------------------------------------------- #
+def test_page_reclamation_under_pool_pressure():
+    """A pool far smaller than the working set forces LRU whole-context
+    reclaims; re-admission from payloads keeps tokens identical to the
+    slot path."""
+    svc_p, cfg = make_svc(pool_pages_16=17)     # ~2 contexts' worth
+    svc_s, _ = make_svc(paged=False)
+    ps = prompts_for(cfg, 6, seed=13)
+    with svc_p, svc_s:
+        _, out_p = drive(svc_p, ps, rounds=3)
+        _, out_s = drive(svc_s, ps, rounds=3)
+        st = svc_p.stats()
+    assert out_p == out_s
+    assert st["pool_reclaims"] > 0
+    assert st["pool_pages16_used"] <= st["pool_pages16_total"]
+
+
+def test_paged_identity_under_memory_budget_pressure():
+    """Byte-budget evictions (chunks spilled to disk mid-sequence) free
+    their pages; restores re-admit and tokens still match the slot
+    path."""
+    svc_p, cfg = make_svc(budget=60_000)
+    svc_s, _ = make_svc(budget=60_000, paged=False)
+    ps = prompts_for(cfg, 4, seed=17)
+    with svc_p, svc_s:
+        _, out_p = drive(svc_p, ps, rounds=3)
+        _, out_s = drive(svc_s, ps, rounds=3)
+        st = svc_p.stats()
+    assert out_p == out_s
+    assert st["pool_page_faults"] > 0
+
+
+def test_paged_restore_ordered_after_inflight_aot_write(monkeypatch):
+    """``flush_dirty`` marks a chunk ``on_disk`` when it SUBMITS the
+    async write; a later restore must chain off that in-flight write
+    rather than race its ``os.replace``.  Reproduces the failure shape
+    seen under serve load: a chunk whose FIRST AoT write is still in
+    flight is evicted (clean — nothing more to write) and immediately
+    switched back in.  The unordered read raised FileNotFoundError
+    here; the ordered read must wait and return the flushed payload."""
+    import threading
+
+    import repro.core.residency as res_mod
+    orig = res_mod.write_chunk_file
+    gate = threading.Event()
+
+    def gated_write(path, cc, n_layers):
+        gate.wait(5.0)
+        return orig(path, cc, n_layers)
+
+    svc, cfg = make_svc()
+    svc_ref, _ = make_svc()
+    p = prompts_for(cfg, 1, length=24, seed=31)[0]
+    try:
+        with svc, svc_ref:
+            stub = svc.newLLMCtx()
+            svc.callLLM(stub, p, 4)
+            ctx = svc.contexts[stub.ctx_id]
+            # rewind chunk 0 to "first write still in flight": no file
+            # on disk, a gated async write pending, then evicted
+            svc.res.store.delete((ctx.cid, 0))
+            monkeypatch.setattr(res_mod, "write_chunk_file", gated_write)
+            ctx.chunks[0].dirty = True
+            assert svc.res.flush_dirty(ctx) == 1
+            svc.res.evict((ctx.cid, 0))
+            assert not ctx.chunks[0].in_memory
+            threading.Timer(0.2, gate.set).start()
+            out = svc.callLLM(stub, p[4:8], 4)[1]   # restores chunk 0
+
+            stub_r = svc_ref.newLLMCtx()
+            svc_ref.callLLM(stub_r, p, 4)
+            ref = svc_ref.callLLM(stub_r, p[4:8], 4)[1]
+    finally:
+        gate.set()
+    assert out == ref
+
+
+# --------------------------------------------------------------------- #
+# continuous batching: join/leave mid-round
+# --------------------------------------------------------------------- #
+def test_continuous_join_leaves_running_context_untouched():
+    """Short generations leaving and queued ones joining mid-slice must
+    not perturb a long-running member: its page-table row is the only
+    thing the join touches, so its tokens equal a solo run's."""
+    svc_solo, cfg = make_svc(paged=False)
+    svc_b, _ = make_svc(decode_batch=2)
+    rng = np.random.RandomState(21)
+    long_p = rng.randint(1, cfg.vocab, 12).tolist()
+    short_ps = [rng.randint(1, cfg.vocab, 8).tolist() for _ in range(3)]
+    with svc_solo, svc_b:
+        ref = svc_solo.callLLM(svc_solo.newLLMCtx(), long_p,
+                               max_new_tokens=12)[1]
+        with ServiceRouter(svc_b, predict=False, slice_steps=4) as router:
+            app = router.register_app("a", "fg")
+            s_long = app.stream(app.new_ctx(), long_p, max_new_tokens=12)
+            shorts = [app.stream(app.new_ctx(), p, max_new_tokens=2)
+                      for p in short_ps]
+            router.drain()
+            out_long = s_long.result()
+            for s in shorts:
+                assert len(s.result()) == 2
+    assert out_long == ref
+    assert router.joins_mid_slice > 0       # members really joined mid-slice
+
+
+# --------------------------------------------------------------------- #
+# telemetry
+# --------------------------------------------------------------------- #
+def test_pool_telemetry_in_stats():
+    svc, cfg = make_svc(policy="vllm_sq", quant_resident=True)
+    ps = prompts_for(cfg, 3, seed=2)
+    with svc:
+        drive(svc, ps, rounds=2)
+        st = svc.stats()
+    assert st["paged_pool"] is True
+    for k in ("pool_pages16_total", "pool_pages16_used",
+              "pool_pages8_total", "pool_pages8_used", "pool_page_faults",
+              "pool_pt_switch_ins", "pool_admit_switch_ins",
+              "pool_reclaims"):
+        assert k in st, k
+    assert st["pool_page_faults"] > 0
+    # persist mode: round-2 switch-ins are pure page-table reads
+    assert st["pool_pt_switch_ins"] > 0
+    assert 0 < st["pool_pages16_used"] <= st["pool_pages16_total"]
