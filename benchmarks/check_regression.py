@@ -18,6 +18,12 @@ tokens/s.  Three bench kinds are gated (``--kind``):
     over paged switch-in) must not fall below the floor, the
     join/leave ``change_round_cost_ratio`` must not rise above the
     ceiling, and both token-identity probes must hold.
+  * ``scenario`` (BENCH_scenarios.json): the loadgen smoke scenario's
+    VIRTUAL-time QoS (deterministic in the seed, so portable like the
+    ratios): the same-seed determinism probe must hold, no stream may
+    be stuck, the budget invariant must hold, foreground TTFT p95 and
+    bytes-moved-per-token must not rise above the ceiling, and
+    tokens-per-round must not fall below the floor.
 
 The committed JSONs carry a ``reduced`` section recorded with the CI
 trace size; the gate compares like against like.
@@ -36,6 +42,7 @@ DEFAULT_BASELINES = {
     "batched": "BENCH_batched_decode.json",
     "quant": "BENCH_quant_resident.json",
     "paged": "BENCH_paged_pool.json",
+    "scenario": "BENCH_scenarios.json",
 }
 
 
@@ -103,6 +110,27 @@ def check(kind: str, baseline: dict, fresh: dict, tol: float):
             baseline_join_ratio=base["join_leave"][
                 "change_round_cost_ratio"],
             fresh_join_ratio=new["join_leave"]["change_round_cost_ratio"])
+    elif kind == "scenario":
+        _identity(failures, "determinism_holds", new)
+        _identity(failures, "budget_ok", new)
+        if new.get("stuck_streams", 0):
+            failures.append(
+                f"stuck_streams: {new['stuck_streams']} generations "
+                f"never finished")
+        _ceiling(failures, "foreground TTFT p95 (virtual)",
+                 base["fg_ttft_p95_s"], new["fg_ttft_p95_s"], tol)
+        _ceiling(failures, "bytes moved per token",
+                 base["bytes_moved_per_token"],
+                 new["bytes_moved_per_token"], tol)
+        _floor(failures, "tokens per round",
+               base["tokens_per_round"], new["tokens_per_round"], tol)
+        report.update(
+            baseline_fg_ttft_p95=base["fg_ttft_p95_s"],
+            fresh_fg_ttft_p95=new["fg_ttft_p95_s"],
+            baseline_bytes_per_token=base["bytes_moved_per_token"],
+            fresh_bytes_per_token=new["bytes_moved_per_token"],
+            baseline_tokens_per_round=base["tokens_per_round"],
+            fresh_tokens_per_round=new["tokens_per_round"])
     else:
         raise SystemExit(f"unknown bench kind: {kind}")
 

@@ -21,8 +21,8 @@ import jax
 
 from repro.configs import get_config
 from repro.core.restore import set_disk_throttle
-from repro.core.scheduler import ServiceRouter
 from repro.core.service import LLMSConfig, LLMService
+from repro.loadgen import replay_trace
 from repro.models.registry import build_model
 from repro.trace.synth import synthesize
 
@@ -69,35 +69,14 @@ def replay(svc: LLMService, events, max_new: int = 4,
     """Replay through a single-app ServiceRouter session (inline dispatch:
     events stay in strict trace order, so records are like-for-like with
     the pre-router harness).  ``predict=True`` additionally enables the
-    router's next-context prediction -> AoT swap-out hints."""
-    with ServiceRouter(svc, predict=predict, start=False) as router:
-        sess = router.register_app("bench", "foreground")
+    router's next-context prediction -> AoT swap-out hints.
 
-        def one_pass(evts):
-            stubs: Dict[int, object] = {}
-            prev_t = None
-            for ev in evts:
-                if ev.ctx_id not in stubs:
-                    stubs[ev.ctx_id] = sess.new_ctx()
-                if idle_flush_s is not None and prev_t is not None \
-                        and ev.time - prev_t > idle_flush_s:
-                    svc.swapper.flush()    # device idle: I/O completed
-                sess.call(stubs[ev.ctx_id], ev.prompt.tolist(),
-                          max_new_tokens=max_new)
-                prev_t = ev.time
-            return stubs
-
-        if warm:
-            set_disk_throttle(None)        # warm pass: compile everything
-            stubs = one_pass(events)
-            for s in stubs.values():
-                sess.del_ctx(s)
-            svc.records.clear()
-            router.call_records.clear()
-            set_disk_throttle(DISK_BW, DISK_LAT)
-        one_pass(events)
-        st = svc.stats()
-    return st
+    Thin wrapper over ``repro.loadgen.replay_trace`` — the repo's single
+    replay implementation — pinned to this harness's throttle regime."""
+    return replay_trace(svc, events, mode="serial", max_new=max_new,
+                        idle_flush_s=idle_flush_s, warm=warm,
+                        predict=predict,
+                        measured_throttle=(DISK_BW, DISK_LAT))
 
 
 def bench_events(n_contexts: int, n_calls: int, pattern: str = "markov",

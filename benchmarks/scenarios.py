@@ -1,0 +1,113 @@
+"""Scenario benchmark runner: drive named loadgen scenarios through the
+virtual-clock harness and emit BENCH_scenarios.json.
+
+Every gated metric is VIRTUAL-time (deterministic in the scenario seed)
+or a pure counter, so the JSON is machine-portable — unlike the other
+bench kinds no A/B ratio is needed.  The ``reduced`` section runs the
+CI-sized ``smoke_ci`` scenario TWICE and records whether the two runs
+were identical (event-log sha256 + every deterministic metric): the
+regression gate checks that bit, so CI re-proves determinism on every
+push.
+
+  PYTHONPATH=src:. python benchmarks/scenarios.py --reduced \
+      --out bench_scenarios_fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from benchmarks.common import bench_model
+
+from repro.loadgen import (SCENARIOS, build_service, gate_metrics,
+                           get_scenario, run_scenario, write_bench)
+from repro.loadgen.driver import make_events
+from repro.loadgen.metrics import deterministic_view
+
+FULL_SET = ("steady_poisson", "fg_burst_over_bg", "diurnal_ramp",
+            "herd_restore", "eviction_churn", "scale_10k")
+
+_MODELS = {}
+
+
+def profile_model(profile: str):
+    """Resolve a spec's ``model_profile`` to (cfg, model, params):
+    ``bench`` is the ~8M-param harness model every other bench uses;
+    ``reduced`` is the tiny smoke config — the 10^4-context soak
+    measures the SCHEDULER at scale, not the model."""
+    if profile not in _MODELS:
+        if profile == "bench":
+            _MODELS[profile] = bench_model()
+        else:
+            import jax
+            from repro.configs import get_config, reduced
+            from repro.models.registry import build_model
+            cfg = reduced(get_config("llama2-7b"))
+            model = build_model(cfg)
+            _MODELS[profile] = (cfg, model,
+                                model.init(jax.random.PRNGKey(0)))
+    return _MODELS[profile]
+
+
+def run_one(spec, events=None):
+    cfg, model, params = profile_model(spec.model_profile)
+    svc = build_service(spec, model, params)
+    with svc:
+        return run_scenario(spec, svc, cfg.vocab, events=events)
+
+
+def reduced_section() -> dict:
+    """smoke_ci twice; gate metrics + the determinism probe."""
+    spec = get_scenario("smoke_ci")
+    events = make_events(spec, profile_model(spec.model_profile)[0].vocab)
+    a = run_one(spec, events=events)
+    b = run_one(spec, events=events)
+    out = gate_metrics(a)
+    out["determinism_holds"] = (
+        deterministic_view(a) == deterministic_view(b))
+    out["wall_s"] = a["wall_s"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", action="append", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="run only these scenarios (repeatable)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI mode: only the reduced determinism pair")
+    ap.add_argument("--out", default=None, help="write JSON here")
+    args = ap.parse_args()
+
+    doc: dict = {"kind": "scenario"}
+
+    t0 = time.time()
+    doc["reduced"] = reduced_section()
+    print(f"reduced pair: determinism_holds="
+          f"{doc['reduced']['determinism_holds']} "
+          f"({time.time() - t0:.1f}s)")
+
+    if not args.reduced:
+        names = args.scenario or list(FULL_SET)
+        doc["scenarios"] = {}
+        for name in names:
+            spec = get_scenario(name)
+            t0 = time.time()
+            rep = run_one(spec)
+            doc["scenarios"][name] = rep
+            r = rep["router"]
+            print(f"{name:18s} wall {rep['wall_s']:7.1f}s  virtual "
+                  f"{rep['virtual_duration_s']:9.1f}s  calls "
+                  f"{rep['n_calls']:6d}  preempts {r['preemptions']:4d}  "
+                  f"stuck {rep['streams']['stuck']}")
+
+    if args.out:
+        write_bench(args.out, doc)
+        print(f"wrote {args.out}")
+    else:
+        print(json.dumps(doc.get("reduced", doc), indent=1))
+
+
+if __name__ == "__main__":
+    main()

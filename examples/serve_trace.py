@@ -14,8 +14,8 @@ import jax
 
 from repro.configs import get_config, reduced
 from repro.core.restore import set_disk_throttle
-from repro.core.scheduler import ServiceRouter
 from repro.core.service import LLMSConfig, LLMService, POLICIES
+from repro.loadgen import replay_trace
 from repro.models.registry import build_model
 from repro.trace.synth import synthesize
 
@@ -29,35 +29,15 @@ def run(policy: str, events, model, params, budget: int,
             swap_dir=tempfile.mkdtemp())) as svc:
         if svc.cfg.use_pipeline:
             svc.profile_pipeline()
-        with ServiceRouter(svc, predict=True,
-                           slice_steps=slice_steps) as router:
-            fg = router.register_app("chat", "foreground")
-            bg = router.register_app("agent", "background")
-
-            def one_pass():
-                stubs, streams = {}, []
-                for ev in events:
-                    sess = fg if ev.ctx_id % 2 == 0 else bg
-                    if ev.ctx_id not in stubs:
-                        stubs[ev.ctx_id] = sess.new_ctx()
-                    streams.append(sess.stream(stubs[ev.ctx_id],
-                                               ev.prompt.tolist(),
-                                               max_new_tokens=4))
-                router.drain()
-                for s in streams:
-                    s.result()      # surface call failures, like the old path
-                return stubs
-
-            set_disk_throttle(None)           # warm pass: compile everything
-            for stub in one_pass().values():
-                fg.del_ctx(stub)
-            svc.records.clear()
-            router.call_records.clear()
-            set_disk_throttle(25e6, 2e-4)
-            one_pass()
-            st = svc.stats()
-            st["router"] = router.stats()
-    return st
+        # flood + drain through the single replay implementation
+        # (repro.loadgen): everything admitted up front, fg/bg split by
+        # context parity, warm pass first so jit stays out of the
+        # measured pass
+        return replay_trace(
+            svc, events, mode="flood", max_new=4, warm=True, predict=True,
+            slice_steps=slice_steps,
+            apps=(("chat", "foreground"), ("agent", "background")),
+            route=lambda ev: "chat" if ev.ctx_id % 2 == 0 else "agent")
 
 
 def main():
@@ -100,12 +80,20 @@ def main():
                   f"admit switch-ins={st['pool_admit_switch_ins']}  "
                   f"reclaims={st['pool_reclaims']}  mid-slice joins="
                   f"{st['router'].get('joins_mid_slice', 0)}")
+        qd = st["router"].get("queue_depth")
+        if qd:
+            print(f"  queue      depth mean {qd['mean']:5.2f}  p95 "
+                  f"{qd['p95']:4.1f}  max {qd['max']:3d}  "
+                  f"({qd['samples']} round samples)")
+        pre = st["router"]["preemptions_by_priority"]
         for prio in ("foreground", "background"):
             if prio in st["router"]:
                 r = st["router"][prio]
                 ttft = r.get("ttft_mean_s")
                 print(f"  {prio:10s} calls={r['calls']:3d}"
                       f" latency {r['latency_mean_s']*1e3:8.3f} ms"
+                      f" wait p95 {r['wait_p95_s']*1e3:8.3f} ms"
+                      f" preempted={pre.get(prio, 0)}"
                       + (f" ttft {ttft*1e3:8.3f} ms"
                          if ttft is not None else ""))
 

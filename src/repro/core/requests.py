@@ -93,10 +93,16 @@ class GenerationStream:
     dispatch; consumer: the app).  Thread-safe; tokens are observable
     as they land, so with a threaded router apps genuinely stream."""
 
-    def __init__(self, ctx_id: int, request: GenerationRequest):
+    def __init__(self, ctx_id: int, request: GenerationRequest,
+                 clock: Optional[Callable[[], float]] = None):
+        # ``clock`` replaces wall time for every QoS timestamp (t_submit,
+        # token times, t_done).  The loadgen virtual-clock driver injects
+        # a simulation clock here so TTFT/TBT are deterministic in the
+        # scenario seed; None keeps wall-clock behavior.
+        self._now = clock or time.perf_counter
         self.ctx_id = ctx_id
         self.request = request
-        self.t_submit = time.perf_counter()
+        self.t_submit = self._now()
         self.t_first_token: Optional[float] = None
         self.t_done: Optional[float] = None
         self.token_times: List[float] = []
@@ -110,7 +116,7 @@ class GenerationStream:
 
     # -- producer side (router dispatch) ------------------------------- #
     def push(self, tok: int):
-        now = time.perf_counter()
+        now = self._now()
         with self._cv:
             self._tokens.append(int(tok))
             self.token_times.append(now)
@@ -126,7 +132,7 @@ class GenerationStream:
             self._done = True
             self._cancelled = cancelled
             self._error = error
-            self.t_done = time.perf_counter()
+            self.t_done = self._now()
             self._cv.notify_all()
 
     # -- consumer side -------------------------------------------------- #

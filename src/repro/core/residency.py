@@ -125,6 +125,13 @@ class ResidencyEngine:
         self.profile = PipelineProfile()
         self.profiled = False
         self.epoch = 0                      # bumped on any eviction
+        # contexts that may hold dirty (unflushed) chunks: the §3.4
+        # prediction hook flushes ONLY these instead of scanning every
+        # context (the scan was O(total contexts) per completed call —
+        # quadratic over a trace, and the top profile line at the scale
+        # harness's 10^4 contexts).  Maintained at the single site that
+        # marks chunks dirty; stale entries are dropped lazily.
+        self._dirty_cids: set = set()
         # A/B control for the quant-resident tier: with the flag set,
         # switch-in MATERIALIZES every quant payload into the bf16 slot
         # (full-dequant baseline) instead of scattering codes behind the
@@ -632,6 +639,7 @@ class ResidencyEngine:
                 m.bits, m.nbytes, m.n_covered = want, cc.nbytes, covered
                 m.quant = want_quant
                 m.dirty, m.in_memory, m.on_disk = True, True, False
+                self._dirty_cids.add(ctx.cid)
                 # AoT re-admit (§3.4 spirit, like the qmemo re-grid
                 # below): pay the page write NOW, at switch-out, so the
                 # next switch-in is a pure page-table read — of exactly
@@ -680,6 +688,8 @@ class ResidencyEngine:
                 self._write_chunk_async(ctx.cid, i, ctx.payload[i])
                 m.dirty, m.on_disk = False, True
                 n += 1
+        if not any(m.dirty for m in ctx.chunks.values()):
+            self._dirty_cids.discard(ctx.cid)
         return n
 
     def prepare_switch(self, predicted_cid: int) -> int:
@@ -697,9 +707,16 @@ class ResidencyEngine:
         if not (self.cfg.use_disk and self.cfg.chunked):
             return 0
         flushed = 0
-        for ctx in self.ctxs.contexts.values():
-            if ctx.cid != predicted_cid:
-                flushed += self.flush_dirty(ctx)
+        # only contexts that can actually hold dirty chunks — NOT a scan
+        # over every context (that was quadratic over a long trace)
+        for cid in sorted(self._dirty_cids):
+            if cid == predicted_cid:
+                continue
+            ctx = self.ctxs.contexts.get(cid)
+            if ctx is None:                     # deleted since marked
+                self._dirty_cids.discard(cid)
+                continue
+            flushed += self.flush_dirty(ctx)
         return flushed
 
     def _write_chunk_async(self, cid: int, idx: int, cc: CompressedChunk):

@@ -44,6 +44,30 @@ def set_disk_throttle(bw_bytes_per_s=None, lat_s=0.0):
     _BW, _LAT = bw_bytes_per_s, lat_s
 
 
+# Cumulative swap-tier traffic (process-global, thread-safe): every
+# chunk/whole-state byte that crosses the disk tier passes a _throttle
+# call site, so these counters are the ground truth for the scale
+# harness's bytes-moved-per-token metric.  Snapshot with io_counters()
+# and difference around a measured region.
+_IO_LOCK = threading.Lock()
+_IO = {"read": 0, "write": 0}
+
+
+def count_io(kind: str, nbytes: int):
+    with _IO_LOCK:
+        _IO[kind] += int(nbytes)
+
+
+def io_counters() -> Dict[str, int]:
+    with _IO_LOCK:
+        return dict(_IO)
+
+
+def reset_io_counters():
+    with _IO_LOCK:
+        _IO["read"] = _IO["write"] = 0
+
+
 def _throttle(nbytes: int):
     if _BW:
         import time as _t
@@ -120,6 +144,7 @@ def write_chunk_file(path: str, cc, n_layers: int) -> int:
             f.write(s)
     os.replace(tmp, path)
     total = 8 + len(hdr) + sum(len(s) for s in segs)
+    count_io("write", total)
     _throttle(total)
     return total
 
@@ -142,6 +167,7 @@ def read_chunk_layer(f, header: dict, base: int, layer: int
     seg = _segment_size(header)
     f.seek(base + layer * seg)
     buf = f.read(seg)
+    count_io("read", seg)
     _throttle(seg)
     out, off = {}, 0
     bits, T = header["bits"], header["n_tokens"]
@@ -183,6 +209,7 @@ def read_chunk_file(path: str):
         seg = _segment_size(header)
         f.seek(base)
         buf = f.read(seg * L)
+        count_io("read", seg * L)
         _throttle(seg * L)
         dt = np.float16 if header["bits"] == 16 else np.int8
         for l in range(L):

@@ -56,9 +56,9 @@ import heapq
 import math
 import threading
 import time
-from collections import Counter, defaultdict
+from collections import Counter, defaultdict, deque
 from concurrent.futures import Future
-from typing import Any, Dict, List, Optional, Tuple, Union
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -144,19 +144,57 @@ class ServiceRouter:
     next-context prediction."""
 
     def __init__(self, svc, predict: bool = True, start: bool = False,
-                 slice_steps: int = 0):
+                 slice_steps: int = 0,
+                 clock: Optional[Callable[[], float]] = None,
+                 record_limit: Optional[int] = None):
         self.svc = svc
         self.slice_steps = int(slice_steps)
         self.decode_batch = max(1, int(getattr(svc, "decode_batch", 1)))
+        # ``clock`` replaces wall time for ALL QoS timestamps (enqueue,
+        # start, stream token times): the loadgen virtual-clock driver
+        # injects a simulation clock so scheduling metrics are
+        # deterministic in the scenario seed.  None = wall clock.
+        self._now: Callable[[], float] = clock or time.perf_counter
+        # ``record_limit`` bounds the retained per-call dict records
+        # (scale harness: 10^5+ calls would otherwise grow without
+        # bound); aggregate stats stay exact via the streaming
+        # accumulators below.  None keeps full retention.
+        self.call_records: Any = (deque(maxlen=record_limit)
+                                  if record_limit else [])
         self.predictor = NextContextPredictor() if predict else None
         self.sessions: Dict[str, AppSession] = {}
-        self.call_records: List[Dict[str, Any]] = []
         self.prefetch_hints = 0
         self.aot_flushes = 0
         self.preemptions = 0
+        self.preemptions_by_prio: Counter = Counter()
         self.decode_rounds = 0              # batched decode rounds run
         self.decoded_tokens = 0             # tokens emitted across rounds
         self.joins_mid_slice = 0            # continuous-batching joins
+        # loadgen hooks (None = zero overhead): called inline from the
+        # dispatch path, single-threaded under _svc_lock.
+        #   on_begin(job, resumed)  after begin_call/resume_call succeeds
+        #   on_round(live_jobs)     after each batched decode round,
+        #                           BEFORE tokens are pushed to streams
+        #   on_preempt(job)         after a slot is preempted
+        #   on_complete(job, cancelled)  after finish_call + records
+        self.on_begin: Optional[Callable[[dict, bool], None]] = None
+        self.on_round: Optional[Callable[[List[dict]], None]] = None
+        self.on_preempt: Optional[Callable[[dict], None]] = None
+        self.on_complete: Optional[Callable[[dict, bool], None]] = None
+        # streaming per-priority accumulators (bounded-record safe):
+        # wait = enqueue->begin admission wait, lat = wait + service.
+        self._acc: Dict[int, Dict[str, List[float]]] = defaultdict(
+            lambda: {"wait": [], "serv": [], "ttft": [], "tbt": []})
+        self._acc_preempts: Counter = Counter()     # completed-call sums
+        self._acc_cancelled: Counter = Counter()
+        # queue-depth samples, one per decode round, deterministically
+        # decimated (stride doubles once the buffer fills) so percentile
+        # estimates stay bounded at any scale.
+        self._qd_samples: List[int] = []
+        self._qd_stride = 1
+        self._qd_n = 0
+        self._qd_max = 0
+        self._qd_sum = 0
         self._pred_next: Optional[int] = None
         self._pred_hits = 0
         self._pred_total = 0
@@ -192,8 +230,9 @@ class ServiceRouter:
         if system_prompt is not None and len(system_prompt):
             req = GenerationRequest(prompt=list(system_prompt),
                                     max_new_tokens=0)
-            job = self._make_job(session, stub, req,
-                                 GenerationStream(stub.ctx_id, req), None)
+            job = self._make_job(
+                session, stub, req,
+                GenerationStream(stub.ctx_id, req, clock=self._now), None)
             self._run_job(job)
             err = job["stream"].error
             if err is not None:
@@ -214,12 +253,13 @@ class ServiceRouter:
                                     max_new_tokens=max_new_tokens)
         fut: Future = Future()
         self._admit(session, stub, request,
-                    GenerationStream(stub.ctx_id, request), fut)
+                    GenerationStream(stub.ctx_id, request, clock=self._now),
+                    fut)
         return fut
 
     def submit_request(self, session: AppSession, stub,
                        request: GenerationRequest) -> GenerationStream:
-        stream = GenerationStream(stub.ctx_id, request)
+        stream = GenerationStream(stub.ctx_id, request, clock=self._now)
         self._admit(session, stub, request, stream, None)
         return stream
 
@@ -230,7 +270,7 @@ class ServiceRouter:
         return {"session": session, "stub": stub, "request": request,
                 "stream": stream, "future": future, "state": None,
                 "prio": prio, "deadline": dl, "seq": -1,
-                "t_enqueue": time.perf_counter(), "t_start": None}
+                "t_enqueue": self._now(), "t_start": None}
 
     def _admit(self, session, stub, request, stream, future):
         job = self._make_job(session, stub, request, stream, future)
@@ -254,13 +294,22 @@ class ServiceRouter:
         could actually take the freed slot: not on an active context
         (preempting for it would leave a suspended generation the
         newcomer cannot legally overlap — begin_call refuses — and
-        finishing first hands it a warm cache anyway), and not
-        exclusive (an exclusive head waits for the engine to drain;
-        evicting one slot of many cannot seat it)."""
+        finishing first hands it a warm cache anyway), not a fresh call
+        on a context with an earlier generation preempted in the queue
+        (same overlap rule: ``_pop_locked`` would refuse to seat it, so
+        the eviction would be wasted), and not exclusive (an exclusive
+        head waits for the engine to drain; evicting one slot of many
+        cannot seat it)."""
         with self._cv:
             head = self._queue[0][3] if self._queue else None
+            blocked = (head is not None and head["state"] is None
+                       and any(k[3]["state"] is not None
+                               and k[3]["stub"].ctx_id
+                               == head["stub"].ctx_id
+                               for k in self._queue))
         if (head is None or head["prio"] >= prio
                 or head["stub"].ctx_id in active_cids
+                or blocked
                 or getattr(head["request"], "exclusive", False)):
             return None
         return head
@@ -291,9 +340,14 @@ class ServiceRouter:
         """Pop up to ``limit`` batch-compatible jobs in priority order
         (caller holds ``_cv``).  A job is skipped — left queued, order
         preserved — when its context is already decoding in this batch
-        (two generations may never overlap one context) or when
-        exclusivity forbids sharing: an ``exclusive`` request only runs
-        as the sole member of an empty batch."""
+        (two generations may never overlap one context), when it is a
+        FRESH call on a context whose earlier generation sits preempted
+        in the queue (``begin_call`` refuses to overlap the suspended
+        state — the old generation must resume and finish first), or
+        when exclusivity forbids sharing: an ``exclusive`` request only
+        runs as the sole member of an empty batch."""
+        suspended_cids = {k[3]["stub"].ctx_id for k in self._queue
+                          if k[3]["state"] is not None}
         taken: List[dict] = []
         skipped: List[Tuple] = []
         while self._queue and len(taken) < limit:
@@ -307,7 +361,8 @@ class ServiceRouter:
                 # batch shrinks toward the empty engine it needs
                 heapq.heappush(self._queue, key)
                 break
-            if cid in active_cids:
+            if cid in active_cids or (job["state"] is None
+                                      and cid in suspended_cids):
                 skipped.append(key)
                 continue
             taken.append(job)
@@ -335,7 +390,7 @@ class ServiceRouter:
             if stream.cancel_requested:          # cancelled while queued
                 stream.finish(cancelled=True)
                 return False
-            job["t_start"] = time.perf_counter()
+            job["t_start"] = self._now()
         try:
             st = job["state"]
             if st is None:
@@ -345,11 +400,15 @@ class ServiceRouter:
                     self._pred_hits += self._pred_next == cid
                 job["state"] = self.svc.begin_call(job["stub"],
                                                    job["request"])
+                if self.on_begin is not None:
+                    self.on_begin(job, False)
             elif st.suspended:
                 if stream.cancel_requested:      # cancelled while preempted
                     self._complete(job, cancelled=True)
                     return False
                 self.svc.resume_call(st)
+                if self.on_begin is not None:
+                    self.on_begin(job, True)
             active.append(job)
             return True
         except Exception as e:              # report to the submitting app
@@ -404,6 +463,11 @@ class ServiceRouter:
             toks = self.svc.decode_step_batch([j["state"] for j in live])
             self.decode_rounds += 1
             self.decoded_tokens += sum(t is not None for t in toks)
+            self._sample_queue_depth()
+            if self.on_round is not None:
+                # hook BEFORE the pushes: a virtual clock advanced here
+                # stamps this round's tokens at the post-round instant
+                self.on_round(live)
             for job, tok in zip(live, toks):
                 if tok is not None:
                     job["stream"].push(tok)
@@ -436,6 +500,9 @@ class ServiceRouter:
             active.remove(victim)
             victim["stream"].n_preempts += 1
             self.preemptions += 1
+            self.preemptions_by_prio[victim["prio"]] += 1
+            if self.on_preempt is not None:
+                self.on_preempt(victim)
             self._requeue(victim)
         free = self.decode_batch - len(active)
         if free > 0 and not any(getattr(j["request"], "exclusive", False)
@@ -509,7 +576,7 @@ class ServiceRouter:
         # record in between
         rec = self.svc.records[-1] if self.svc.records else {}
         self._after_call(cid)
-        t_end = time.perf_counter()
+        t_end = self._now()
         entry = {
             "app": sess.name, "priority": job["prio"], "ctx": cid,
             "wait_s": job["t_start"] - job["t_enqueue"],
@@ -523,8 +590,19 @@ class ServiceRouter:
             tbts = stream.tbt()
             if tbts:
                 entry["tbt_mean_s"] = float(np.mean(tbts))
+        acc = self._acc[job["prio"]]
+        acc["wait"].append(entry["wait_s"])
+        acc["serv"].append(entry["service_s"])
+        if "ttft_s" in entry:
+            acc["ttft"].append(entry["ttft_s"])
+        if "tbt_mean_s" in entry:
+            acc["tbt"].append(entry["tbt_mean_s"])
+        self._acc_preempts[job["prio"]] += stream.n_preempts
+        self._acc_cancelled[job["prio"]] += bool(cancelled)
         self.call_records.append(entry)
         stream.finish(cancelled=cancelled)
+        if self.on_complete is not None:
+            self.on_complete(job, cancelled)
         if fut is not None:
             fut.set_result((job["stub"], list(stream.tokens)))
 
@@ -550,6 +628,22 @@ class ServiceRouter:
         if pred is not None:
             self.prefetch_hints += 1
             self.aot_flushes += self.svc.prepare_switch(pred)
+
+    def _sample_queue_depth(self):
+        """One queue-depth sample per decode round.  The sample buffer is
+        decimated deterministically (keep-every-2nd, stride doubles) once
+        it fills, so percentiles stay available at 10^6-round scale."""
+        with self._cv:
+            qd = len(self._queue)
+        self._qd_n += 1
+        self._qd_sum += qd
+        if qd > self._qd_max:
+            self._qd_max = qd
+        if self._qd_n % self._qd_stride == 0:
+            self._qd_samples.append(qd)
+            if len(self._qd_samples) > 65536:
+                self._qd_samples = self._qd_samples[::2]
+                self._qd_stride *= 2
 
     def pump(self, max_slices: int = 1) -> bool:
         """Inline dispatch of at most ``max_slices`` decode slices of a
@@ -627,10 +721,16 @@ class ServiceRouter:
 
     # -- reporting ------------------------------------------------------- #
     def stats(self) -> Dict[str, Any]:
+        """Aggregate QoS stats.  Per-priority sections come from the
+        STREAMING accumulators (exact for every completed call even when
+        ``record_limit`` bounds the retained per-call dicts)."""
         out: Dict[str, Any] = {
             "prefetch_hints": self.prefetch_hints,
             "aot_flushes": self.aot_flushes,
             "preemptions": self.preemptions,
+            "preemptions_by_priority": {
+                name: int(self.preemptions_by_prio.get(prio, 0))
+                for prio, name in _PRIO_NAMES.items()},
             "pred_hits": self._pred_hits,
             "pred_total": self._pred_total,
             "decode_batch": self.decode_batch,
@@ -640,29 +740,59 @@ class ServiceRouter:
             "tokens_per_round": (self.decoded_tokens / self.decode_rounds
                                  if self.decode_rounds else 0.0),
         }
+        if self._qd_n:
+            qs = self._qd_samples or [0]
+            out["queue_depth"] = {
+                "samples": self._qd_n,
+                "mean": self._qd_sum / self._qd_n,
+                "max": self._qd_max,
+                "p50": float(np.percentile(qs, 50)),
+                "p95": float(np.percentile(qs, 95)),
+                "p99": float(np.percentile(qs, 99)),
+            }
         for prio, name in _PRIO_NAMES.items():
-            rs = [r for r in self.call_records if r["priority"] == prio]
-            if not rs:
+            acc = self._acc.get(prio)
+            if not acc or not acc["wait"]:
                 continue
-            waits = [r["wait_s"] for r in rs]
-            servs = [r["service_s"] for r in rs]
+            waits, servs = acc["wait"], acc["serv"]
             lats = [w + s for w, s in zip(waits, servs)]
             out[name] = {
-                "calls": len(rs),
+                "calls": len(waits),
                 "wait_mean_s": float(np.mean(waits)),
+                "wait_p50_s": float(np.percentile(waits, 50)),
+                "wait_p95_s": float(np.percentile(waits, 95)),
+                "wait_p99_s": float(np.percentile(waits, 99)),
                 "service_mean_s": float(np.mean(servs)),
                 "latency_mean_s": float(np.mean(lats)),
                 "latency_p99_s": float(np.percentile(lats, 99)),
-                "preempts": int(sum(r.get("n_preempts", 0) for r in rs)),
+                "preempts": int(self._acc_preempts.get(prio, 0)),
+                "cancelled": int(self._acc_cancelled.get(prio, 0)),
             }
-            ttfts = [r["ttft_s"] for r in rs if "ttft_s" in r]
+            ttfts, tbts = acc["ttft"], acc["tbt"]
             if ttfts:
                 out[name]["ttft_mean_s"] = float(np.mean(ttfts))
                 out[name]["ttft_p50_s"] = float(np.percentile(ttfts, 50))
                 out[name]["ttft_p95_s"] = float(np.percentile(ttfts, 95))
                 out[name]["ttft_p99_s"] = float(np.percentile(ttfts, 99))
-            tbts = [r["tbt_mean_s"] for r in rs if "tbt_mean_s" in r]
             if tbts:
                 out[name]["tbt_mean_s"] = float(np.mean(tbts))
+                out[name]["tbt_p50_s"] = float(np.percentile(tbts, 50))
                 out[name]["tbt_p95_s"] = float(np.percentile(tbts, 95))
+                out[name]["tbt_p99_s"] = float(np.percentile(tbts, 99))
         return out
+
+    def reset_stats(self):
+        """Clear per-call records AND the streaming accumulators (warm
+        pass -> measured pass); cumulative counters restart too."""
+        self.call_records.clear()
+        self._acc.clear()
+        self._acc_preempts.clear()
+        self._acc_cancelled.clear()
+        self.preemptions = 0
+        self.preemptions_by_prio.clear()
+        self.decode_rounds = 0
+        self.decoded_tokens = 0
+        self.joins_mid_slice = 0
+        self._qd_samples = []
+        self._qd_stride = 1
+        self._qd_n = self._qd_max = self._qd_sum = 0

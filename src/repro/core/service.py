@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import tempfile
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -83,6 +83,11 @@ class LLMSConfig:
     pool_pages_16: int = 0
     pool_pages_8: int = 0
     chunk_tokens: int = 16
+    # bound the retained per-call timing records (scale harness: 10^5+
+    # calls would grow ``records`` without bound).  None = keep all;
+    # stats percentiles then cover the retained window while ``calls``
+    # stays cumulative.
+    record_limit: Optional[int] = None
     levels: Tuple[Tuple[int, float], ...] = comp.DEFAULT_LEVELS
     ratio_global: float = 0.5
     memory_budget: int = 64 << 20
@@ -155,7 +160,10 @@ class LLMService:
         self.ctxs = ContextStore(self.mem, self.store, self.exe.s_work)
         self.res = ResidencyEngine(self.exe, self.ctxs, self.store,
                                    self.swapper, self.queue, self.mem, cfg)
-        self.records: List[Dict[str, Any]] = []
+        self.records: Any = (deque(maxlen=cfg.record_limit)
+                             if cfg.record_limit else [])
+        self.total_calls = 0                  # cumulative (records may be
+        self._t_switch_sum = 0.0              # a bounded window)
         # cid -> (cache, epoch) of parked decode slots: working-cache
         # reuse, one entry per idle slot (MRU last).  Mirrors
         # ``res.slots.idle`` — the SlotAllocator decides WHICH parked
@@ -402,6 +410,8 @@ class LLMService:
             st.cache = None
             st.done = True
             ctx.busy -= 1
+            self.total_calls += 1
+            self._t_switch_sum += st.t_switch
             self.records.append({
                 "ctx": ctx.cid, "switch_s": st.t_switch,
                 "infer_s": st.t_infer + st.t_assemble,
@@ -516,16 +526,22 @@ class LLMService:
         return len(ready)
 
     def stats(self) -> Dict[str, float]:
+        from repro.core.restore import io_counters
         sw = [r["switch_s"] for r in self.records]
         n_quant = sum(1 for ctx in self.contexts.values()
                       for m in ctx.chunks.values()
                       if m.in_memory and m.quant)
+        io = io_counters()
         out = {
             "calls": len(sw),
+            "total_calls": self.total_calls,
             "switch_mean_s": float(np.mean(sw)) if sw else 0.0,
             "switch_p99_s": float(np.percentile(sw, 99)) if sw else 0.0,
+            "switch_total_s": self._t_switch_sum,
             "mem_used": self.mem.used,
             "disk_bytes": self.store.total_bytes,
+            "disk_bytes_read": io["read"],        # process-cumulative
+            "disk_bytes_written": io["write"],    # (see restore.count_io)
             "decode_slots": self.decode_batch,
             "slots_held": len(self.res.slots.held),
             "decode_ready_contexts": self.decode_ready_contexts(),

@@ -31,21 +31,23 @@ class DiskStore:
         return os.path.join(self.root, f"ctx{ctx}_chunk{idx}.pkl")
 
     def write(self, key: Key, obj: Any) -> int:
-        from repro.core.restore import _throttle
+        from repro.core.restore import _throttle, count_io
         blob = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
         tmp = self._path(key) + ".tmp"
         with open(tmp, "wb") as f:
             f.write(blob)
         os.replace(tmp, self._path(key))          # atomic
+        count_io("write", len(blob))
         _throttle(len(blob))
         with self._lock:
             self._bytes[key] = len(blob)
         return len(blob)
 
     def read(self, key: Key) -> Any:
-        from repro.core.restore import _throttle
+        from repro.core.restore import _throttle, count_io
         with open(self._path(key), "rb") as f:
             blob = f.read()
+        count_io("read", len(blob))
         _throttle(len(blob))
         return pickle.loads(blob)
 

@@ -1,0 +1,17 @@
+"""Scale harness: declarative load scenarios + virtual-clock driver +
+metrics/report layer (DESIGN.md "Scale harness").
+
+  spec       ScenarioSpec dataclass + YAML-ish dict loader
+  scenarios  named scenario library (steady_poisson ... scale_10k)
+  driver     VirtualClock, run_scenario, and the repo's single
+             wall-clock trace replay (replay_trace)
+  metrics    deterministic EventLog (sha256 probe) + report/gate JSON
+"""
+from repro.loadgen.driver import (VirtualClock, build_service,  # noqa: F401
+                                  make_events, replay_trace, run_scenario)
+from repro.loadgen.metrics import (EventLog, build_report,  # noqa: F401
+                                   gate_metrics, write_bench)
+from repro.loadgen.scenarios import (SCENARIOS, get_scenario,  # noqa: F401
+                                     scenario_from_dict)
+from repro.loadgen.spec import (ScenarioSpec, load_scenario,  # noqa: F401
+                                validate_spec)

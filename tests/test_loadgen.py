@@ -1,0 +1,174 @@
+"""Scale-harness tests: scenario specs, the virtual-clock driver's
+determinism contract, a mid-size end-to-end soak, and the replay shim.
+
+The determinism test is the load-bearing one: two same-seed runs of a
+mixed burst scenario must produce byte-identical event logs (sha256 over
+every emitted line) AND identical aggregate metrics — everything in
+``deterministic_view`` is a pure function of the scenario seed.
+"""
+import pytest
+from conftest import tiny_model
+
+from repro.loadgen import (SCENARIOS, ScenarioSpec, build_service,
+                           get_scenario, load_scenario, make_events,
+                           replay_trace, run_scenario, scenario_from_dict,
+                           validate_spec)
+from repro.loadgen.metrics import EventLog, deterministic_view, gate_metrics
+from repro.trace.synth import synthesize_mixed
+
+
+# ------------------------------------------------------------------ #
+# spec / scenario library
+# ------------------------------------------------------------------ #
+def test_scenario_library_complete_and_valid():
+    # >= 6 named scenarios, all validated at import; the scale soak
+    # really is 10^4 contexts
+    assert len(SCENARIOS) >= 6
+    for spec in SCENARIOS.values():
+        validate_spec(spec)
+    assert SCENARIOS["scale_10k"].n_contexts >= 10_000
+
+
+def test_get_scenario_override_and_unknown():
+    s = get_scenario("smoke_ci", n_calls=8, seed=99)
+    assert (s.n_calls, s.seed) == (8, 99)
+    assert SCENARIOS["smoke_ci"].n_calls != 8      # library untouched
+    with pytest.raises(KeyError):
+        get_scenario("nope")
+
+
+def test_load_scenario_rejects_unknown_keys():
+    with pytest.raises((KeyError, ValueError, TypeError)):
+        load_scenario({"name": "x", "n_contexts": 4, "n_calls": 8,
+                       "no_such_field": 1})
+
+
+def test_scenario_from_dict_base_overlay():
+    s = scenario_from_dict({"base": "smoke_ci", "name": "variant",
+                            "n_calls": 12})
+    assert s.name == "variant" and s.n_calls == 12
+    assert s.arrival == SCENARIOS["smoke_ci"].arrival   # inherited
+
+
+def test_validate_spec_rejects_bad_fields():
+    base = SCENARIOS["smoke_ci"]
+    with pytest.raises(ValueError):
+        validate_spec(base.override(arrival={"kind": "martian"}))
+    with pytest.raises(ValueError):
+        validate_spec(base.override(ctx_pattern="zigzag"))
+    with pytest.raises(ValueError):
+        validate_spec(base.override(round_s=-1.0))
+
+
+def test_synthesize_mixed_deterministic():
+    kw = dict(arrival={"kind": "bursty", "rate_per_s": 2.0,
+                       "burst_every_s": 10.0, "burst_size": 6,
+                       "burst_rate_per_s": 30.0, "burst_frac": 0.3},
+              ctx_pattern="random",
+              prompt_len={"dist": "uniform", "lo": 3, "hi": 8},
+              output_len={"dist": "fixed", "n": 3},
+              apps=[{"name": "chat", "priority": "foreground"},
+                    {"name": "agent", "priority": "background"}],
+              seed=5)
+    a = synthesize_mixed(8, 40, 512, **kw)
+    b = synthesize_mixed(8, 40, 512, **kw)
+    assert len(a) == 40
+    assert [e.time for e in a] == [e.time for e in b]
+    assert [e.ctx_id for e in a] == [e.ctx_id for e in b]
+    assert all((x.prompt == y.prompt).all() for x, y in zip(a, b))
+    assert {e.app for e in a} == {"chat", "agent"}
+
+
+# ------------------------------------------------------------------ #
+# virtual-clock driver: determinism + e2e invariants
+# ------------------------------------------------------------------ #
+def _run(spec, events=None, log_keep=None):
+    cfg, model, params = tiny_model("llama2-7b")
+    svc = build_service(spec, model, params)
+    with svc:
+        return run_scenario(spec, svc, cfg.vocab, events=events,
+                            log_keep=log_keep)
+
+
+def test_same_seed_runs_identical():
+    spec = get_scenario("smoke_ci", n_calls=48)
+    events = make_events(spec, tiny_model("llama2-7b")[0].vocab)
+    a = _run(spec, events=events)
+    b = _run(spec, events=events)
+    # byte-identical event log...
+    assert a["event_log_sha256"] == b["event_log_sha256"]
+    assert a["events_logged"] == b["events_logged"]
+    # ...and identical aggregate metrics (everything but wall time and
+    # the wall-clock service section)
+    assert deterministic_view(a) == deterministic_view(b)
+
+
+def test_event_log_retention_bounded():
+    log = EventLog(keep=4)
+    for i in range(10):
+        log.emit("round", float(i), i)
+    assert len(log.lines) == 4
+    assert log.n == 10
+
+
+def test_e2e_mixed_scenario_invariants():
+    # ~64 contexts of mixed fg/bg burst load end-to-end: every stream
+    # finishes, the budget and pool invariants hold, both priority
+    # sections are populated
+    spec = get_scenario("smoke_ci", n_contexts=64, n_calls=128,
+                        memory_budget=28_000)
+    rep = _run(spec)
+    assert rep["streams"]["total"] == 128
+    assert rep["streams"]["stuck"] == 0
+    assert rep["streams"]["errors"] == 0
+    assert rep["budget"]["ok"]
+    pool = rep["pool"]
+    assert pool["pool_pages16_used"] <= pool["pool_pages16_total"]
+    r = rep["router"]
+    assert r["decoded_tokens"] > 0
+    for prio in ("foreground", "background"):
+        assert r[prio]["calls"] > 0
+        assert r[prio]["wait_p95_s"] >= r[prio]["wait_p50_s"] >= 0.0
+    assert "queue_depth" in r and r["queue_depth"]["samples"] > 0
+    # virtual time moved, and gate metrics extract cleanly
+    assert rep["virtual_duration_s"] > 0
+    gm = gate_metrics(rep)
+    assert gm["budget_ok"] and gm["stuck_streams"] == 0
+
+
+def test_preemption_fires_in_burst_scenario():
+    rep = _run(get_scenario("smoke_ci"))
+    r = rep["router"]
+    assert r["preemptions"] > 0
+    assert r["preemptions_by_priority"]["background"] > 0
+    assert r["preemptions_by_priority"]["foreground"] == 0
+
+
+# ------------------------------------------------------------------ #
+# replay shim (the single wall-clock replay implementation)
+# ------------------------------------------------------------------ #
+def test_replay_trace_serial_matches_contract():
+    from benchmarks.common import bench_events, make_service
+    events = bench_events(4, 12, seed=2)
+    svc = make_service("llms", 30_000)
+    with svc:
+        st = replay_trace(svc, events, mode="serial", max_new=2,
+                          warm=False, measured_throttle=None)
+    # measured stats only (no warm pass here), router section attached
+    assert st["router"]["foreground"]["calls"] == 12
+    assert st["switch_mean_s"] >= 0.0
+
+
+def test_replay_trace_flood_routes_and_drains():
+    from benchmarks.common import bench_events, make_service
+    events = bench_events(4, 12, seed=2)
+    svc = make_service("llms", 30_000, decode_batch=2)
+    with svc:
+        st = replay_trace(
+            svc, events, mode="flood", max_new=2, warm=False,
+            slice_steps=2, measured_throttle=None,
+            apps=(("chat", "foreground"), ("agent", "background")),
+            route=lambda ev: "chat" if ev.ctx_id % 2 == 0 else "agent")
+    r = st["router"]
+    assert r["foreground"]["calls"] + r["background"]["calls"] == 12
+    assert r["background"]["calls"] > 0
