@@ -23,7 +23,13 @@ tokens/s.  Three bench kinds are gated (``--kind``):
     ratios): the same-seed determinism probe must hold, no stream may
     be stuck, the budget invariant must hold, foreground TTFT p95 and
     bytes-moved-per-token must not rise above the ceiling, and
-    tokens-per-round must not fall below the floor.
+    tokens-per-round must not fall below the floor.  The ``faults``
+    subsection (DESIGN.md §6) gates the fault-injection leg on the
+    FRESH run alone (pure identity checks, no baseline ratio):
+    flaky_disk must be same-seed deterministic with faults actually
+    injected and recovered, zero failed foreground calls, and decoded
+    tokens byte-identical to the fault-free run; disk_full_churn must
+    enter AND exit degraded mode with zero failed foreground calls.
 
 The committed JSONs carry a ``reduced`` section recorded with the CI
 trace size; the gate compares like against like.
@@ -71,6 +77,42 @@ def _ceiling(failures, name, base, new, tol):
 def _identity(failures, name, new):
     if not new.get(name, False):
         failures.append(f"{name} no longer holds")
+
+
+def _check_faults(failures: list, report: dict, faults: dict | None):
+    """Fault-leg assertions (fresh run only — identity checks, not
+    ratios).  A fresh JSON without the section fails: the leg must run."""
+    if not faults:
+        failures.append("fault section missing from fresh scenario bench")
+        return
+    fl, df = faults.get("flaky", {}), faults.get("disk_full", {})
+    _identity(failures, "determinism_holds", fl)
+    _identity(failures, "recovery_token_identical", fl)
+    if not fl.get("faults_injected_total", 0):
+        failures.append("flaky_disk injected zero faults (dead failpoints)")
+    if not fl.get("chunks_recovered_recompute", 0):
+        failures.append("flaky_disk recovered zero chunks (recovery "
+                        "path never exercised)")
+    if fl.get("errors_fg", 0):
+        failures.append(f"flaky_disk failed {fl['errors_fg']} "
+                        "foreground call(s)")
+    if fl.get("recover_failed", 0):
+        failures.append(f"flaky_disk recover_failed={fl['recover_failed']}")
+    if not df.get("degraded_entries", 0):
+        failures.append("disk_full_churn never entered degraded mode")
+    if not df.get("degraded_exits", 0):
+        failures.append("disk_full_churn never exited degraded mode")
+    if df.get("degraded_mode", False):
+        failures.append("disk_full_churn finished still degraded")
+    if df.get("errors_fg", 0):
+        failures.append(f"disk_full_churn failed {df['errors_fg']} "
+                        "foreground call(s)")
+    report.update(
+        flaky_injected=fl.get("faults_injected_total", 0),
+        flaky_recovered=fl.get("chunks_recovered_recompute", 0),
+        flaky_token_identical=fl.get("recovery_token_identical", False),
+        disk_full_entries=df.get("degraded_entries", 0),
+        disk_full_exits=df.get("degraded_exits", 0))
 
 
 def check(kind: str, baseline: dict, fresh: dict, tol: float):
@@ -131,6 +173,7 @@ def check(kind: str, baseline: dict, fresh: dict, tol: float):
             fresh_bytes_per_token=new["bytes_moved_per_token"],
             baseline_tokens_per_round=base["tokens_per_round"],
             fresh_tokens_per_round=new["tokens_per_round"])
+        _check_faults(failures, report, new.get("faults"))
     else:
         raise SystemExit(f"unknown bench kind: {kind}")
 

@@ -9,6 +9,15 @@ were identical (event-log sha256 + every deterministic metric): the
 regression gate checks that bit, so CI re-proves determinism on every
 push.
 
+The ``faults`` subsection (DESIGN.md §6) runs the CI-sized fault
+scenarios: ``flaky_disk`` twice at a fixed fault seed (overridable via
+``LLMS_FAULT_SEED``) plus once FAULT-FREE on the same workload — the
+gate asserts same-seed determinism, zero failed foreground calls,
+faults actually injected/recovered, and that the recovered run's
+decoded tokens are byte-identical to the fault-free run's; and
+``disk_full_churn`` once — the gate asserts degraded mode was entered,
+exited, and no foreground call failed.
+
   PYTHONPATH=src:. python benchmarks/scenarios.py --reduced \
       --out bench_scenarios_fresh.json
 """
@@ -16,6 +25,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 from benchmarks.common import bench_model
@@ -26,7 +36,8 @@ from repro.loadgen.driver import make_events
 from repro.loadgen.metrics import deterministic_view
 
 FULL_SET = ("steady_poisson", "fg_burst_over_bg", "diurnal_ramp",
-            "herd_restore", "eviction_churn", "scale_10k")
+            "herd_restore", "eviction_churn", "flaky_disk",
+            "disk_full_churn", "scale_10k")
 
 _MODELS = {}
 
@@ -70,6 +81,46 @@ def reduced_section() -> dict:
     return out
 
 
+# CI-sized overlays for the fault scenarios (full-size specs stay in
+# the library); the reduced flaky workload keeps the eviction pressure
+# (small budget, sweep pattern) so the injected sites actually fire.
+_FLAKY_CI = dict(n_contexts=12, n_calls=64, memory_budget=12_000)
+_DISKFULL_CI = dict(n_contexts=16, n_calls=96, memory_budget=12_000,
+                    faults={"disk_full_windows": [[5.0, 14.0]],
+                            "seed": 4321})
+
+
+def fault_section() -> dict:
+    """The fault-injection leg (DESIGN.md §6).
+
+    flaky_disk runs TWICE at one fault seed (determinism) and once with
+    faults stripped on the SAME synthesized workload: under the 16-bit
+    ``llms_nocomp`` policy recompute recovery is bit-exact, so the
+    faulted runs' decoded tokens must hash identically to the clean
+    run's.  disk_full_churn must enter AND exit degraded mode with zero
+    failed foreground calls."""
+    fseed = int(os.environ.get("LLMS_FAULT_SEED", "1234"))
+    spec = get_scenario("flaky_disk", **_FLAKY_CI)
+    spec = spec.override(faults={**dict(spec.faults), "seed": fseed})
+    events = make_events(spec, profile_model(spec.model_profile)[0].vocab)
+    a = run_one(spec, events=events)
+    b = run_one(spec, events=events)
+    clean = run_one(spec.override(faults={}), events=events)
+    flaky = gate_metrics(a)
+    flaky["fault_seed"] = fseed
+    flaky["determinism_holds"] = (
+        deterministic_view(a) == deterministic_view(b))
+    flaky["recovery_token_identical"] = (
+        a["tokens_sha256"] == clean["tokens_sha256"])
+    flaky["wall_s"] = a["wall_s"]
+
+    dspec = get_scenario("disk_full_churn", **_DISKFULL_CI)
+    d = run_one(dspec)
+    disk_full = gate_metrics(d)
+    disk_full["wall_s"] = d["wall_s"]
+    return {"flaky": flaky, "disk_full": disk_full}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", action="append", default=None,
@@ -86,6 +137,20 @@ def main():
     doc["reduced"] = reduced_section()
     print(f"reduced pair: determinism_holds="
           f"{doc['reduced']['determinism_holds']} "
+          f"({time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    doc["reduced"]["faults"] = fault_section()
+    fl = doc["reduced"]["faults"]["flaky"]
+    df = doc["reduced"]["faults"]["disk_full"]
+    print(f"fault leg: flaky determinism={fl['determinism_holds']} "
+          f"token_identical={fl['recovery_token_identical']} "
+          f"injected={fl.get('faults_injected_total', 0)} "
+          f"recovered={fl.get('chunks_recovered_recompute', 0)} "
+          f"errors_fg={fl.get('errors_fg', 0)}; disk_full "
+          f"entries={df.get('degraded_entries', 0)} "
+          f"exits={df.get('degraded_exits', 0)} "
+          f"errors_fg={df.get('errors_fg', 0)} "
           f"({time.time() - t0:.1f}s)")
 
     if not args.reduced:

@@ -39,6 +39,12 @@ class Context:
     qmemo: Dict[int, "QuantResidentChunk"] = field(default_factory=dict)
     whole: Optional[Dict[str, np.ndarray]] = None   # non-chunked policies
     whole_tokens: int = 0
+    # positions whose KV was never computed: each call's final emitted
+    # token is appended to the text but the decode budget ends before
+    # its KV round, so the canonical payload stores ZERO rows there.
+    # Recompute-based fault recovery (DESIGN.md §6) must zero these
+    # rows to reproduce the payload bytes exactly.
+    kv_holes: set = field(default_factory=set)
     alive: bool = True                      # lmk: killed => False
     density_sum: Optional[np.ndarray] = None
     density_cnt: Optional[np.ndarray] = None
@@ -110,6 +116,7 @@ class ContextStore:
         ctx.chunks.clear()
         ctx.payload.clear()
         ctx.qmemo.clear()
+        ctx.kv_holes.clear()
         ctx.whole = None
         ctx.tokens[:] = 0
         ctx.n_tokens = 0

@@ -34,6 +34,8 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import FAULTS, with_retries
+
 BF16 = 1
 QUANT = 2
 
@@ -60,6 +62,7 @@ class PagePool:
         self.pt_switch_ins = 0      # chunk switch-ins = pure table reads
         self.admit_switch_ins = 0   # chunk switch-ins that paid an admit
         self.reclaims = 0           # whole-context reclaim evictions
+        self.admit_fault_retries = 0   # injected pool.admit faults retried
 
     # -- tables -------------------------------------------------------- #
     def table(self, cid: int) -> Dict[str, np.ndarray]:
@@ -95,6 +98,25 @@ class PagePool:
         return pt16, pt8, qmask
 
     # -- allocation ---------------------------------------------------- #
+    def _admit_check(self, cid: int, ci: int) -> None:
+        """``pool.admit`` failpoint: admission is the pool's only
+        externally-driven mutation, so transient faults injected here
+        cover the whole alloc path.  Retried on the spot — the check
+        runs before any table/free-list mutation, so a retry is safe —
+        and only transient kinds are planned for this site, so a
+        persistent draw (tests only) still propagates."""
+        if not FAULTS.active:
+            return
+        tries = 0
+
+        def _on_retry(_key, _err):
+            nonlocal tries
+            tries += 1
+
+        with_retries(lambda: FAULTS.check("pool.admit", (cid, ci)),
+                     attempts=3, base_s=0.0, on_retry=_on_retry)
+        self.admit_fault_retries += tries
+
     def _pop(self, free: List[int], kind_name: str, for_cid: int) -> int:
         if not free:
             self._reclaim(for_cid)
@@ -131,6 +153,7 @@ class PagePool:
         return t is None or (not t["p16"].any() and not t["p8"].any())
 
     def alloc16(self, cid: int, ci: int) -> int:
+        self._admit_check(cid, ci)
         t = self.table(cid)
         assert t["kind"][ci] == 0, (cid, ci, t["kind"][ci])
         page = self._pop(self._free16, "bf16", cid)
@@ -140,6 +163,7 @@ class PagePool:
         return page
 
     def alloc8(self, cid: int, ci: int) -> int:
+        self._admit_check(cid, ci)
         t = self.table(cid)
         assert t["kind"][ci] == 0, (cid, ci, t["kind"][ci])
         page = self._pop(self._free8, "quant", cid)
@@ -188,4 +212,5 @@ class PagePool:
             "pool_pt_switch_ins": self.pt_switch_ins,
             "pool_admit_switch_ins": self.admit_switch_ins,
             "pool_reclaims": self.reclaims,
+            "pool_admit_fault_retries": self.admit_fault_retries,
         }

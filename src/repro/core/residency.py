@@ -23,11 +23,14 @@ model only through the ``ModelExecutor``.
 """
 from __future__ import annotations
 
+import errno
 import math
 import os
 import time
 from collections import OrderedDict
-from typing import Callable, Dict, List, Optional, Tuple
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutTimeout
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +40,13 @@ from repro.core import compression as comp
 from repro.core.chunks import ChunkMeta, CompressedChunk, QuantResidentChunk
 from repro.core.context_store import Context, ContextStore
 from repro.core.executor import ModelExecutor
+from repro.core.faults import (FAULTS, ChunkCorruptError, DiskFullError,
+                               SwapTimeoutError, with_retries)
 from repro.core.lifecycle import LCTRUQueue, MemoryManager
 from repro.core.pagepool import BF16, QUANT, PagePool
 from repro.core.pipeline import PipelineProfile, fit_linear, plan_split
-from repro.core.restore import LayerFeed, read_chunk_file, write_chunk_file
+from repro.core.restore import (LayerFeed, read_chunk_file,
+                                verify_chunk_file, write_chunk_file)
 from repro.core.swap import AsyncSwapper, DiskStore
 
 
@@ -139,6 +145,107 @@ class ResidencyEngine:
         # decode from identical quantized representations — the
         # token-identity contract benchmarks/tests rely on.
         self.force_dequant = False
+        # -- fault tolerance (DESIGN.md §6) ---------------------------- #
+        # recovery ladder: retry (AsyncSwapper) -> recompute (here) ->
+        # degrade (ENOSPC) -> fail.  While degraded, AoT swap-out is off
+        # and eviction DROPS dirty payloads instead of persisting them;
+        # a periodic probe write exits the mode once space returns.
+        self.aot_enabled = True
+        self.degraded = False
+        self.degraded_entries = 0
+        self.degraded_exits = 0
+        self._degrade_ticks = 0
+        self.chunks_recovered_recompute = 0
+        self.chunks_corrupt_detected = 0
+        self.io_errors_detected = 0
+        self.evict_dropped = 0
+        self.recover_failed = 0
+        swapper.on_job_error = self._on_io_error
+
+    # ------------------------------------------------------------------ #
+    # failure detection + degraded mode (DESIGN.md §6)
+    # ------------------------------------------------------------------ #
+    @property
+    def _deadline(self) -> Optional[float]:
+        """Per-swap watchdog deadline (None = wait forever)."""
+        return getattr(self.cfg, "swap_deadline_s", None)
+
+    def _fut_result(self, fut: Future):
+        """Future wait under the watchdog: a wedged swap surfaces as
+        SwapTimeoutError (which the router turns into a preemption)
+        instead of blocking the engine forever."""
+        try:
+            return fut.result(self._deadline)
+        except _FutTimeout:
+            raise SwapTimeoutError(
+                f"swap read exceeded {self._deadline}s") from None
+
+    def _note_read_failure(self, err: BaseException):
+        if isinstance(err, ChunkCorruptError):
+            self.chunks_corrupt_detected += 1
+        else:
+            self.io_errors_detected += 1
+
+    def _on_io_error(self, key, err: BaseException):
+        """AsyncSwapper terminal-failure callback (runs on an I/O
+        thread).  ENOSPC flips degraded mode immediately; every other
+        failed job is recovered lazily — the next read of the key
+        retries and then recomputes."""
+        if isinstance(err, OSError) and err.errno == errno.ENOSPC:
+            self._enter_degraded()
+
+    def _enter_degraded(self):
+        if not self.degraded:
+            self.degraded = True
+            self.aot_enabled = False
+            self.degraded_entries += 1
+            self._degrade_ticks = 0
+
+    def degraded_tick(self):
+        """Deterministic disk-space probe: every 4th switch-out while
+        degraded, attempt a tiny write.  Success means space returned —
+        re-enable AoT and flush what accumulated dirty in the interim.
+        Tick-count based (not wall clock) so virtual-clock scenario runs
+        replay identically."""
+        if not self.degraded:
+            return
+        self._degrade_ticks += 1
+        if self._degrade_ticks % 4:
+            return
+        probe = (-3, "probe")
+        try:
+            self.store.write(probe, b"ok")
+            self.store.delete(probe)
+        except OSError:
+            return
+        self.degraded = False
+        self.aot_enabled = True
+        self.degraded_exits += 1
+        if self.cfg.use_disk and self.cfg.chunked:
+            for cid in sorted(self._dirty_cids):
+                ctx = self.ctxs.contexts.get(cid)
+                if ctx is not None:
+                    self.flush_dirty(ctx)
+
+    def fault_stats(self) -> Dict[str, Any]:
+        c = FAULTS.counters()
+        return {
+            "degraded_mode": int(self.degraded),
+            "degraded_entries": self.degraded_entries,
+            "degraded_exits": self.degraded_exits,
+            "chunks_recovered_recompute": self.chunks_recovered_recompute,
+            "chunks_corrupt_detected": self.chunks_corrupt_detected,
+            "io_errors_detected": self.io_errors_detected,
+            "evict_dropped": self.evict_dropped,
+            "recover_failed": self.recover_failed,
+            "io_retries": self.swapper.io_retries,
+            "io_recovered": self.swapper.io_recovered,
+            "io_failed_jobs": self.swapper.io_failed,
+            "tmp_files_swept": self.store.tmp_swept,
+            "delete_errors": self.store.delete_errors,
+            "faults_injected_total": c["injected_total"],
+            "faults_injected": c["injected"],
+        }
 
     # ------------------------------------------------------------------ #
     # switch-in: restore every chunk to memory (Load primitive)
@@ -279,17 +386,32 @@ class ResidencyEngine:
         if missing:
             need = sum(ctx.chunks[i].nbytes for i in missing)
             self.mem.reclaim(need, self.evict, locked={ctx.cid})
-            # pure-I/O restore: eviction guarantees on_disk before a
-            # chunk leaves memory, so the payload bytes always exist;
-            # the pipelined recompute path stays a slot-mode feature
+            # I/O-first restore: eviction normally persists a chunk
+            # before it leaves memory, so the payload bytes exist on
+            # disk — except after a storage fault (failed write, corrupt
+            # file, degraded-mode drop), where the recovery ladder
+            # recomputes the chunk from its tokens in ascending order
+            # (each recompute attends the already-restored prefix).
+            # The layer-pipelined recompute stays a slot-mode feature.
             futs = {i: self._read_chunk_async((ctx.cid, i))
-                    for i in missing}
+                    for i in missing if ctx.chunks[i].on_disk}
             for i in missing:
-                self._mark_loaded(ctx, i, payload=futs[i].result())
-                # a surviving page (evicted-while-busy chunk) already
-                # holds exactly this payload's values — skip the admit
-                if pool.kind(ctx.cid, i) == 0:
-                    self._admit_chunk(ctx, i, quant_mode)
+                cc = None
+                if i in futs:
+                    try:
+                        cc = self._fut_result(futs[i])
+                    except SwapTimeoutError:
+                        raise
+                    except (ChunkCorruptError, OSError) as err:
+                        self._note_read_failure(err)
+                if cc is not None:
+                    self._mark_loaded(ctx, i, payload=cc)
+                    # a surviving page (evicted-while-busy chunk) already
+                    # holds exactly this payload's values — skip the admit
+                    if pool.kind(ctx.cid, i) == 0:
+                        self._admit_chunk(ctx, i, quant_mode)
+                else:
+                    self._recover_chunk_paged(ctx, i, quant_mode)
         if admitted or missing:
             jax.block_until_ready(
                 pool.arenas[exe.codec.leaves[0] + "16"])
@@ -359,6 +481,86 @@ class ResidencyEngine:
         page = self.pool.alloc16(cid, ci)
         self.pool.arenas = self.exe.zero16_fn(self.pool.arenas, page)
 
+    # -- recompute-based recovery (ladder step 2, DESIGN.md §6) -------- #
+    @staticmethod
+    def _hole_segments(ctx: Context, lo: int, hi: int
+                       ) -> List[Tuple[int, int]]:
+        """Token ranges of [lo, hi) between KV holes.  Hole positions
+        (each call's final emitted token) were never fed through the
+        model, so recompute must skip them — their KV rows stay zero,
+        exactly what the canonical payload stores."""
+        segs, a = [], lo
+        for h in sorted(x for x in ctx.kv_holes if lo <= x < hi):
+            if h > a:
+                segs.append((a, h))
+            a = h + 1
+        if hi > a:
+            segs.append((a, hi))
+        return segs
+
+    def _recompute_blocks_paged(self, ctx: Context, i: int):
+        """Recompute chunk ``i``'s KV into a fresh zeroed bf16 page from
+        the context's resident tokens (paper §3.3: a KV chunk is always
+        recomputable) and read it back as (cs, F) blocks.  Requires
+        every earlier chunk's page to be resident — callers restore in
+        ascending chunk order, so the prefix is always attended."""
+        exe, pool = self.exe, self.pool
+        m = ctx.chunks[i]
+        cs = exe.cs
+        lo = i * cs
+        covered = m.n_covered or min(ctx.n_tokens - lo, cs)
+        if pool.kind(ctx.cid, i) != 0:
+            pool.free_chunk(ctx.cid, i)
+        self._alloc_fresh16(ctx.cid, i)
+        pt16, pt8, qmask = pool.rows([ctx.cid])
+        for a, b in self._hole_segments(ctx, lo, lo + covered):
+            toks = np.asarray(ctx.tokens[a:b], np.int32)
+            pool.arenas, _, _ = exe.paged_extend(pool.arenas, toks, a,
+                                                 pt16, pt8, qmask)
+        page = int(pool._tables[ctx.cid]["p16"][i])
+        return exe.read16_fn(pool.arenas, page)
+
+    def _recover_chunk_paged(self, ctx: Context, i: int, quant_mode: bool):
+        """The disk copy is missing/corrupt/unreadable after retries:
+        recompute the chunk from tokens, re-encode it at its assigned
+        level, re-admit FROM THE PAYLOAD (so decode attends exactly the
+        payload-roundtrip values a disk restore would have given), and
+        rewrite the repaired payload to disk unless degraded."""
+        if not self.exe.recomputable:
+            self.recover_failed += 1
+            raise ChunkCorruptError(
+                f"ctx {ctx.cid} chunk {i}: disk copy unreadable and "
+                f"family {self.exe.model.cfg.family!r} cannot recompute")
+        m = ctx.chunks[i]
+        if self.pool.kind(ctx.cid, i) == BF16:
+            # the page survived the eviction (busy context): it holds
+            # the authoritative values — rebuild the payload from it
+            # instead of recomputing
+            page = int(self.pool._tables[ctx.cid]["p16"][i])
+            blocks = self.exe.read16_fn(self.pool.arenas, page)
+        else:
+            blocks = self._recompute_blocks_paged(ctx, i)
+        want_quant = self.exe.quant_resident and m.bits == 8
+        cc = self._encode_blocks(blocks, m.bits, quant=want_quant)
+        ctx.payload[i] = cc
+        ctx.qmemo.pop(i, None)
+        m.quant = want_quant
+        m.nbytes = cc.nbytes
+        m.in_memory = True
+        # drop the raw recompute page and re-admit from the payload —
+        # same drop-on-encode rule as swap-out (re-encoding is lossy for
+        # quantized tiers; for 16-bit storage the roundtrip is exact)
+        self.pool.free_chunk(ctx.cid, i)
+        if (self.cfg.use_disk and self.aot_enabled
+                and self._write_chunk_async(ctx.cid, i, cc)):
+            m.dirty, m.on_disk = False, True
+        else:
+            m.dirty, m.on_disk = True, False
+            self._dirty_cids.add(ctx.cid)
+        self.mem.register((ctx.cid, i), m.nbytes, m.bits)
+        self._admit_chunk(ctx, i, quant_mode)
+        self.chunks_recovered_recompute += 1
+
     def _plan_restore(self, ctx, missing: List[int]
                       ) -> Tuple[List[int], List[int]]:
         if not (self.cfg.use_pipeline and self.exe.recomputable):
@@ -375,39 +577,68 @@ class ResidencyEngine:
     def _restore_chunks(self, ctx: Context, cache, re_idx: List[int],
                         io_idx: List[int]):
         """Fig. 8 restore.  dense + recompute-set: per-layer pipelined scan;
-        otherwise: async whole-chunk reads (+ recompute second phase)."""
+        otherwise: async whole-chunk reads (+ recompute second phase).
+
+        Fault recovery (DESIGN.md §6): chunks whose disk copy is
+        missing/corrupt/unreadable after retries are DEMOTED to the
+        recompute set instead of failing the call — a chunk is always
+        recomputable from the context's tokens (paper §3.3)."""
         exe = self.exe
+        quant_mode = exe.quant_resident and not self.force_dequant
+        recovered: List[int] = []            # unreadable -> recomputed
+        pending_io = list(io_idx)
+        did_recompute = False
         use_pipe = (bool(re_idx) and exe.model.cfg.family == "dense")
         if use_pipe:
-            nio_b = next(x for x in exe.io_buckets
-                         if x >= max(len(io_idx), 1))
-            pad_chunks = nio_b - len(io_idx)
-            io_pos_b = np.concatenate(
-                [exe.chunk_positions(io_idx),
-                 np.full(pad_chunks * exe.cs, exe.pad_slot, np.int32)])
-            for i in io_idx:        # settle in-flight AoT writes first:
-                self.swapper.wait((ctx.cid, i))     # the feed reads the
-            paths = [self.store._path((ctx.cid, i))  # paths directly
-                     for i in io_idx]
-            feed = LayerFeed(paths, exe.codec.leaves, exe.n_layers,
-                             exe.cs, exe.leaf_dims, pad_chunks=pad_chunks,
-                             pool=self.swapper.pool)
-            miss_pos = exe.chunk_positions(re_idx)
-            miss_b = exe.bucket_pad(miss_pos, exe.pad_slot)
-            toks_b = exe.bucket_pad(ctx.tokens[miss_pos], 0)
-            cache = exe.run_pipelined(feed, toks_b, miss_b, io_pos_b,
-                                      cache, ctx.n_tokens)
-            jax.block_until_ready(cache[exe.codec.leaves[0]])
-            feed.close()
-            for i in io_idx:
-                self._mark_loaded(ctx, i, payload=None)
-        else:
+            # pre-validate the feed's files: the scan reads them deep
+            # inside jax io_callbacks where a corrupt file aborts the
+            # whole restore — route guaranteed-bad chunks to recompute
+            ok_io: List[int] = []
+            for i in pending_io:
+                if not ctx.chunks[i].on_disk:    # degraded-mode drop
+                    recovered.append(i)
+                    continue
+                try:
+                    self.swapper.wait((ctx.cid, i), timeout=self._deadline)
+                    verify_chunk_file(self.store._path((ctx.cid, i)))
+                    ok_io.append(i)
+                except SwapTimeoutError:
+                    raise
+                except (ChunkCorruptError, OSError) as err:
+                    self._note_read_failure(err)
+                    recovered.append(i)
+            re_all = sorted(set(re_idx) | set(recovered))
+            try:
+                cache = self._restore_pipelined(ctx, cache, re_all, ok_io)
+                for i in ok_io:
+                    self._mark_loaded(ctx, i, payload=None)
+                pending_io = []
+                did_recompute = True
+            except SwapTimeoutError:
+                raise
+            except Exception as err:
+                # passed header validation but failed mid-feed (e.g. a
+                # flipped byte inside a layer segment): fall back to
+                # whole-file reads, which verify per-layer CRCs up front
+                self._note_read_failure(err)
+                pending_io = ok_io
+        if pending_io:
             # async whole-chunk reads, insert as they land
             futs = {i: self._read_chunk_async((ctx.cid, i))
-                    for i in io_idx}
-            quant_mode = exe.quant_resident and not self.force_dequant
-            for i in io_idx:
-                cc = futs[i].result()
+                    for i in pending_io if ctx.chunks[i].on_disk}
+            for i in pending_io:
+                cc = None
+                if i in futs:
+                    try:
+                        cc = self._fut_result(futs[i])
+                    except SwapTimeoutError:
+                        raise
+                    except (ChunkCorruptError, OSError) as err:
+                        self._note_read_failure(err)
+                if cc is None:
+                    if i not in recovered:
+                        recovered.append(i)
+                    continue
                 if quant_mode and isinstance(cc, QuantResidentChunk):
                     # decode-grid bytes go straight back behind the
                     # fused kernel — the read IS the restore
@@ -422,25 +653,90 @@ class ResidencyEngine:
                     cache = exe.insert_fn(cache, jnp.int32(i * exe.cs),
                                           self._payload_blocks(cc))
                 self._mark_loaded(ctx, i, payload=cc)
-            if re_idx:   # second phase (exact: I/O chunks now resident)
-                miss_pos = exe.chunk_positions(re_idx)
-                miss_b = exe.bucket_pad(miss_pos, exe.pad_slot)
-                toks_b = exe.bucket_pad(ctx.tokens[miss_pos], 0)
-                cache, _, _ = exe.extend_nod_fn(
-                    exe.params, jnp.asarray(toks_b)[None],
-                    jnp.asarray(miss_b), cache, jnp.int32(ctx.n_tokens))
 
-        # recomputed chunks: re-encode payload at their assigned level
-        for i in re_idx:
+        re_all = sorted(set(re_idx) | set(recovered))
+        if re_all and not did_recompute:
+            if recovered and not exe.recomputable:
+                self.recover_failed += 1
+                raise ChunkCorruptError(
+                    f"ctx {ctx.cid} chunks {recovered}: disk copies "
+                    f"unreadable and family "
+                    f"{exe.model.cfg.family!r} cannot recompute")
+            # second phase (exact: I/O chunks now resident)
+            miss_pos = self._feed_positions(ctx, re_all)
+            miss_b = exe.bucket_pad(miss_pos, exe.pad_slot)
+            toks_b = exe.bucket_pad(ctx.tokens[miss_pos], 0)
+            cache, _, _ = exe.extend_nod_fn(
+                exe.params, jnp.asarray(toks_b)[None],
+                jnp.asarray(miss_b), cache, jnp.int32(ctx.n_tokens))
+
+        # recomputed chunks: re-encode each payload at its assigned level
+        rec = set(recovered)
+        for i in re_all:
             m = ctx.chunks[i]
             want_quant = self.exe.quant_resident and m.bits == 8
             ctx.payload[i] = self._make_payload(cache, i, m.bits,
                                                 quant=want_quant)
             ctx.qmemo.pop(i, None)
             m.quant = want_quant
-            m.in_memory, m.dirty = True, False    # already on disk
+            m.in_memory = True
+            if i in rec:
+                m.nbytes = ctx.payload[i].nbytes
+                # rewrite the repaired chunk so the next restore is a
+                # plain read again (unless writes are failing: leave it
+                # dirty for the post-degraded flush)
+                if (self.cfg.use_disk and self.aot_enabled
+                        and self._write_chunk_async(ctx.cid, i,
+                                                    ctx.payload[i])):
+                    m.dirty, m.on_disk = False, True
+                else:
+                    m.dirty, m.on_disk = True, False
+                    self._dirty_cids.add(ctx.cid)
+                self.chunks_recovered_recompute += 1
+            else:
+                m.dirty = False               # already on disk
             self.mem.register((ctx.cid, i), m.nbytes, m.bits)
         return cache
+
+    def _restore_pipelined(self, ctx: Context, cache, re_idx: List[int],
+                           io_idx: List[int]):
+        """The Fig. 8 layer-pipelined scan over a validated I/O set."""
+        exe = self.exe
+        nio_b = next(x for x in exe.io_buckets
+                     if x >= max(len(io_idx), 1))
+        pad_chunks = nio_b - len(io_idx)
+        io_pos_b = np.concatenate(
+            [exe.chunk_positions(io_idx),
+             np.full(pad_chunks * exe.cs, exe.pad_slot, np.int32)])
+        paths = [self.store._path((ctx.cid, i)) for i in io_idx]
+        feed = LayerFeed(paths, exe.codec.leaves, exe.n_layers,
+                         exe.cs, exe.leaf_dims, pad_chunks=pad_chunks,
+                         pool=self.swapper.pool)
+        miss_pos = self._feed_positions(ctx, re_idx)
+        miss_b = exe.bucket_pad(miss_pos, exe.pad_slot)
+        toks_b = exe.bucket_pad(ctx.tokens[miss_pos], 0)
+        try:
+            out = exe.run_pipelined(feed, toks_b, miss_b, io_pos_b,
+                                    cache, ctx.n_tokens)
+            jax.block_until_ready(out[exe.codec.leaves[0]])
+        except BaseException:
+            feed.close(raise_errors=False)
+            raise
+        feed.close()
+        return out
+
+    def _feed_positions(self, ctx: Context, idxs: List[int]) -> np.ndarray:
+        """Chunk positions to FEED through recompute: every position of
+        the given chunks except KV holes (each call's final emitted
+        token) — the original timeline never ran those through the
+        model, so their cache rows stay zero, exactly what the canonical
+        payload stores (see ``_make_payload_paged``)."""
+        pos = self.exe.chunk_positions(idxs)
+        if not ctx.kv_holes:
+            return pos
+        keep = np.asarray([p for p in pos if int(p) not in ctx.kv_holes],
+                          np.int32)
+        return keep if len(keep) else pos[:0]
 
     def _read_chunk_async(self, key):
         """Read a chunk file on the I/O pool, ORDERED AFTER any
@@ -452,9 +748,18 @@ class ResidencyEngine:
 
     def _read_chunk(self, key):
         """Synchronous chunk-file read; blocks the caller on any
-        in-flight same-key write first (see ``_read_chunk_async``)."""
-        self.swapper.wait(key)
-        return read_chunk_file(self.store._path(key))
+        in-flight same-key write first (see ``_read_chunk_async``),
+        bounded by the watchdog deadline, with the worker retry budget
+        for transient IO errors."""
+        self.swapper.wait(key, timeout=self._deadline)
+
+        def _on_retry(_k, _e):
+            self.swapper.io_retries += 1
+
+        return with_retries(lambda: read_chunk_file(self.store._path(key)),
+                            attempts=self.swapper.retries,
+                            base_s=self.swapper.retry_base_s,
+                            on_retry=_on_retry)
 
     def _mark_loaded(self, ctx, i: int, payload):
         if payload is None:
@@ -470,17 +775,31 @@ class ResidencyEngine:
     def _restore_whole_timed(self, ctx: Context, cache):
         exe = self.exe
         t_switch = 0.0
-        if ctx.whole is not None:
-            pass                                       # resident
-        elif self.cfg.use_disk and self.store.nbytes((ctx.cid, -1)):
+        if ctx.whole is None and self.cfg.use_disk and \
+                self.store.nbytes((ctx.cid, -1)):
             t0 = time.perf_counter()
             self.mem.reclaim(self.store.nbytes((ctx.cid, -1)) or 0,
                              self.evict, locked={ctx.cid})
-            ctx.whole = self.swapper.read((ctx.cid, -1))
-            t_switch = time.perf_counter() - t0
-            ctx.whole_tokens = ctx.n_tokens
-            self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
-            self.queue.touch((ctx.cid, -1), 16)
+            try:
+                ctx.whole = self.swapper.read((ctx.cid, -1),
+                                              timeout=self._deadline)
+                t_switch = time.perf_counter() - t0
+                ctx.whole_tokens = ctx.n_tokens
+                self.mem.register((ctx.cid, -1),
+                                  self._whole_bytes(ctx), 16)
+                self.queue.touch((ctx.cid, -1), 16)
+            except SwapTimeoutError:
+                raise
+            except (ChunkCorruptError, OSError) as err:
+                # unreadable whole-state file: drop the stale accounting
+                # entry and fall through to the LMK recompute branch —
+                # the whole context rebuilds from its resident text
+                self._note_read_failure(err)
+                with self.store._lock:
+                    self.store._bytes.pop((ctx.cid, -1), None)
+                self.chunks_recovered_recompute += 1
+        if ctx.whole is not None:
+            pass                                       # resident
         else:
             # LMK: killed — recompute the whole context from its text
             t0 = time.perf_counter()
@@ -624,8 +943,27 @@ class ResidencyEngine:
             if (m.dirty or want != m.bits or i not in ctx.payload
                     or covered != m.n_covered or m.quant != want_quant):
                 if self.pool is not None:
-                    cc = self._make_payload_paged(ctx, i, want,
-                                                  quant=want_quant)
+                    try:
+                        cc = self._make_payload_paged(ctx, i, want,
+                                                      quant=want_quant)
+                    except (ChunkCorruptError, OSError) as err:
+                        # the encode needed the chunk's disk copy (busy-
+                        # evicted, no page) and it is unreadable.  The
+                        # prefix may be paged out here, so recompute is
+                        # not safe mid-swap-out — leave the chunk
+                        # MISSING; the next switch-in recovers it with
+                        # the prefix resident (recovery ladder §6)
+                        self._note_read_failure(err)
+                        m.bits, m.n_covered = want, covered
+                        m.density = float(D[i])
+                        m.quant = want_quant
+                        m.dirty, m.in_memory, m.on_disk = \
+                            False, False, False
+                        ctx.payload.pop(i, None)
+                        ctx.qmemo.pop(i, None)
+                        self.pool.free_chunk(ctx.cid, i)
+                        self.mem.unregister((ctx.cid, i))
+                        continue
                     # drop-on-encode: the page now disagrees with the
                     # canonical payload (re-encoding is lossy), so free
                     # it — the next switch-in re-admits from the payload
@@ -676,16 +1014,22 @@ class ResidencyEngine:
 
         if cfg.use_aot and cfg.use_disk:
             self.flush_dirty(ctx)
+        self.degraded_tick()
 
     def flush_dirty(self, ctx: Context) -> int:
         """AoT swap-out (§3.4): asynchronously write every dirty chunk so a
         later Reclaim is free.  Also the scheduler's prediction hook: when
         the router predicts a context switch, the outgoing contexts get
-        flushed ahead of the memory pressure.  Returns chunks submitted."""
+        flushed ahead of the memory pressure.  Returns chunks submitted.
+        Disabled while degraded — writes are failing; chunks stay dirty
+        and the post-degraded flush catches them up."""
+        if not self.aot_enabled:
+            return 0
         n = 0
         for i, m in ctx.chunks.items():
             if m.dirty and i in ctx.payload:
-                self._write_chunk_async(ctx.cid, i, ctx.payload[i])
+                if not self._write_chunk_async(ctx.cid, i, ctx.payload[i]):
+                    break               # disk full: stop, chunks stay dirty
                 m.dirty, m.on_disk = False, True
                 n += 1
         if not any(m.dirty for m in ctx.chunks.values()):
@@ -719,8 +1063,20 @@ class ResidencyEngine:
             flushed += self.flush_dirty(ctx)
         return flushed
 
-    def _write_chunk_async(self, cid: int, idx: int, cc: CompressedChunk):
+    def _write_chunk_async(self, cid: int, idx: int,
+                           cc: CompressedChunk) -> bool:
+        """Submit an AoT chunk write; False when the disk is full (the
+        chunk must stay dirty).  A full filesystem fails ``write()``
+        immediately, so ENOSPC surfaces HERE on the submitting
+        (dispatcher) thread — degraded-mode entry is then deterministic
+        under the loadgen virtual clock instead of landing at whatever
+        wall instant an IO worker would report it."""
         key = (cid, idx)
+        if FAULTS.disk_full:
+            self.swapper.io_failed += 1
+            self._on_io_error(key, DiskFullError(
+                f"disk full (write {key})"))
+            return False
         path = self.store._path(key)
 
         def work():
@@ -728,6 +1084,7 @@ class ResidencyEngine:
             with self.store._lock:
                 self.store._bytes[key] = n
         self.swapper.submit(key, work)
+        return True
 
     # ------------------------------------------------------------------ #
     # eviction (Reclaim primitive)
@@ -740,18 +1097,51 @@ class ResidencyEngine:
             return
         if idx == -1:
             if self.cfg.use_disk and ctx.whole is not None:
-                self.store.write((cid, -1), ctx.whole)   # sync: paper's
-            ctx.whole = None                             # reclaim-time cost
+                try:                                     # sync: paper's
+                    self.store.write((cid, -1), ctx.whole)  # reclaim-
+                except OSError as err:                   # time cost
+                    # can't persist: degrade on ENOSPC and drop — an
+                    # older on-disk copy covers fewer tokens, so the
+                    # accounting entry must go too (the next restore
+                    # then recomputes from text, LMK-style)
+                    if getattr(err, "errno", None) == errno.ENOSPC:
+                        self._enter_degraded()
+                    self.evict_dropped += 1
+                    with self.store._lock:
+                        self.store._bytes.pop((cid, -1), None)
+            ctx.whole = None
             ctx.alive = False
             return
         m = ctx.chunks.get(idx)
         if m is None:
             return
         if m.dirty:                         # no-AoT policies pay here (sync)
-            n = write_chunk_file(self.store._path(key), ctx.payload[idx],
-                                 self.exe.n_layers)
-            with self.store._lock:
-                self.store._bytes[key] = n
+            ok = False
+            if not self.degraded:           # degraded: every write fails
+                try:
+                    n = with_retries(
+                        lambda: write_chunk_file(self.store._path(key),
+                                                 ctx.payload[idx],
+                                                 self.exe.n_layers),
+                        attempts=self.swapper.retries,
+                        base_s=self.swapper.retry_base_s)
+                    with self.store._lock:
+                        self.store._bytes[key] = n
+                    ok = True
+                except OSError as err:
+                    if getattr(err, "errno", None) == errno.ENOSPC:
+                        self._enter_degraded()
+            if not ok:
+                # recovery ladder: the chunk stays recomputable from
+                # tokens, so eviction must not wedge the reclaim path —
+                # drop the payload and let the next switch-in recompute
+                self.evict_dropped += 1
+                m.dirty, m.on_disk, m.in_memory = False, False, False
+                ctx.payload.pop(idx, None)
+                ctx.qmemo.pop(idx, None)
+                if self.pool is not None and not ctx.busy:
+                    self.pool.free_chunk(cid, idx)
+                return
             m.dirty = False
         m.on_disk, m.in_memory = True, False
         ctx.payload.pop(idx, None)

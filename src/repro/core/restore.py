@@ -11,11 +11,15 @@ jitted recompute scan pulls layer l's I/O data through an ordered
 ``jax.experimental.io_callback`` (``LayerFeed.fetch``).
 
 Layout per chunk file:
-    [u64 header_len][pickle header][layer 0 segment][layer 1 segment]...
+    [preamble][u64 header_len][pickle header][layer 0 segment]...
+    preamble   = magic "LLMK", version, CRC32(header region), body length
     segment l  = for each leaf: packed[(F_l rows) x T'] bytes
                  + scales[F_l] fp32 bytes
 where packed is stored TRANSPOSED (F, T') so a layer's rows are
-contiguous on disk.
+contiguous on disk.  The header carries per-layer segment CRC32s, so
+both the whole-file read path and the layer-streaming pipelined path
+detect torn writes and bit-flips as ``ChunkCorruptError`` (DESIGN.md
+§6) instead of decoding garbage.
 """
 from __future__ import annotations
 
@@ -23,12 +27,14 @@ import os
 import pickle
 import struct
 import threading
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.chunks import CompressedChunk, QuantResidentChunk
+from repro.core.faults import FAULTS, ChunkCorruptError, corrupt_file
 
 # ----------------------------------------------------------------------- #
 # Disk throttle: benchmarks emulate a mobile storage tier (the paper's
@@ -100,6 +106,13 @@ def np_dequantize(packed: np.ndarray, scale: np.ndarray, bits: int,
 # --------------------------------------------------------------------- #
 # segmented chunk file format
 # --------------------------------------------------------------------- #
+# preamble: magic, version, reserved, CRC32 of [u64 hlen][pickle header],
+# total body length ([u64 hlen] + header + all segments)
+_CH_MAGIC = b"LLMK"
+_CH_VERSION = 2
+_CH_PREAMBLE = struct.Struct("<4sHHIQ")
+
+
 def write_chunk_file(path: str, cc, n_layers: int) -> int:
     """Serialize layer-major.  F must be layer-major (it is: the codec
     flattens (L, B, heads, hd) with L outermost).  Accepts both storage
@@ -135,24 +148,62 @@ def write_chunk_file(path: str, cc, n_layers: int) -> int:
             elif cc.bits != 16:
                 segs[l] = segs[l] + np.ascontiguousarray(
                     scale[l * Fl:(l + 1) * Fl], dtype=np.float32).tobytes()
+    header["seg_crc"] = [zlib.crc32(s) for s in segs]
+    FAULTS.check("disk.write", path)
     hdr = pickle.dumps(header, protocol=pickle.HIGHEST_PROTOCOL)
+    hregion = struct.pack("<Q", len(hdr)) + hdr
+    body_len = len(hregion) + sum(len(s) for s in segs)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(struct.pack("<Q", len(hdr)))
-        f.write(hdr)
+        f.write(_CH_PREAMBLE.pack(_CH_MAGIC, _CH_VERSION, 0,
+                                  zlib.crc32(hregion), body_len))
+        f.write(hregion)
         for s in segs:
             f.write(s)
+    action = FAULTS.corrupt_action(path)
+    if action is not None:
+        corrupt_file(tmp, action)
     os.replace(tmp, path)
-    total = 8 + len(hdr) + sum(len(s) for s in segs)
+    FAULTS.note_write_ok(path)
+    total = _CH_PREAMBLE.size + body_len
     count_io("write", total)
     _throttle(total)
     return total
 
 
 def _read_header(f) -> Tuple[dict, int]:
-    (hlen,) = struct.unpack("<Q", f.read(8))
-    header = pickle.loads(f.read(hlen))
-    return header, 8 + hlen
+    """Parse + VERIFY the preamble and pickled header.  Detects torn
+    files (size mismatch vs the recorded body length) and header
+    corruption (CRC mismatch) before unpickling anything."""
+    pre = f.read(_CH_PREAMBLE.size)
+    if len(pre) < _CH_PREAMBLE.size:
+        raise ChunkCorruptError("chunk file: truncated preamble")
+    magic, ver, _, hcrc, body_len = _CH_PREAMBLE.unpack(pre)
+    if magic != _CH_MAGIC:
+        raise ChunkCorruptError(f"chunk file: bad magic {magic!r}")
+    if ver != _CH_VERSION:
+        raise ChunkCorruptError(f"chunk file: unknown version {ver}")
+    size = os.fstat(f.fileno()).st_size
+    if size != _CH_PREAMBLE.size + body_len:
+        raise ChunkCorruptError(
+            f"chunk file: torn ({size} of {_CH_PREAMBLE.size + body_len} "
+            f"bytes)")
+    hlen_raw = f.read(8)
+    (hlen,) = struct.unpack("<Q", hlen_raw)
+    hdr = f.read(hlen)
+    if zlib.crc32(hlen_raw + hdr) != hcrc:
+        raise ChunkCorruptError("chunk file: header CRC32 mismatch")
+    header = pickle.loads(hdr)
+    return header, _CH_PREAMBLE.size + 8 + hlen
+
+
+def verify_chunk_file(path: str):
+    """Cheap structural check (preamble, size, header CRC) without
+    reading segment payloads — the pipelined restore pre-validates its
+    inputs with this so a guaranteed-bad file is routed to recompute
+    instead of poisoning the whole layer feed."""
+    with open(path, "rb") as f:
+        _read_header(f)
 
 
 def _segment_size(header: dict) -> int:
@@ -169,6 +220,10 @@ def read_chunk_layer(f, header: dict, base: int, layer: int
     buf = f.read(seg)
     count_io("read", seg)
     _throttle(seg)
+    crcs = header.get("seg_crc")
+    if crcs is not None and zlib.crc32(buf) != crcs[layer]:
+        raise ChunkCorruptError(
+            f"chunk file: layer {layer} segment CRC32 mismatch")
     out, off = {}, 0
     bits, T = header["bits"], header["n_tokens"]
     token_head = header.get("grid", "channel") == "token_head"
@@ -199,6 +254,7 @@ def read_chunk_file(path: str):
     """Whole-chunk read (non-pipelined swap-in path).  Returns the
     payload in its storage grid: CompressedChunk for "channel" files,
     QuantResidentChunk for "token_head" files."""
+    FAULTS.check("disk.read", path)
     with open(path, "rb") as f:
         header, base = _read_header(f)
         L = header["n_layers"]
@@ -211,9 +267,14 @@ def read_chunk_file(path: str):
         buf = f.read(seg * L)
         count_io("read", seg * L)
         _throttle(seg * L)
+        crcs = header.get("seg_crc")
         dt = np.float16 if header["bits"] == 16 else np.int8
         for l in range(L):
             off = l * seg
+            if crcs is not None and \
+                    zlib.crc32(buf[off:off + seg]) != crcs[l]:
+                raise ChunkCorruptError(
+                    f"chunk file: layer {l} segment CRC32 mismatch")
             for name, m in header["leaves"].items():
                 nb = m["Fl"] * m["Tp"] * m.get("isz", 1)
                 pt = np.frombuffer(buf[off:off + nb], dt
@@ -268,6 +329,7 @@ class LayerFeed:
         self._ready: List[Optional[Dict[str, np.ndarray]]] = \
             [None] * n_layers
         self._events = [threading.Event() for _ in range(n_layers)]
+        self._error: Optional[BaseException] = None
         self._pool = pool or ThreadPoolExecutor(max_workers=1)
         self._own_pool = pool is None
         self._fut = self._pool.submit(self._run)
@@ -276,6 +338,7 @@ class LayerFeed:
         files, headers, bases = [], [], []
         try:
             for p in self.paths:
+                FAULTS.check("disk.read", p)
                 f = open(p, "rb")
                 h, b = _read_header(f)
                 files.append(f)
@@ -298,6 +361,9 @@ class LayerFeed:
                             shaped
                 self._ready[l] = assembled
                 self._events[l].set()
+        except BaseException as err:
+            self._error = err                # fetch() chains this cause
+            raise
         finally:
             for f in files:
                 f.close()
@@ -310,11 +376,16 @@ class LayerFeed:
         self._events[l].wait()
         out = self._ready[l]
         if out is None:
-            raise RuntimeError("LayerFeed I/O failed")
+            raise RuntimeError("LayerFeed I/O failed") from self._error
         self._ready[l] = None                # free as consumed
         return out
 
-    def close(self):
-        self._fut.result()
-        if self._own_pool:
-            self._pool.shutdown(wait=False)
+    def close(self, raise_errors: bool = True):
+        try:
+            self._fut.result()
+        except BaseException:
+            if raise_errors:
+                raise
+        finally:
+            if self._own_pool:
+                self._pool.shutdown(wait=False)

@@ -62,6 +62,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.core.faults import SwapTimeoutError
 from repro.core.requests import (BACKGROUND, FOREGROUND,  # noqa: F401
                                  GenerationRequest, GenerationStream,
                                  SamplingParams)
@@ -167,6 +168,8 @@ class ServiceRouter:
         self.aot_flushes = 0
         self.preemptions = 0
         self.preemptions_by_prio: Counter = Counter()
+        self.watchdog_preempts = 0          # hung swaps turned preemptions
+        self.bg_shed = 0                    # degraded-mode bg deferrals
         self.decode_rounds = 0              # batched decode rounds run
         self.decoded_tokens = 0             # tokens emitted across rounds
         self.joins_mid_slice = 0            # continuous-batching joins
@@ -345,9 +348,21 @@ class ServiceRouter:
         in the queue (``begin_call`` refuses to overlap the suspended
         state — the old generation must resume and finish first), or
         when exclusivity forbids sharing: an ``exclusive`` request only
-        runs as the sole member of an empty batch."""
+        runs as the sole member of an empty batch.
+
+        Degraded storage (ResidencyEngine.degraded, DESIGN.md §6) sheds
+        BACKGROUND jobs while any FOREGROUND job waits: every admission
+        may cost an evict+recompute, so that bandwidth is reserved for
+        the user-facing call.  When only background work remains it is
+        admitted normally — the drain must keep making progress (and
+        keep ticking the probe that exits degraded mode) or the queue
+        would livelock."""
         suspended_cids = {k[3]["stub"].ctx_id for k in self._queue
                           if k[3]["state"] is not None}
+        degraded = bool(getattr(getattr(self.svc, "res", None),
+                                "degraded", False))
+        shed_bg = degraded and any(k[3]["prio"] == FOREGROUND
+                                   for k in self._queue)
         taken: List[dict] = []
         skipped: List[Tuple] = []
         while self._queue and len(taken) < limit:
@@ -355,6 +370,10 @@ class ServiceRouter:
             job = key[3]
             cid = job["stub"].ctx_id
             exclusive = getattr(job["request"], "exclusive", False)
+            if shed_bg and job["prio"] != FOREGROUND:
+                skipped.append(key)
+                self.bg_shed += 1
+                continue
             if exclusive and (taken or active_cids):
                 # an exclusive head WAITS for the engine to drain; stop
                 # scanning so nothing behind it jumps the line and the
@@ -384,13 +403,19 @@ class ServiceRouter:
         stream: GenerationStream = job["stream"]
         fut: Optional[Future] = job["future"]
         if job["state"] is None:
-            if fut is not None and not fut.set_running_or_notify_cancel():
+            # t_start doubles as a "future already running" marker: a
+            # watchdog-requeued fresh job must not notify its Future a
+            # second time (set_running_or_notify_cancel raises once the
+            # Future left PENDING)
+            if (job["t_start"] is None and fut is not None
+                    and not fut.set_running_or_notify_cancel()):
                 stream.finish(cancelled=True)
                 return False
             if stream.cancel_requested:          # cancelled while queued
                 stream.finish(cancelled=True)
                 return False
-            job["t_start"] = self._now()
+            if job["t_start"] is None:
+                job["t_start"] = self._now()
         try:
             st = job["state"]
             if st is None:
@@ -411,6 +436,19 @@ class ServiceRouter:
                     self.on_begin(job, True)
             active.append(job)
             return True
+        except SwapTimeoutError as e:
+            # per-slice watchdog (DESIGN.md §6): the switch-in's swap
+            # read exceeded swap_deadline_s.  Turn the hang into a
+            # preemption — requeue under the original admission key so
+            # the job retries ahead of later arrivals — bounded so a
+            # permanently wedged store still fails the call
+            job["watchdogs"] = job.get("watchdogs", 0) + 1
+            if job["watchdogs"] > 3:
+                self._fail(job, e)
+            else:
+                self.watchdog_preempts += 1
+                self._requeue(job)
+            return False
         except Exception as e:              # report to the submitting app
             self._fail(job, e)
             return False
@@ -731,6 +769,8 @@ class ServiceRouter:
             "preemptions_by_priority": {
                 name: int(self.preemptions_by_prio.get(prio, 0))
                 for prio, name in _PRIO_NAMES.items()},
+            "watchdog_preempts": self.watchdog_preempts,
+            "bg_shed": self.bg_shed,
             "pred_hits": self._pred_hits,
             "pred_total": self._pred_total,
             "decode_batch": self.decode_batch,
@@ -790,6 +830,8 @@ class ServiceRouter:
         self._acc_cancelled.clear()
         self.preemptions = 0
         self.preemptions_by_prio.clear()
+        self.watchdog_preempts = 0
+        self.bg_shed = 0
         self.decode_rounds = 0
         self.decoded_tokens = 0
         self.joins_mid_slice = 0

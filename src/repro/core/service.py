@@ -94,6 +94,13 @@ class LLMSConfig:
     max_ctx_len: int = 512
     max_contexts_per_app: int = 8          # K in the paper
     swap_dir: Optional[str] = None
+    # fault tolerance (DESIGN.md §6): transient-IO retry budget per op,
+    # and the per-swap watchdog deadline (seconds; None = wait forever)
+    # that turns a wedged swap into a SwapTimeoutError the router
+    # converts into a preemption
+    io_retries: int = 3
+    io_retry_base_s: float = 0.002
+    swap_deadline_s: Optional[float] = None
     window: int = 0
     n_sinks: int = 0
     compression: str = ""
@@ -154,7 +161,8 @@ class LLMService:
         self.exe = ModelExecutor(model, params, cfg)
         root = cfg.swap_dir or tempfile.mkdtemp(prefix="llms_swap_")
         self.store = DiskStore(root)
-        self.swapper = AsyncSwapper(self.store)
+        self.swapper = AsyncSwapper(self.store, retries=cfg.io_retries,
+                                    retry_base_s=cfg.io_retry_base_s)
         self.queue = LCTRUQueue(lru_only=not cfg.use_lctru)
         self.mem = MemoryManager(cfg.memory_budget, self.queue)
         self.ctxs = ContextStore(self.mem, self.store, self.exe.s_work)
@@ -307,6 +315,11 @@ class LLMService:
             ctx.n_tokens += 1
             out.append(tok)
             if len(st.generated) >= st.request.max_new_tokens:
+                # the final emitted token is appended to the text but
+                # never fed (no decode round left): its KV row stays
+                # zero.  Track the hole so recompute-based fault
+                # recovery skips the token too (DESIGN.md §6).
+                ctx.kv_holes.add(ctx.n_tokens - 1)
                 st.next_tok = None
             else:
                 live.append(st)
@@ -387,7 +400,14 @@ class LLMService:
         measured context switch (accumulated into the call's switch_s)."""
         assert st.suspended and not st.done
         st.suspended = False
-        self._switch_in(st)
+        try:
+            self._switch_in(st)
+        except BaseException:
+            # stay suspended: the router may requeue and retry the
+            # resume (e.g. after a watchdog preemption) — a state that
+            # claims residency without a slot would misroute it
+            st.suspended = True
+            raise
 
     def finish_call(self, st: GenerationState) -> List[int]:
         """Compress / AoT swap-out / reclaim (paper §3.2 + §3.4) and
@@ -550,16 +570,22 @@ class LLMService:
         }
         if self.paged:
             out.update(self.res.pool.stats())
+        # fault/detect/recover/degrade counters (DESIGN.md §6); the
+        # per-kind injection breakdown stays nested under
+        # "faults_injected"
+        out.update(self.res.fault_stats())
         return out
 
     def close(self):
         """Idempotent; flushes pending AoT writes before shutdown so an
-        interrupted swap-out never loses committed chunks."""
+        interrupted swap-out never loses committed chunks.  Failed jobs
+        were already classified/counted on the workers, and a wedged job
+        is abandoned at the watchdog deadline — close never raises or
+        hangs on a storage fault."""
         if self._closed:
             return
         self._closed = True
-        self.swapper.flush()
-        self.swapper.shutdown()
+        self.swapper.shutdown(timeout=self.cfg.swap_deadline_s)
 
     def __enter__(self) -> "LLMService":
         return self

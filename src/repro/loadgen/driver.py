@@ -23,13 +23,17 @@ never lands in the measured pass.
 """
 from __future__ import annotations
 
+import hashlib
 import tempfile
 import time
 from contextlib import contextmanager
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.faults import (clear_faults, install_faults,
+                               plan_from_config, set_disk_full)
 from repro.core.restore import io_counters, set_disk_throttle
-from repro.core.scheduler import ServiceRouter
+from repro.core.requests import FOREGROUND
+from repro.core.scheduler import ServiceRouter, parse_priority
 from repro.core.service import LLMSConfig, LLMService
 from repro.loadgen.metrics import EventLog, build_report
 from repro.loadgen.spec import ScenarioSpec
@@ -84,6 +88,7 @@ def build_service(spec: ScenarioSpec, model, params) -> LLMService:
         set_disk_throttle(None)
     else:
         set_disk_throttle(spec.disk_bw, spec.disk_lat)
+    dl = spec.faults.get("swap_deadline_s") if spec.faults else None
     sc = LLMSConfig(policy=spec.policy, max_ctx_len=spec.max_ctx_len,
                     chunk_tokens=spec.chunk_tokens,
                     memory_budget=spec.memory_budget,
@@ -91,6 +96,7 @@ def build_service(spec: ScenarioSpec, model, params) -> LLMService:
                     quant_resident=spec.quant_resident,
                     paged_pool=spec.paged_pool,
                     record_limit=spec.record_limit,
+                    swap_deadline_s=None if dl is None else float(dl),
                     swap_dir=tempfile.mkdtemp(
                         prefix=f"loadgen_{spec.name}_"))
     svc = LLMService(model, params, sc)
@@ -117,6 +123,30 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
     log = EventLog(keep=log_keep)
     io0 = io_counters()
     wall0 = time.perf_counter()
+
+    # fault plan (DESIGN.md §6): installed for the whole run, cleared on
+    # exit; disk-full windows toggle on VIRTUAL time so every injected
+    # failure — and the degraded-mode transitions it causes — lands at a
+    # seed-deterministic instant
+    fault_cfg = dict(spec.faults) if spec.faults else {}
+    windows = [(float(a), float(b))
+               for a, b in fault_cfg.get("disk_full_windows", ())]
+    if fault_cfg:
+        fspecs, fseed = plan_from_config(fault_cfg, spec.seed)
+        install_faults(fspecs, fseed)
+    else:
+        clear_faults()
+    df_on = False
+
+    def update_disk_full():
+        nonlocal df_on
+        if not windows:
+            return
+        on = any(a <= clock.t < b for a, b in windows)
+        if on != df_on:
+            df_on = on
+            set_disk_full(on)
+            log.emit("disk_full", clock.t, int(on))
 
     router = ServiceRouter(svc, predict=spec.predict, start=False,
                            slice_steps=spec.slice_steps, clock=clock,
@@ -153,6 +183,7 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
 
     def on_round(live):
         clock.advance(spec.round_s)
+        update_disk_full()
         log.emit("round", clock.t, len(live))
         inject_due()
 
@@ -168,38 +199,57 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
     router.on_preempt = on_preempt
     router.on_complete = on_complete
 
-    with router:
-        while True:
-            inject_due()
-            if router.pump(max_slices=None):
-                continue
-            if next_ev >= len(events):
-                break
-            # engine idle, nothing queued: jump to the next arrival;
-            # a long enough virtual gap lets the AoT writes complete
-            # (device-idle I/O, benchmarks/common.py regime note)
-            gap = events[next_ev].time - clock.t
-            if spec.idle_flush_s is not None and gap > spec.idle_flush_s:
-                svc.swapper.flush()
-                log.emit("flush", clock.t, gap)
-            clock.advance_to(events[next_ev].time)
+    try:
+        with router:
+            update_disk_full()
+            while True:
+                inject_due()
+                if router.pump(max_slices=None):
+                    continue
+                if next_ev >= len(events):
+                    break
+                # engine idle, nothing queued: jump to the next arrival;
+                # a long enough virtual gap lets the AoT writes complete
+                # (device-idle I/O, benchmarks/common.py regime note)
+                gap = events[next_ev].time - clock.t
+                if spec.idle_flush_s is not None and gap > spec.idle_flush_s:
+                    svc.swapper.flush(raise_errors=False)
+                    log.emit("flush", clock.t, gap)
+                clock.advance_to(events[next_ev].time)
+                update_disk_full()
 
-    # settle in-flight AoT writes BEFORE the final byte snapshot: the
-    # last swap-outs are still on the swapper threads, and counting a
-    # write depends on whether it executed yet — the one wall-clock
-    # race that would leak into an otherwise deterministic report
-    svc.swapper.flush()
-    wall_s = time.perf_counter() - wall0
-    io1 = io_counters()
-    n_stuck = sum(not s.done for s in streams)
-    n_errors = sum(s.error is not None for s in streams)
-    return build_report(
-        spec, router_stats=router.stats(), svc_stats=svc.stats(),
-        log=log, virtual_s=clock.t, wall_s=wall_s,
-        io_read=io1["read"] - io0["read"],
-        io_written=io1["write"] - io0["write"],
-        n_streams=len(streams), n_stuck=n_stuck, n_errors=n_errors,
-        mem_used=svc.mem.used)
+        # settle in-flight AoT writes BEFORE the final byte snapshot: the
+        # last swap-outs are still on the swapper threads, and counting a
+        # write depends on whether it executed yet — the one wall-clock
+        # race that would leak into an otherwise deterministic report.
+        # Errors never raise here: failed jobs were already classified
+        # and counted on the workers (fault scenarios).
+        svc.swapper.flush(raise_errors=False)
+        wall_s = time.perf_counter() - wall0
+        io1 = io_counters()
+        n_stuck = sum(not s.done for s in streams)
+        n_errors = sum(s.error is not None for s in streams)
+        n_errors_fg = sum(
+            s.error is not None
+            and parse_priority(s.request.priority) == FOREGROUND
+            for s in streams)
+        # recovery-identity probe: every decoded token, streams in
+        # admission order — two runs that recover differently (or a
+        # fault run that diverges from the fault-free run) hash apart
+        sha = hashlib.sha256()
+        for s in streams:
+            sha.update((",".join(map(str, s.tokens)) + ";").encode())
+        return build_report(
+            spec, router_stats=router.stats(), svc_stats=svc.stats(),
+            log=log, virtual_s=clock.t, wall_s=wall_s,
+            io_read=io1["read"] - io0["read"],
+            io_written=io1["write"] - io0["write"],
+            n_streams=len(streams), n_stuck=n_stuck, n_errors=n_errors,
+            n_errors_fg=n_errors_fg, tokens_sha256=sha.hexdigest(),
+            mem_used=svc.mem.used)
+    finally:
+        set_disk_full(False)
+        clear_faults()
 
 
 # --------------------------------------------------------------------- #

@@ -58,12 +58,22 @@ def _round_floats(obj: Any, ndigits: int = 9) -> Any:
     return obj
 
 
+_FAULT_KEYS = (
+    "degraded_mode", "degraded_entries", "degraded_exits",
+    "chunks_recovered_recompute", "chunks_corrupt_detected",
+    "io_errors_detected", "evict_dropped", "recover_failed",
+    "io_retries", "io_recovered", "io_failed_jobs",
+    "tmp_files_swept", "delete_errors",
+    "faults_injected_total", "faults_injected")
+
+
 def build_report(spec, *, router_stats: Dict[str, Any],
                  svc_stats: Dict[str, Any], log: EventLog,
                  virtual_s: float, wall_s: float,
                  io_read: int, io_written: int,
                  n_streams: int, n_stuck: int, n_errors: int,
-                 mem_used: int) -> Dict[str, Any]:
+                 mem_used: int, n_errors_fg: int = 0,
+                 tokens_sha256: Optional[str] = None) -> Dict[str, Any]:
     """One scenario run -> the report dict written to
     BENCH_scenarios.json.  Everything except ``wall_s`` is
     deterministic in (scenario, seed) and portable across machines."""
@@ -80,7 +90,7 @@ def build_report(spec, *, router_stats: Dict[str, Any],
         "event_log_sha256": log.sha256(),
         "events_logged": log.n,
         "streams": {"total": n_streams, "stuck": n_stuck,
-                    "errors": n_errors},
+                    "errors": n_errors, "errors_fg": n_errors_fg},
         "budget": {"memory_budget": spec.memory_budget,
                    "mem_used": mem_used,
                    "ok": mem_used <= spec.memory_budget},
@@ -97,9 +107,21 @@ def build_report(spec, *, router_stats: Dict[str, Any],
             "pool_pages16_total", "pool_pages16_used",
             "pool_pages8_total", "pool_pages8_used",
             "pool_page_faults", "pool_pt_switch_ins",
-            "pool_admit_switch_ins", "pool_reclaims")
+            "pool_admit_switch_ins", "pool_reclaims",
+            "pool_admit_fault_retries")
             if k in svc_stats},
+        "faults": {k: svc_stats[k] for k in _FAULT_KEYS
+                   if k in svc_stats},
     }
+    report["faults"]["watchdog_preempts"] = int(
+        router_stats.get("watchdog_preempts", 0))
+    report["faults"]["bg_shed"] = int(router_stats.get("bg_shed", 0))
+    if tokens_sha256 is not None:
+        # every decoded token, streams in admission order: the recovery
+        # token-identity probe (DESIGN.md §6) — identical across
+        # same-seed runs, and for 16-bit policies identical to the
+        # fault-free run of the same workload
+        report["tokens_sha256"] = tokens_sha256
     return _round_floats(report)
 
 
@@ -116,8 +138,20 @@ def gate_metrics(report: Dict[str, Any]) -> Dict[str, Any]:
         "preemptions": r.get("preemptions", 0),
         "bytes_moved_per_token": report["io"]["bytes_moved_per_token"],
         "stuck_streams": report["streams"]["stuck"],
+        "errors": report["streams"].get("errors", 0),
+        "errors_fg": report["streams"].get("errors_fg", 0),
         "budget_ok": report["budget"]["ok"],
     }
+    if "tokens_sha256" in report:
+        out["tokens_sha256"] = report["tokens_sha256"]
+    fl = report.get("faults") or {}
+    if fl.get("faults_injected_total") or fl.get("degraded_entries"):
+        for k in ("faults_injected_total", "chunks_recovered_recompute",
+                  "chunks_corrupt_detected", "recover_failed",
+                  "degraded_entries", "degraded_exits", "degraded_mode",
+                  "io_failed_jobs", "evict_dropped", "watchdog_preempts",
+                  "bg_shed"):
+            out[k] = fl.get(k, 0)
     fg = r.get("foreground")
     if fg:
         for k in ("ttft_p50_s", "ttft_p95_s", "ttft_p99_s",

@@ -24,6 +24,15 @@ LLMaaS stack is built for (paper §2: one shared model, many apps):
                     CPU in bounded wall time (uniform token source, no
                     disk throttle): the scale soak that surfaces O(n)
                     scans and unbounded retention.
+  flaky_disk        transient EIO + bit-flips + torn writes + slow IO
+                    injected into the swap tier under eviction pressure
+                    (DESIGN.md §6): every fault must be retried or
+                    recovered by recompute — zero failed foreground
+                    calls, tokens identical to the fault-free run.
+  disk_full_churn   ENOSPC windows over the churn workload: the service
+                    enters degraded mode (AoT off, background shed),
+                    keeps serving foreground via evict+recompute, and
+                    exits when the probe write succeeds.
   smoke_ci          reduced mixed scenario for the CI gate (seconds).
 
 ``get_scenario(name, **overrides)`` returns a (variant of a) library
@@ -121,6 +130,44 @@ _SPECS = (
         notes="10^4 contexts through the router on CPU under the "
               "virtual clock in ~1 min; unthrottled swap tier, uniform "
               "tokens, tiny model (the harness is the thing under test)"),
+    ScenarioSpec(
+        name="flaky_disk", seed=71,
+        n_contexts=24, n_calls=160,
+        arrival={"kind": "poisson", "rate_per_s": 2.0},
+        ctx_pattern="sweep",
+        prompt_len={"dist": "uniform", "lo": 4, "hi": 10},
+        output_len={"dist": "fixed", "n": 3},
+        apps=_FG_BG,
+        # 16-bit chunk storage: the bf16->fp16->bf16 payload roundtrip
+        # is lossless, so recompute-based recovery is BIT-EXACT and the
+        # tokens_sha256 probe must match the fault-free run (quantized
+        # tiers recover approximately — deterministic, but not
+        # token-identical; DESIGN.md §6)
+        policy="llms_nocomp",
+        memory_budget=20_000, decode_batch=2,
+        faults={"transient_eio": 0.03, "bit_flip": 0.01,
+                "torn_write": 0.01, "slow_io": 0.02, "slow_io_s": 0.002,
+                "fail_n": 1, "seed": 1234},
+        notes="seeded storage faults under eviction churn: every "
+              "injected failure is retried or recovered by recompute; "
+              "zero failed foreground calls, tokens identical to the "
+              "fault-free run"),
+    ScenarioSpec(
+        name="disk_full_churn", seed=83,
+        n_contexts=32, n_calls=192,
+        arrival={"kind": "uniform", "rate_per_s": 4.0},
+        ctx_pattern="sweep",
+        prompt_len={"dist": "fixed", "n": 6},
+        output_len={"dist": "fixed", "n": 3},
+        apps=_FG_BG,
+        policy="llms_nocomp",
+        memory_budget=20_000, decode_batch=2,
+        # the window closes well before the trace ends so the probe
+        # write succeeds and the run finishes OUT of degraded mode
+        faults={"disk_full_windows": [[10.0, 25.0]], "seed": 4321},
+        notes="ENOSPC window mid-run: enter degraded mode (AoT off, "
+              "background shed, evictions drop dirty payloads), keep "
+              "serving foreground via recompute, exit via the probe"),
     ScenarioSpec(
         name="smoke_ci", seed=7,
         n_contexts=16, n_calls=96,

@@ -21,6 +21,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, Mapping, Optional, Tuple
 
+from repro.core.faults import plan_from_config
 from repro.trace.synth import ARRIVALS, CTX_PATTERNS
 
 _PRIORITIES = ("foreground", "fg", "background", "bg")
@@ -83,6 +84,13 @@ class ScenarioSpec:
     prefill_per_token_s: float = 0.01    # charged at begin (not resume)
     switch_base_s: float = 0.2           # begin/resume fixed cost
     idle_flush_s: Optional[float] = 60.0  # virtual idle gap -> AoT flush
+    # -- fault injection (DESIGN.md §6) --------------------------------- #
+    # per-kind rates + meta knobs, validated by faults.plan_from_config:
+    #   transient_eio/persistent_eio/enospc/torn_write/bit_flip/slow_io/
+    #   pool_admit (rates), fail_n, slow_io_s, seed (defaults spec.seed),
+    #   disk_full_windows ([[t_on, t_off], ...] in VIRTUAL seconds),
+    #   swap_deadline_s (per-slice switch-in watchdog).
+    faults: Mapping[str, Any] = field(default_factory=dict)
     notes: str = ""
 
     def override(self, **kw) -> "ScenarioSpec":
@@ -96,6 +104,9 @@ class ScenarioSpec:
         d["arrival"] = dict(self.arrival)
         d["prompt_len"] = dict(self.prompt_len)
         d["output_len"] = dict(self.output_len)
+        d["faults"] = {k: (list(list(w) for w in v)
+                           if k == "disk_full_windows" else v)
+                       for k, v in self.faults.items()}
         return d
 
 
@@ -147,6 +158,19 @@ def validate_spec(spec: ScenarioSpec) -> ScenarioSpec:
         raise ValueError(f"{spec.name}: bad slice_steps/decode_batch")
     if min(spec.round_s, spec.prefill_per_token_s, spec.switch_base_s) < 0:
         raise ValueError(f"{spec.name}: cost model must be >= 0")
+    if spec.faults:
+        try:
+            plan_from_config(dict(spec.faults), spec.seed)
+        except (ValueError, TypeError) as e:
+            raise ValueError(f"{spec.name}: bad faults config: {e}") from e
+        for w in spec.faults.get("disk_full_windows", ()):
+            a, b = float(w[0]), float(w[1])
+            if not 0 <= a < b:
+                raise ValueError(f"{spec.name}: disk_full_window {w} "
+                                 "needs 0 <= t_on < t_off")
+        dl = spec.faults.get("swap_deadline_s")
+        if dl is not None and float(dl) <= 0:
+            raise ValueError(f"{spec.name}: swap_deadline_s must be > 0")
     return spec
 
 
