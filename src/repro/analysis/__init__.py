@@ -1,0 +1,38 @@
+"""Repo-specific concurrency & JIT discipline analyzer.
+
+Every layer of the LLMS stack shipped with a latent concurrency bug
+that only end-to-end load surfaced (the PR 3 AsyncSwapper
+self-deadlock, the PR 6 restore-vs-AoT ``os.replace`` race, the PR 7
+stats snapshot race, the PR 8 hung-IO requeues).  This package encodes
+those bug classes as STATIC rules over the repo's own idioms (AST
+only, stdlib only — run ``python -m repro.analysis``) plus a runtime
+complement (``analysis.runtime``: a lock-order witness, zero-cost
+unless ``LLMS_LOCK_WITNESS=1``).
+
+Checkers (DESIGN.md "Concurrency invariants"):
+
+``lock``    lock-discipline: ``*_locked`` / ``@requires_lock`` methods
+            must be called with the owning lock held; blocking
+            operations (Future.result/wait, AsyncSwapper.wait/flush,
+            DiskStore IO, jitted-entry execution, time.sleep) must not
+            run under a narrow lock; worker-pool job bodies must never
+            synchronize on pool futures (the PR 3 deadlock class);
+            chunk-file reads must be ordered behind in-flight same-key
+            AoT writes (the PR 6 race class).
+``jit``     functions passed to ``jax.jit`` must not close over
+            mutable ``self`` state or call host-side-effect functions;
+            jit-cache keys must be hashable content fingerprints —
+            never ``id(...)`` (the PR 3 cache-keying bug, as a rule).
+``shared``  attributes written by worker-thread-reachable code and
+            touched from router/dispatcher code must be written under
+            a lock or appear in the audited allowlist
+            (``analysis.config.SHARED_STATE_ALLOWLIST``).
+
+Findings diff against the committed ``analysis_baseline.json`` —
+grandfathered fingerprints don't block, new ones do (CI ``analysis``
+job).
+"""
+from repro.analysis.findings import Finding
+from repro.analysis.markers import requires_lock, requires_serialized
+
+__all__ = ["Finding", "requires_lock", "requires_serialized"]

@@ -1,0 +1,4 @@
+"""KNOWN-BAD fixture reproductions of shipped bugs, kept as analyzer
+regression tests.  Excluded from the default scan; exercised by
+``python -m repro.analysis --selftest`` and tests/test_analysis.py.
+These modules are never imported by the engine."""

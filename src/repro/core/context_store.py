@@ -16,6 +16,7 @@ import numpy as np
 from repro.core.chunks import ChunkMeta, CompressedChunk, QuantResidentChunk
 from repro.core.lifecycle import MemoryManager
 from repro.core.swap import DiskStore
+from repro.analysis.markers import requires_serialized
 
 
 @dataclass
@@ -65,6 +66,7 @@ class ContextStore:
         self.contexts: Dict[int, Context] = {}
         self._next_cid = 0
 
+    @requires_serialized
     def create(self) -> Context:
         cid = self._next_cid
         self._next_cid += 1
@@ -78,6 +80,7 @@ class ContextStore:
     def get(self, cid: int) -> Context:
         return self.contexts[cid]
 
+    @requires_serialized
     def delete(self, cid: int) -> Optional[Context]:
         """Drop a context and release every byte it holds (mem + disk).
         Refuses while a generation is in flight (possibly suspended) on
@@ -102,6 +105,7 @@ class ContextStore:
         ctx.density_sum[:len(mass)] += mass
         ctx.density_cnt[:n_visible] += 1
 
+    @requires_serialized
     def reset_for_condense(self, ctx: Context, keep: int, cs: int
                            ) -> np.ndarray:
         """Context overflow (paper §4 streaming): release all chunk state

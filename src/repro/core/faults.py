@@ -35,10 +35,12 @@ from __future__ import annotations
 import errno
 import hashlib
 import os
-import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Mapping, Optional, Set, Tuple
+
+from repro.analysis.markers import requires_lock
+from repro.analysis.runtime import witness_lock
 
 KINDS = ("transient_eio", "persistent_eio", "enospc", "torn_write",
          "bit_flip", "slow_io")
@@ -110,7 +112,7 @@ class FaultRegistry:
     disk not forced full) ⇒ every hook is a cheap no-op."""
 
     def __init__(self):
-        self._lock = threading.Lock()
+        self._lock = witness_lock("faults.registry")
         self._specs: Tuple[FaultSpec, ...] = ()
         self._seed = 0
         self._ops: Dict[Tuple[str, str], int] = {}
@@ -166,6 +168,7 @@ class FaultRegistry:
             digest_size=8).digest()
         return int.from_bytes(h, "big") / float(1 << 64)
 
+    @requires_lock("_lock")
     def _count(self, kind: str):
         self.injected[kind] = self.injected.get(kind, 0) + 1
 

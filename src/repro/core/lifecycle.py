@@ -16,6 +16,8 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Callable, Dict, Optional, Set, Tuple
 
+from repro.analysis.markers import requires_serialized
+
 Key = Tuple[int, int]              # (ctx_id, chunk_idx)
 
 # heaviest first: uncompressed, then 8-bit, 4-bit, 2-bit
@@ -76,6 +78,7 @@ class MemoryManager:
         self.queue = queue
         self._sizes: Dict[Key, int] = {}
 
+    @requires_serialized
     def register(self, key: Key, nbytes: int, level: int):
         if key in self._sizes:
             self.used -= self._sizes[key]
@@ -83,6 +86,7 @@ class MemoryManager:
         self.used += nbytes
         self.queue.touch(key, level)
 
+    @requires_serialized
     def unregister(self, key: Key):
         n = self._sizes.pop(key, None)
         if n is not None:
@@ -92,6 +96,7 @@ class MemoryManager:
     def over_budget(self, extra: int = 0) -> bool:
         return self.used + extra > self.budget
 
+    @requires_serialized
     def reclaim(self, need: int, evict: Callable[[Key], None],
                 locked: Set[int]) -> int:
         """Evict until ``need`` extra bytes fit.  ``evict`` drops the chunk

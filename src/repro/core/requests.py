@@ -23,12 +23,14 @@ no model, importable from any layer.
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Iterator, List, Optional, Sequence, Union
 
 import numpy as np
+
+from repro.analysis.markers import requires_lock
+from repro.analysis.runtime import witness_condition
 
 # Priorities live here (not scheduler.py) so requests can name them
 # without importing the router; scheduler re-exports for compat.
@@ -108,7 +110,7 @@ class GenerationStream:
         self.token_times: List[float] = []
         self.n_preempts = 0                 # times switched out mid-gen
         self._tokens: List[int] = []
-        self._cv = threading.Condition()
+        self._cv = witness_condition("requests.stream")
         self._done = False
         self._cancelled = False
         self._cancel_requested = False
@@ -124,16 +126,21 @@ class GenerationStream:
                 self.t_first_token = now
             self._cv.notify_all()
 
+    @requires_lock("_cv")
+    def _finish_locked(self, error: Optional[BaseException],
+                       cancelled: bool):
+        if self._done:
+            return
+        self._done = True
+        self._cancelled = cancelled
+        self._error = error
+        self.t_done = self._now()
+        self._cv.notify_all()
+
     def finish(self, error: Optional[BaseException] = None,
                cancelled: bool = False):
         with self._cv:
-            if self._done:
-                return
-            self._done = True
-            self._cancelled = cancelled
-            self._error = error
-            self.t_done = self._now()
-            self._cv.notify_all()
+            self._finish_locked(error, cancelled)
 
     # -- consumer side -------------------------------------------------- #
     def cancel(self) -> bool:

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.markers import requires_serialized
+from repro.analysis.runtime import witness_lock
 from repro.core import compression as comp
 from repro.core.chunks import ChunkMeta, CompressedChunk, QuantResidentChunk
 from repro.core.context_store import Context, ContextStore
@@ -150,6 +152,13 @@ class ResidencyEngine:
         # degrade (ENOSPC) -> fail.  While degraded, AoT swap-out is off
         # and eviction DROPS dirty payloads instead of persisting them;
         # a periodic probe write exits the mode once space returns.
+        # degraded-mode flags and recovery counters are written from
+        # BOTH the dispatcher and the swapper's IO threads (terminal
+        # job failures land via on_job_error): every write goes through
+        # _flags_lock.  Reads of the two mode FLAGS stay lock-free by
+        # design (monotonic-latch pattern — see the shared-state
+        # allowlist in repro/analysis/config.py).
+        self._flags_lock = witness_lock("residency.flags")
         self.aot_enabled = True
         self.degraded = False
         self.degraded_entries = 0
@@ -181,10 +190,11 @@ class ResidencyEngine:
                 f"swap read exceeded {self._deadline}s") from None
 
     def _note_read_failure(self, err: BaseException):
-        if isinstance(err, ChunkCorruptError):
-            self.chunks_corrupt_detected += 1
-        else:
-            self.io_errors_detected += 1
+        with self._flags_lock:
+            if isinstance(err, ChunkCorruptError):
+                self.chunks_corrupt_detected += 1
+            else:
+                self.io_errors_detected += 1
 
     def _on_io_error(self, key, err: BaseException):
         """AsyncSwapper terminal-failure callback (runs on an I/O
@@ -195,32 +205,38 @@ class ResidencyEngine:
             self._enter_degraded()
 
     def _enter_degraded(self):
-        if not self.degraded:
-            self.degraded = True
-            self.aot_enabled = False
-            self.degraded_entries += 1
-            self._degrade_ticks = 0
+        with self._flags_lock:
+            if not self.degraded:
+                self.degraded = True
+                self.aot_enabled = False
+                self.degraded_entries += 1
+                self._degrade_ticks = 0
 
+    @requires_serialized
     def degraded_tick(self):
         """Deterministic disk-space probe: every 4th switch-out while
         degraded, attempt a tiny write.  Success means space returned —
         re-enable AoT and flush what accumulated dirty in the interim.
         Tick-count based (not wall clock) so virtual-clock scenario runs
         replay identically."""
-        if not self.degraded:
-            return
-        self._degrade_ticks += 1
-        if self._degrade_ticks % 4:
-            return
+        with self._flags_lock:
+            if not self.degraded:
+                return
+            self._degrade_ticks += 1
+            if self._degrade_ticks % 4:
+                return
+        # probe OUTSIDE _flags_lock: the write is real (blocking) disk
+        # IO and must not stall an IO thread reporting a failure
         probe = (-3, "probe")
         try:
             self.store.write(probe, b"ok")
             self.store.delete(probe)
         except OSError:
             return
-        self.degraded = False
-        self.aot_enabled = True
-        self.degraded_exits += 1
+        with self._flags_lock:
+            self.degraded = False
+            self.aot_enabled = True
+            self.degraded_exits += 1
         if self.cfg.use_disk and self.cfg.chunked:
             for cid in sorted(self._dirty_cids):
                 ctx = self.ctxs.contexts.get(cid)
@@ -250,6 +266,7 @@ class ResidencyEngine:
     # ------------------------------------------------------------------ #
     # switch-in: restore every chunk to memory (Load primitive)
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def switch_in(self, ctx: Context):
         """-> (cache, switch_seconds).  Missing-chunk restore (reclaim +
         I/O + recompute) is the timed QoS path; resident-chunk assembly
@@ -352,6 +369,7 @@ class ResidencyEngine:
     # ------------------------------------------------------------------ #
     # paged switch-in: a page-table read plus first-admission faults
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def _switch_in_paged(self, ctx: Context) -> Tuple[None, float]:
         """Pool-mode switch-in.  Chunks whose pages survive from a
         previous residency cost NOTHING (their table entries are read at
@@ -520,6 +538,7 @@ class ResidencyEngine:
         page = int(pool._tables[ctx.cid]["p16"][i])
         return exe.read16_fn(pool.arenas, page)
 
+    @requires_serialized
     def _recover_chunk_paged(self, ctx: Context, i: int, quant_mode: bool):
         """The disk copy is missing/corrupt/unreadable after retries:
         recompute the chunk from tokens, re-encode it at its assigned
@@ -527,7 +546,8 @@ class ResidencyEngine:
         payload-roundtrip values a disk restore would have given), and
         rewrite the repaired payload to disk unless degraded."""
         if not self.exe.recomputable:
-            self.recover_failed += 1
+            with self._flags_lock:
+                self.recover_failed += 1
             raise ChunkCorruptError(
                 f"ctx {ctx.cid} chunk {i}: disk copy unreadable and "
                 f"family {self.exe.model.cfg.family!r} cannot recompute")
@@ -559,7 +579,8 @@ class ResidencyEngine:
             self._dirty_cids.add(ctx.cid)
         self.mem.register((ctx.cid, i), m.nbytes, m.bits)
         self._admit_chunk(ctx, i, quant_mode)
-        self.chunks_recovered_recompute += 1
+        with self._flags_lock:
+            self.chunks_recovered_recompute += 1
 
     def _plan_restore(self, ctx, missing: List[int]
                       ) -> Tuple[List[int], List[int]]:
@@ -574,6 +595,7 @@ class ResidencyEngine:
             io_idx = [i for i in missing if i not in set(re_idx)]
         return sorted(re_idx), sorted(io_idx)
 
+    @requires_serialized
     def _restore_chunks(self, ctx: Context, cache, re_idx: List[int],
                         io_idx: List[int]):
         """Fig. 8 restore.  dense + recompute-set: per-layer pipelined scan;
@@ -657,7 +679,8 @@ class ResidencyEngine:
         re_all = sorted(set(re_idx) | set(recovered))
         if re_all and not did_recompute:
             if recovered and not exe.recomputable:
-                self.recover_failed += 1
+                with self._flags_lock:
+                    self.recover_failed += 1
                 raise ChunkCorruptError(
                     f"ctx {ctx.cid} chunks {recovered}: disk copies "
                     f"unreadable and family "
@@ -692,7 +715,8 @@ class ResidencyEngine:
                 else:
                     m.dirty, m.on_disk = True, False
                     self._dirty_cids.add(ctx.cid)
-                self.chunks_recovered_recompute += 1
+                with self._flags_lock:
+                    self.chunks_recovered_recompute += 1
             else:
                 m.dirty = False               # already on disk
             self.mem.register((ctx.cid, i), m.nbytes, m.bits)
@@ -754,13 +778,14 @@ class ResidencyEngine:
         self.swapper.wait(key, timeout=self._deadline)
 
         def _on_retry(_k, _e):
-            self.swapper.io_retries += 1
+            self.swapper.note_retry()
 
         return with_retries(lambda: read_chunk_file(self.store._path(key)),
                             attempts=self.swapper.retries,
                             base_s=self.swapper.retry_base_s,
                             on_retry=_on_retry)
 
+    @requires_serialized
     def _mark_loaded(self, ctx, i: int, payload):
         if payload is None:
             payload = self._read_chunk((ctx.cid, i))
@@ -772,6 +797,7 @@ class ResidencyEngine:
         self.mem.register((ctx.cid, i), m.nbytes, m.bits)
 
     # -- whole-context policies (swap / lmk) ----------------------------- #
+    @requires_serialized
     def _restore_whole_timed(self, ctx: Context, cache):
         exe = self.exe
         t_switch = 0.0
@@ -795,9 +821,9 @@ class ResidencyEngine:
                 # entry and fall through to the LMK recompute branch —
                 # the whole context rebuilds from its resident text
                 self._note_read_failure(err)
-                with self.store._lock:
-                    self.store._bytes.pop((ctx.cid, -1), None)
-                self.chunks_recovered_recompute += 1
+                self.store.drop_bytes((ctx.cid, -1))
+                with self._flags_lock:
+                    self.chunks_recovered_recompute += 1
         if ctx.whole is not None:
             pass                                       # resident
         else:
@@ -904,6 +930,7 @@ class ResidencyEngine:
     # ------------------------------------------------------------------ #
     # compress + AoT swap-out (Reclaim is then free)
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def compress_and_swap_out(self, ctx: Context, cache):
         cfg = self.cfg
         if not cfg.chunked:
@@ -1016,6 +1043,7 @@ class ResidencyEngine:
             self.flush_dirty(ctx)
         self.degraded_tick()
 
+    @requires_serialized
     def flush_dirty(self, ctx: Context) -> int:
         """AoT swap-out (§3.4): asynchronously write every dirty chunk so a
         later Reclaim is free.  Also the scheduler's prediction hook: when
@@ -1036,6 +1064,7 @@ class ResidencyEngine:
             self._dirty_cids.discard(ctx.cid)
         return n
 
+    @requires_serialized
     def prepare_switch(self, predicted_cid: int) -> int:
         """Next-context prediction hint (scheduler -> §3.4 AoT swap-out):
         protect the predicted context's resident chunks in the LCTRU order
@@ -1073,7 +1102,7 @@ class ResidencyEngine:
         wall instant an IO worker would report it."""
         key = (cid, idx)
         if FAULTS.disk_full:
-            self.swapper.io_failed += 1
+            self.swapper.note_io_failure()
             self._on_io_error(key, DiskFullError(
                 f"disk full (write {key})"))
             return False
@@ -1081,14 +1110,14 @@ class ResidencyEngine:
 
         def work():
             n = write_chunk_file(path, cc, self.exe.n_layers)
-            with self.store._lock:
-                self.store._bytes[key] = n
+            self.store.set_bytes(key, n)
         self.swapper.submit(key, work)
         return True
 
     # ------------------------------------------------------------------ #
     # eviction (Reclaim primitive)
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def evict(self, key):
         cid, idx = key
         self.epoch += 1
@@ -1107,8 +1136,7 @@ class ResidencyEngine:
                     if getattr(err, "errno", None) == errno.ENOSPC:
                         self._enter_degraded()
                     self.evict_dropped += 1
-                    with self.store._lock:
-                        self.store._bytes.pop((cid, -1), None)
+                    self.store.drop_bytes((cid, -1))
             ctx.whole = None
             ctx.alive = False
             return
@@ -1125,8 +1153,7 @@ class ResidencyEngine:
                                                  self.exe.n_layers),
                         attempts=self.swapper.retries,
                         base_s=self.swapper.retry_base_s)
-                    with self.store._lock:
-                        self.store._bytes[key] = n
+                    self.store.set_bytes(key, n)
                     ok = True
                 except OSError as err:
                     if getattr(err, "errno", None) == errno.ENOSPC:
@@ -1154,6 +1181,7 @@ class ResidencyEngine:
             self.pool.free_chunk(cid, idx)
 
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
         """Paper §3.3.i: one-shot installation-time profiling of T_re/T_IO."""
         exe = self.exe

@@ -35,6 +35,8 @@ import numpy as np
 
 from repro.core.chunks import CompressedChunk, QuantResidentChunk
 from repro.core.faults import FAULTS, ChunkCorruptError, corrupt_file
+from repro.analysis.markers import requires_lock
+from repro.analysis.runtime import witness_lock
 
 # ----------------------------------------------------------------------- #
 # Disk throttle: benchmarks emulate a mobile storage tier (the paper's
@@ -55,13 +57,18 @@ def set_disk_throttle(bw_bytes_per_s=None, lat_s=0.0):
 # call site, so these counters are the ground truth for the scale
 # harness's bytes-moved-per-token metric.  Snapshot with io_counters()
 # and difference around a measured region.
-_IO_LOCK = threading.Lock()
+_IO_LOCK = witness_lock("restore.io")
 _IO = {"read": 0, "write": 0}
+
+
+@requires_lock("_IO_LOCK")
+def _bump_io_locked(kind: str, nbytes: int):
+    _IO[kind] += int(nbytes)
 
 
 def count_io(kind: str, nbytes: int):
     with _IO_LOCK:
-        _IO[kind] += int(nbytes)
+        _bump_io_locked(kind, nbytes)
 
 
 def io_counters() -> Dict[str, int]:

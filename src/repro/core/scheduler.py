@@ -62,6 +62,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
+from repro.analysis.markers import requires_lock, requires_serialized
+from repro.analysis.runtime import witness_condition, witness_rlock
+
 from repro.core.faults import SwapTimeoutError
 from repro.core.requests import (BACKGROUND, FOREGROUND,  # noqa: F401
                                  GenerationRequest, GenerationStream,
@@ -202,7 +205,7 @@ class ServiceRouter:
         self._pred_hits = 0
         self._pred_total = 0
 
-        self._cv = threading.Condition()
+        self._cv = witness_condition("scheduler.cv")
         # (prio, deadline|inf, seq, job): priority, then EDF, then FIFO.
         # Preempted jobs are re-pushed under their ORIGINAL key, so a
         # resumed stream runs ahead of later same-priority arrivals.
@@ -210,7 +213,9 @@ class ServiceRouter:
         self._seq = 0
         self._inflight = 0
         self._stop = False
-        self._svc_lock = threading.RLock()   # serializes ALL service access
+        # serializes ALL service access (the engine's concurrency
+        # model: one dispatcher at a time — analysis COARSE_LOCKS)
+        self._svc_lock = witness_rlock("scheduler.svc")
         self.started = start
         self._worker = None
         if start:
@@ -339,6 +344,7 @@ class ServiceRouter:
                     self._inflight -= 1
                     self._cv.notify_all()
 
+    @requires_lock("_cv")
     def _pop_locked(self, limit: int, active_cids: set) -> List[dict]:
         """Pop up to ``limit`` batch-compatible jobs in priority order
         (caller holds ``_cv``).  A job is skipped — left queued, order
@@ -396,6 +402,7 @@ class ServiceRouter:
         with self._cv:
             return self._pop_locked(limit, active_cids)
 
+    @requires_lock("_svc_lock")
     def _start_job(self, job, active: List[dict]) -> bool:
         """Admit one popped job into the running batch: begin (or
         resume) its generation so it holds a decode slot.  Returns True
@@ -456,6 +463,7 @@ class ServiceRouter:
             self._fail(job, e)              # fail the job AND abort dispatch
             raise
 
+    @requires_lock("_svc_lock")
     def _run_slice(self, active: List[dict], refill: bool = False):
         """One decode slice over the running batch: up to ``slice_steps``
         rounds (K=0: until every member is exhausted), each round one
@@ -514,6 +522,7 @@ class ServiceRouter:
                     self._complete(job)
             n += 1
 
+    @requires_lock("_svc_lock")
     def _rebalance(self, active: List[dict]):
         """Between slices: evict slots for strictly-higher-priority
         waiters (preemption suspends ONE generation, the rest of the
@@ -604,6 +613,7 @@ class ServiceRouter:
         system-prompt encode path)."""
         return self._run_batch([job], max_slices=max_slices, refill=False)
 
+    @requires_lock("_svc_lock")
     def _complete(self, job, cancelled: bool = False):
         """finish_call + records + prediction hook (under _svc_lock)."""
         st, stream, fut = job["state"], job["stream"], job["future"]
@@ -656,6 +666,7 @@ class ServiceRouter:
         if job["future"] is not None:
             job["future"].set_exception(err)
 
+    @requires_lock("_svc_lock")
     def _after_call(self, cid: int):
         """Feed the trace history into the §3.4 AoT swap-out hint."""
         if self.predictor is None:
@@ -667,6 +678,7 @@ class ServiceRouter:
             self.prefetch_hints += 1
             self.aot_flushes += self.svc.prepare_switch(pred)
 
+    @requires_lock("_svc_lock")
     def _sample_queue_depth(self):
         """One queue-depth sample per decode round.  The sample buffer is
         decimated deterministically (keep-every-2nd, stride doubles) once
@@ -821,6 +833,7 @@ class ServiceRouter:
                 out[name]["tbt_p99_s"] = float(np.percentile(tbts, 99))
         return out
 
+    @requires_serialized
     def reset_stats(self):
         """Clear per-call records AND the streaming accumulators (warm
         pass -> measured pass); cumulative counters restart too."""

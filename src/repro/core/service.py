@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.analysis.markers import requires_serialized
 from repro.core import compression as comp
 from repro.core.context_store import Context, ContextStore, LLMCtxStub  # noqa: F401 (re-export)
 from repro.core.executor import ModelExecutor
@@ -208,6 +209,7 @@ class LLMService:
     def n_slots(self) -> int:
         return self.exe.n_slots
 
+    @requires_serialized
     def newLLMCtx(self, system_prompt: Optional[Sequence[int]] = None
                   ) -> LLMCtxStub:
         ctx = self.ctxs.create()
@@ -216,6 +218,7 @@ class LLMService:
             self.callLLM(stub, system_prompt, max_new_tokens=0)
         return stub
 
+    @requires_serialized
     def delLLMCtx(self, stub: LLMCtxStub):
         self.ctxs.delete(stub.ctx_id)   # raises on busy: nothing changed
         # give the slot back and drop its reuse entry: a stale cache for
@@ -231,6 +234,7 @@ class LLMService:
     # ------------------------------------------------------------------ #
     # stepwise request path: begin / decode / (suspend / resume) / finish
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def begin_call(self, stub: LLMCtxStub,
                    request: GenerationRequest) -> GenerationState:
         """Admit one request on a context: condense on overflow, switch
@@ -285,12 +289,14 @@ class LLMService:
             raise
         return st
 
+    @requires_serialized
     def decode_step(self, st: GenerationState) -> Optional[int]:
         """Emit the pending token and (if budget remains) run one decode
         step to sample the next.  -> the emitted token, or None when the
         generation is exhausted."""
         return self.decode_step_batch([st])[0]
 
+    @requires_serialized
     def decode_step_batch(self, sts: Sequence[GenerationState]
                           ) -> List[Optional[int]]:
         """One decode round over up to ``decode_batch`` resident
@@ -365,6 +371,7 @@ class LLMService:
             self.ctxs.acc_density(st.ctx, mass[i], st.ctx.n_tokens)
             st.next_tok = st.sampler(logits[i])
 
+    @requires_serialized
     def suspend_call(self, st: GenerationState):
         """Preempt an in-flight generation: commit the partial result
         (compress + AoT swap-out, exactly a switch-out) and park its
@@ -380,6 +387,7 @@ class LLMService:
         st.suspended = True
         st.n_preempts += 1
 
+    @requires_serialized
     def _park(self, st: GenerationState):
         """Slot held -> idle.  Slot mode keeps the cache for exact-reuse
         resume; paged-persist mode records only the epoch — the pages
@@ -395,6 +403,7 @@ class LLMService:
         st.cache = None
         st.slot = None
 
+    @requires_serialized
     def resume_call(self, st: GenerationState):
         """Switch a suspended generation's context back in — a real,
         measured context switch (accumulated into the call's switch_s)."""
@@ -409,6 +418,7 @@ class LLMService:
             st.suspended = True
             raise
 
+    @requires_serialized
     def finish_call(self, st: GenerationState) -> List[int]:
         """Compress / AoT swap-out / reclaim (paper §3.2 + §3.4) and
         append the per-call timing record.  Safe on a suspended state
@@ -443,6 +453,7 @@ class LLMService:
             })
         return st.generated
 
+    @requires_serialized
     def _switch_in(self, st: GenerationState):
         """Claim a decode slot and switch the context in (the measured
         QoS metric): missing-state restore is timed; resident assembly
@@ -475,6 +486,7 @@ class LLMService:
     # ------------------------------------------------------------------ #
     # Table-1 compat shim: one blocking call over the stepwise path
     # ------------------------------------------------------------------ #
+    @requires_serialized
     def callLLM(self, stub: LLMCtxStub, new_prompt: Sequence[int],
                 max_new_tokens: int = 16,
                 sampling: Optional[SamplingParams] = None
@@ -489,9 +501,11 @@ class LLMService:
         return stub, st.generated
 
     # scheduler hook (§3.4 prediction-driven AoT swap-out)
+    @requires_serialized
     def prepare_switch(self, predicted_cid: int) -> int:
         return self.res.prepare_switch(predicted_cid)
 
+    @requires_serialized
     def _condense(self, ctx: Context, keep: int):
         """Context overflow: re-encode the recent tail at [0, keep)."""
         tail = self.ctxs.reset_for_condense(ctx, keep, self.exe.cs)
@@ -519,6 +533,7 @@ class LLMService:
             ctx.n_tokens = len(tail)
             self.res.compress_and_swap_out(ctx, cache)
 
+    @requires_serialized
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
         self.res.profile_pipeline(n_points)
 

@@ -19,13 +19,14 @@ from __future__ import annotations
 import os
 import pickle
 import struct
-import threading
 import time
 import zlib
 from concurrent.futures import Future, InvalidStateError, ThreadPoolExecutor
 from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Any, Callable, Dict, Optional, Tuple
 
+from repro.analysis.markers import requires_lock
+from repro.analysis.runtime import witness_lock
 from repro.core.faults import (FAULTS, ChunkCorruptError, SwapTimeoutError,
                                with_retries)
 
@@ -89,7 +90,7 @@ class DiskStore:
         self.tmp_swept = sweep_tmp_files(root)
         self.delete_errors = 0
         self._bytes: Dict[Key, int] = {}
-        self._lock = threading.Lock()
+        self._lock = witness_lock("store.bytes")
 
     def _path(self, key: Key) -> str:
         ctx, idx = key
@@ -132,7 +133,19 @@ class DiskStore:
         except OSError:
             # best-effort: a failed delete only leaks a file; the byte
             # accounting below still drops the key
-            self.delete_errors += 1
+            with self._lock:
+                self.delete_errors += 1
+        with self._lock:
+            self._bytes.pop(key, None)
+
+    def set_bytes(self, key: Key, n: int):
+        """Record ``key``'s on-disk size (accounting only — callers that
+        write through a path other than ``write()``, e.g. the chunk-file
+        envelope writers, report their byte count here)."""
+        with self._lock:
+            self._bytes[key] = n
+
+    def drop_bytes(self, key: Key):
         with self._lock:
             self._bytes.pop(key, None)
 
@@ -165,13 +178,34 @@ class AsyncSwapper:
         self.pool = ThreadPoolExecutor(max_workers=workers,
                                        thread_name_prefix="llms-io")
         self._pending: Dict[Key, Future] = {}
-        self._lock = threading.Lock()
+        self._lock = witness_lock("swap.pending")
         self._shutdown = False
         self.on_job_error: Optional[Callable[[Key, BaseException],
                                              None]] = None
         self.io_retries = 0
         self.io_recovered = 0
         self.io_failed = 0
+
+    # -- io-stat counters (shared: workers + router fault stats) -------- #
+    @requires_lock("_lock")
+    def _note_retries_locked(self, tries: int, recovered: bool = False,
+                             failed: bool = False):
+        self.io_retries += tries
+        if recovered:
+            self.io_recovered += 1
+        if failed:
+            self.io_failed += 1
+
+    def note_retry(self):
+        """One transient-IO retry observed OUTSIDE a pool job (the
+        residency layer's own retry loops report through here)."""
+        with self._lock:
+            self.io_retries += 1
+
+    def note_io_failure(self):
+        """One exhausted-retry failure observed outside a pool job."""
+        with self._lock:
+            self.io_failed += 1
 
     # -- retry wrapper (runs ON a pool worker) -------------------------- #
     def _run_job(self, key: Key, fn, args):
@@ -191,8 +225,7 @@ class AsyncSwapper:
                                on_retry=_on_retry)
         except Exception as e:
             with self._lock:
-                self.io_retries += tries
-                self.io_failed += 1
+                self._note_retries_locked(tries, failed=True)
             cb = self.on_job_error
             if cb is not None:
                 try:
@@ -201,9 +234,7 @@ class AsyncSwapper:
                     pass
             raise
         with self._lock:
-            self.io_retries += tries
-            if tries:
-                self.io_recovered += 1
+            self._note_retries_locked(tries, recovered=bool(tries))
         return out
 
     @staticmethod
@@ -284,7 +315,7 @@ class AsyncSwapper:
                                on_retry=_on_retry)
         finally:
             with self._lock:
-                self.io_retries += tries
+                self._note_retries_locked(tries)
         if tries:
             with self._lock:
                 self.io_recovered += 1

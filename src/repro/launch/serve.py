@@ -44,7 +44,7 @@ def parse_priority_mix(mix: str, n_apps: int):
             raise ValueError(mix)
     except ValueError:
         raise SystemExit(
-            f"--priority-mix must be 'FG:BG' with FG+BG > 0, got {mix!r}")
+            f"--priority-mix must be 'FG:BG' with FG+BG > 0, got {mix!r}") from None
     cycle = ["foreground"] * fg + ["background"] * bg
     return [cycle[i % len(cycle)] for i in range(n_apps)]
 

@@ -125,7 +125,7 @@ class VLMModel(DenseModel):
             ps, pc = inp
             extras_k, extras_v, dens = [], [], []
             for j in range(per):
-                pl = jax.tree.map(lambda a: a[j], ps)
+                pl = jax.tree.map(lambda a, j=j: a[j], ps)
                 x, ex = self._layer_full(pl, x, positions, window, n_sinks,
                                          want_density, return_kv)
                 if return_kv:
@@ -189,7 +189,7 @@ class VLMModel(DenseModel):
             ps, pc, k_cb, v_cb, xk, xv = inp
             k_out, v_out = [], []
             for j in range(per):
-                pl = jax.tree.map(lambda a: a[j], ps)
+                pl = jax.tree.map(lambda a, j=j: a[j], ps)
                 h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
                 q, k, v = self._qkv(pl, h)
                 q, k = self._rope(q, k, positions)

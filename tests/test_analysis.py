@@ -1,0 +1,264 @@
+"""Tier-1 tests for the concurrency/JIT discipline analyzer
+(``repro.analysis``): fixture corpus through the static checkers,
+baseline round-trip, the runtime lock-order witness, and the
+repo-clean gate the CI analysis job enforces.
+"""
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import baseline
+from repro.analysis.findings import Finding
+from repro.analysis.runner import (
+    REPO_ROOT, analyze_source, run_default)
+from repro.analysis.runtime import (
+    LockOrderError, OrderedLock, order_graph, reset_witness,
+    witness_condition, witness_lock, witness_rlock)
+
+FIXDIR = REPO_ROOT / "src" / "repro" / "analysis" / "fixtures"
+
+
+def rules(findings):
+    return sorted(f"{f.checker}/{f.rule}" for f in findings)
+
+
+def analyze(src):
+    return analyze_source(textwrap.dedent(src))
+
+
+# --------------------------------------------------------------------- #
+# static checkers: inline fixture corpus
+# --------------------------------------------------------------------- #
+
+def test_locked_call_without_lock_flagged():
+    fs = analyze("""
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+
+            def _bump_locked(self):
+                self.n += 1
+
+            def good(self):
+                with self._lock:
+                    self._bump_locked()
+
+            def bad(self):
+                self._bump_locked()
+    """)
+    assert rules(fs) == ["lock/locked-call"]
+    (f,) = fs
+    assert f.scope == "Counter.bad"
+
+
+def test_blocking_under_lock_flagged():
+    fs = analyze("""
+        import threading
+        import time
+
+        class Poller:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+            def bad(self):
+                with self._lock:
+                    time.sleep(0.01)
+
+            def good(self):
+                time.sleep(0.01)
+    """)
+    assert rules(fs) == ["lock/blocking-under-lock"]
+    assert fs[0].scope == "Poller.bad"
+
+
+def test_condition_wait_under_own_lock_allowed():
+    # Condition.wait releases the lock while blocked (allow_held)
+    fs = analyze("""
+        import threading
+
+        class Q:
+            def __init__(self):
+                self._cv = threading.Condition()
+                self.items = []
+
+            def pop(self):
+                with self._cv:
+                    while not self.items:
+                        self._cv.wait()
+                    return self.items.pop()
+    """)
+    assert "lock/blocking-under-lock" not in rules(fs)
+
+
+def test_jit_self_closure_flagged():
+    fs = analyze("""
+        import jax
+
+        class Model:
+            def __init__(self):
+                self.scale = 2.0
+                self.fn = jax.jit(lambda x: x * self.scale)
+    """)
+    assert "jit/self-in-traced-fn" in rules(fs)
+
+
+def test_jit_host_call_flagged():
+    fs = analyze("""
+        import jax
+
+        def make():
+            def step(x):
+                print(x)
+                return x + 1
+            return jax.jit(step)
+    """)
+    assert "jit/host-call-in-jit" in rules(fs)
+
+
+def test_unhashable_jit_key_flagged():
+    # the PR 3 `id(model)` cache-key bug class
+    fs = analyze("""
+        def lookup(cache, model, shape):
+            key = [id(model), shape]
+            return cache[key]
+    """)
+    assert "jit/unhashable-jit-key" in rules(fs)
+
+
+# --------------------------------------------------------------------- #
+# committed regression fixtures (also exercised by --selftest)
+# --------------------------------------------------------------------- #
+
+def test_pr3_deadlock_fixture_flagged():
+    src = (FIXDIR / "pr3_deadlock.py").read_text()
+    assert "lock/blocking-in-worker" in rules(analyze_source(src))
+
+
+def test_pr6_restore_race_fixture_flagged():
+    src = (FIXDIR / "pr6_restore_race.py").read_text()
+    fs = analyze_source(src)
+    flagged = [f for f in fs if f.rule == "unordered-store-read"]
+    assert len(flagged) == 1
+    # only the unordered variant — restore_chunk_fixed waits first
+    assert flagged[0].scope == "BadRestore.restore_chunk"
+
+
+# --------------------------------------------------------------------- #
+# baseline round-trip
+# --------------------------------------------------------------------- #
+
+def _finding(msg="blocking call under lock", line=10):
+    return Finding(checker="lock", rule="blocking-under-lock",
+                   file="src/x.py", line=line, scope="C.f", message=msg)
+
+
+def test_baseline_round_trip(tmp_path):
+    path = tmp_path / "base.json"
+    old = _finding()
+    baseline.write(path, [old])
+    known = baseline.load(path)
+    assert old.fingerprint in known
+
+    moved = _finding(line=99)          # pure code motion: same identity
+    fresh = _finding(msg="a brand-new finding")
+    new, grandfathered = baseline.diff([moved, fresh], known)
+    assert [f.message for f in grandfathered] == [moved.message]
+    assert [f.message for f in new] == [fresh.message]
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    assert baseline.load(tmp_path / "nope.json") == set()
+
+
+# --------------------------------------------------------------------- #
+# runtime lock-order witness
+# --------------------------------------------------------------------- #
+
+@pytest.fixture(autouse=True)
+def _clean_graph():
+    reset_witness()
+    yield
+    reset_witness()
+
+
+def test_ordered_lock_records_edges():
+    a, b = OrderedLock("A"), OrderedLock("B")
+    with a:
+        with b:
+            pass
+    assert "B" in order_graph().get("A", set())
+
+
+def test_ordered_lock_cycle_raises():
+    a, b = OrderedLock("A"), OrderedLock("B")
+    with a:
+        with b:
+            pass
+    with b:
+        with pytest.raises(LockOrderError):
+            a.acquire()
+        # the refused acquire must not leave state behind
+    assert "A" not in order_graph().get("B", set())
+
+
+def test_ordered_lock_reentry_no_self_edge():
+    r = OrderedLock("R", threading.RLock())
+    with r:
+        with r:
+            pass
+    assert "R" not in order_graph().get("R", set())
+
+
+def test_two_thread_inversion_detected():
+    """End-to-end: opposite-order acquisition across two threads raises
+    instead of deadlocking."""
+    a, b = OrderedLock("A"), OrderedLock("B")
+    ready = threading.Event()
+    errors = []
+
+    def t1():
+        with a:
+            with b:
+                ready.set()
+
+    def t2():
+        ready.wait(5)
+        try:
+            with b:
+                with a:
+                    pass
+        except LockOrderError as e:
+            errors.append(e)
+
+    th1, th2 = threading.Thread(target=t1), threading.Thread(target=t2)
+    th1.start()
+    th1.join(5)
+    th2.start()
+    th2.join(5)
+    assert len(errors) == 1
+    assert "inversion" in str(errors[0])
+
+
+def test_witness_env_gating(monkeypatch):
+    monkeypatch.delenv("LLMS_LOCK_WITNESS", raising=False)
+    assert not isinstance(witness_lock("x"), OrderedLock)
+    monkeypatch.setenv("LLMS_LOCK_WITNESS", "1")
+    assert isinstance(witness_lock("x"), OrderedLock)
+    assert isinstance(witness_rlock("x"), OrderedLock)
+    cv = witness_condition("x")
+    assert isinstance(cv, threading.Condition)
+    with cv:
+        cv.notify_all()
+
+
+# --------------------------------------------------------------------- #
+# the CI gate itself
+# --------------------------------------------------------------------- #
+
+def test_repo_is_clean_against_baseline():
+    new, _ = run_default()
+    assert new == [], "\n".join(f.render() for f in new)
