@@ -30,6 +30,13 @@ tokens/s.  Three bench kinds are gated (``--kind``):
     injected and recovered, zero failed foreground calls, and decoded
     tokens byte-identical to the fault-free run; disk_full_churn must
     enter AND exit degraded mode with zero failed foreground calls.
+    The ``zoo`` subsection gates the heterogeneous model zoo: the
+    mixed_zoo scenario must be same-seed deterministic with >= 3
+    families served and zero failed calls, every family's decoded
+    tokens identical to that family served solo, the MLA member's
+    8-bit quant-resident latent chunks token-identical to the
+    full-dequant leg, and its resident bytes well below the bf16
+    payload's.
 
 The committed JSONs carry a ``reduced`` section recorded with the CI
 trace size; the gate compares like against like.
@@ -115,6 +122,42 @@ def _check_faults(failures: list, report: dict, faults: dict | None):
         disk_full_exits=df.get("degraded_exits", 0))
 
 
+def _check_mixed_zoo(failures: list, report: dict, zoo: dict | None):
+    """Zoo-leg assertions (fresh run only — identity checks).  A fresh
+    JSON without the section fails: the heterogeneous-zoo leg must run."""
+    if not zoo:
+        failures.append("zoo section missing from fresh scenario bench")
+        return
+    _identity(failures, "determinism_holds", zoo)
+    _identity(failures, "solo_vs_mixed_identical", zoo)
+    served = zoo.get("families_served", {})
+    if len(served) < 3:
+        failures.append(f"mixed_zoo served {len(served)} families "
+                        f"({sorted(served)}); need >= 3")
+    if not all(served.values()):
+        failures.append(f"mixed_zoo has idle families: {served}")
+    if zoo.get("errors", 0) or zoo.get("errors_fg", 0):
+        failures.append(f"mixed_zoo failed calls: errors="
+                        f"{zoo.get('errors', 0)} "
+                        f"errors_fg={zoo.get('errors_fg', 0)}")
+    if zoo.get("stuck_streams", 0):
+        failures.append(f"mixed_zoo stuck_streams={zoo['stuck_streams']}")
+    _identity(failures, "budget_ok", zoo)
+    mla = zoo.get("mla") or {}
+    _identity(failures, "token_identical_8bit", mla)
+    ratio = mla.get("bytes_ratio_bf16_over_quant", 0.0)
+    if ratio < 1.2:
+        failures.append(
+            f"MLA quant-resident latent chunks no longer shrink resident "
+            f"bytes: bf16/quant ratio {ratio:.2f} < 1.2")
+    report.update(
+        zoo_families=sorted(served),
+        zoo_solo_vs_mixed_identical=zoo.get("solo_vs_mixed_identical",
+                                            False),
+        zoo_mla_token_identical=mla.get("token_identical_8bit", False),
+        zoo_mla_bytes_ratio=ratio)
+
+
 def check(kind: str, baseline: dict, fresh: dict, tol: float):
     base, new = section(baseline), section(fresh)
     failures: list = []
@@ -174,6 +217,7 @@ def check(kind: str, baseline: dict, fresh: dict, tol: float):
             baseline_tokens_per_round=base["tokens_per_round"],
             fresh_tokens_per_round=new["tokens_per_round"])
         _check_faults(failures, report, new.get("faults"))
+        _check_mixed_zoo(failures, report, new.get("zoo"))
     else:
         raise SystemExit(f"unknown bench kind: {kind}")
 

@@ -32,7 +32,8 @@ from benchmarks.common import bench_model
 
 from repro.loadgen import (SCENARIOS, build_service, gate_metrics,
                            get_scenario, run_scenario, write_bench)
-from repro.loadgen.driver import make_events
+from repro.loadgen.driver import (bind_apps_by_ctx, build_zoo_service,
+                                  make_events)
 from repro.loadgen.metrics import deterministic_view
 
 FULL_SET = ("steady_poisson", "fg_burst_over_bg", "diurnal_ramp",
@@ -77,6 +78,97 @@ def reduced_section() -> dict:
     out = gate_metrics(a)
     out["determinism_holds"] = (
         deterministic_view(a) == deterministic_view(b))
+    out["wall_s"] = a["wall_s"]
+    return out
+
+
+# model zoo (mixed_zoo scenario): one reduced model per family, served
+# together behind ONE router against one byte budget + swap tier.
+ZOO_ARCHS = {"dense": "llama2-7b",
+             "mla_moe": "deepseek-v2-lite-16b",
+             "rwkv6": "rwkv6-1.6b"}
+_ZOO_MODELS = {}
+
+
+def zoo_models():
+    if not _ZOO_MODELS:
+        import jax
+        from repro.configs import get_config, reduced
+        from repro.models.registry import build_model
+        for fam, arch in ZOO_ARCHS.items():
+            cfg = reduced(get_config(arch))
+            model = build_model(cfg)
+            _ZOO_MODELS[fam] = (cfg, model,
+                                model.init(jax.random.PRNGKey(0)))
+    return _ZOO_MODELS
+
+
+def zoo_section() -> dict:
+    """The heterogeneous-zoo leg: mixed_zoo twice (determinism), each
+    family once SOLO on its share of the same events (per-family token
+    identity: the shared-substrate routing must not change a single
+    decoded token), and an MLA quant-resident A/B (8-bit latent-chunk
+    token identity vs full dequant + resident-bytes drop vs bf16)."""
+    spec = get_scenario("mixed_zoo")
+    models = zoo_models()
+    vocab = min(cfg.vocab for cfg, _, _ in models.values())
+    events = bind_apps_by_ctx(make_events(spec, vocab), spec)
+    fam_by_app = {a["name"]: a["family"] for a in spec.apps}
+
+    def run(sp, fams, evs, force_dequant=False):
+        svc = build_zoo_service(
+            sp, {f: (models[f][1], models[f][2]) for f in fams})
+        with svc:
+            if force_dequant:
+                for m in svc.members.values():
+                    m.res.force_dequant = True
+            rep = run_scenario(sp, svc, vocab, events=evs)
+            stats = svc.stats()
+        return rep, stats
+
+    a, stats_a = run(spec, list(fam_by_app.values()), events)
+    b, _ = run(spec, list(fam_by_app.values()), events)
+    out = gate_metrics(a)
+    out["determinism_holds"] = (
+        deterministic_view(a) == deterministic_view(b))
+    out["families_served"] = {
+        fam: st["total_calls"] for fam, st in stats_a["families"].items()}
+    out["quant_resident_chunks"] = a["service"].get(
+        "quant_resident_chunks", 0)
+
+    # per-family solo legs on the SAME bound events, filtered by app
+    solo_sha = {}
+    for app, fam in fam_by_app.items():
+        sub = [ev for ev in events if ev.app == app]
+        rep, _ = run(spec, [fam], sub)
+        solo_sha[app] = rep["tokens_sha_by_app"][app]
+    out["solo_tokens_sha_by_app"] = solo_sha
+    out["solo_vs_mixed_identical"] = all(
+        solo_sha[app] == a["tokens_sha_by_app"][app] for app in solo_sha)
+
+    # MLA quant-resident A/B: same 8-bit latent payloads decoded as
+    # scattered int8 codes (quant leg) vs materialized bf16 (dequant
+    # leg) must be token-identical; resident bytes per context vs the
+    # 16-bit llms_nocomp payload must drop.
+    mla_app = next(app for app, f in fam_by_app.items() if f == "mla_moe")
+    sub = [ev for ev in events if ev.app == mla_app]
+    q, q_stats = run(spec, ["mla_moe"], sub)
+    d, _ = run(spec, ["mla_moe"], sub, force_dequant=True)
+    bf, bf_stats = run(spec.override(policy="llms_nocomp",
+                                     quant_resident=False),
+                       ["mla_moe"], sub)
+    rb_q = q_stats["families"]["mla_moe"]["resident_bytes"]
+    rb_bf = bf_stats["families"]["mla_moe"]["resident_bytes"]
+    nctx = max(1, q_stats["families"]["mla_moe"]["contexts"])
+    out["mla"] = {
+        "token_identical_8bit": (q["tokens_sha_by_app"][mla_app]
+                                 == d["tokens_sha_by_app"][mla_app]),
+        "resident_bytes_quant": int(rb_q),
+        "resident_bytes_bf16": int(rb_bf),
+        "resident_bytes_per_ctx_quant": rb_q // nctx,
+        "resident_bytes_per_ctx_bf16": rb_bf // nctx,
+        "bytes_ratio_bf16_over_quant": (rb_bf / rb_q) if rb_q else 0.0,
+    }
     out["wall_s"] = a["wall_s"]
     return out
 
@@ -137,6 +229,16 @@ def main():
     doc["reduced"] = reduced_section()
     print(f"reduced pair: determinism_holds="
           f"{doc['reduced']['determinism_holds']} "
+          f"({time.time() - t0:.1f}s)")
+
+    t0 = time.time()
+    doc["reduced"]["zoo"] = zoo_section()
+    z = doc["reduced"]["zoo"]
+    print(f"zoo leg: determinism={z['determinism_holds']} "
+          f"solo_vs_mixed_identical={z['solo_vs_mixed_identical']} "
+          f"families={sorted(z['families_served'])} "
+          f"mla_8bit_identical={z['mla']['token_identical_8bit']} "
+          f"mla_bytes_ratio={z['mla']['bytes_ratio_bf16_over_quant']:.2f} "
           f"({time.time() - t0:.1f}s)")
 
     t0 = time.time()

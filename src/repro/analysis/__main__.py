@@ -16,12 +16,14 @@ from repro.analysis import runner
 
 
 def _selftest() -> int:
-    """Assert the analyzer still catches the two shipped bug
-    reproductions (PR 3 pool self-deadlock, PR 6 restore race)."""
+    """Assert the analyzer still catches the shipped bug
+    reproductions (PR 3 pool self-deadlock, PR 6 restore race, and the
+    pre-PR-10 executor family-string dispatch)."""
     fixdir = Path(__file__).resolve().parent / "fixtures"
     expect = {
         "pr3_deadlock.py": ("lock", "blocking-in-worker"),
         "pr6_restore_race.py": ("lock", "unordered-store-read"),
+        "family_dispatch.py": ("family", "string-dispatch"),
     }
     failures = []
     for fname, (checker, rule) in sorted(expect.items()):
@@ -43,7 +45,7 @@ def _selftest() -> int:
     if failures:
         print(f"selftest FAILED: {', '.join(failures)}")
         return 1
-    print("selftest passed: both regression fixtures flagged")
+    print("selftest passed: all regression fixtures flagged")
     return 0
 
 

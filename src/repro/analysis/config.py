@@ -199,3 +199,21 @@ JIT_HOST_CALL_ROOTS = {"time", "os", "FAULTS", "random"}
 JIT_HOST_CALL_CHAINS = {("np", "random"), ("numpy", "random")}
 # names treated as jit-cache accessors for key-hashability checking
 JIT_CACHE_NAME_HINT = "cache"
+
+# --------------------------------------------------------------------- #
+# family dispatch (rule family/string-dispatch)
+# --------------------------------------------------------------------- #
+# The ONLY places allowed to compare `.family` strings: the registry
+# (maps family name -> model class), the spec module itself, and the
+# model/config constructors that declare each family's KVSpec.  Engine
+# code must consume the declarative spec, never the family string —
+# PR 10's api_redesign exists to keep capability knowledge out of the
+# executor/residency layers (the old core/executor.py:121/:201 gates
+# are preserved as the fixtures/family_dispatch.py reproduction).
+FAMILY_DISPATCH_ALLOWED_FILES = {
+    "src/repro/models/registry.py",
+    "src/repro/models/kvspec.py",
+}
+FAMILY_DISPATCH_ALLOWED_PREFIXES = (
+    "src/repro/configs/",    # arch tables keyed by family name
+)

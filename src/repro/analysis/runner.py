@@ -1,4 +1,4 @@
-"""Build a Program from the tree and run all three checkers.
+"""Build a Program from the tree and run all four checkers.
 
 Deliberately imports NOTHING outside the stdlib + this package: the CI
 analysis job runs it on a bare Python with no jax installed.
@@ -9,7 +9,7 @@ from pathlib import Path
 from typing import Iterable, List, Optional, Tuple
 
 from repro.analysis import baseline as baseline_mod
-from repro.analysis import jitcheck, lockcheck, sharedstate
+from repro.analysis import familycheck, jitcheck, lockcheck, sharedstate
 from repro.analysis.astpass import Program
 from repro.analysis.findings import Finding
 
@@ -49,6 +49,7 @@ def run_checks(program: Program) -> List[Finding]:
     findings = list(lock_findings)
     findings.extend(sharedstate.run(scan))
     findings.extend(jitcheck.run(program))
+    findings.extend(familycheck.run(program))
     findings.sort(key=lambda f: f.sort_key())
     return findings
 

@@ -6,10 +6,12 @@ sequence-indexed cache leaves into (T, F) blocks — T chunk tokens,
 F = flattened (layers x heads x channels) — which is the layout the
 quantizer (kernels/ref.py, kernels/chunk_quant.py) operates on.
 
-Family applicability is data-driven: ``SEQ_LEAVES`` names the cache
-leaves that grow with the token axis.  rwkv6 has none (constant-size
-state) — its context degenerates to a single state blob, handled by the
-service directly (DESIGN.md §Arch-applicability).
+Family applicability is data-driven: the codec is built from the
+family's ``KVSpec.seq_leaves`` — the cache leaves that grow with the
+token axis.  rwkv6 has none (constant-size state): its context
+degenerates to a single state blob handled by :class:`WholeStateCodec`
+(DESIGN.md §Arch-applicability).  ``SEQ_LEAVES`` remains as the legacy
+family->leaves table for pre-KVSpec callers.
 """
 from __future__ import annotations
 
@@ -71,12 +73,14 @@ class QuantResidentChunk:
 class ChunkCodec:
     """Extract / insert / (de)quantize chunks of a cache pytree."""
 
-    def __init__(self, family: str, chunk_tokens: int = 16):
-        self.leaves = SEQ_LEAVES[family]
+    def __init__(self, leaves, chunk_tokens: int = 16):
+        if isinstance(leaves, str):     # legacy: family name
+            leaves = SEQ_LEAVES[leaves]
+        self.leaves = tuple(leaves)
         self.cs = chunk_tokens
         if not self.leaves:
-            raise ValueError(f"family {family!r} has no sequence leaves; "
-                             "use whole-state management")
+            raise ValueError("cache has no sequence leaves; "
+                             "use WholeStateCodec")
         # jitted per-(bits, shape) quant/dequant
         self._q = jax.jit(kops.chunk_quantize, static_argnames=("bits",))
         self._dq = jax.jit(kops.chunk_dequantize,
@@ -250,6 +254,37 @@ class ChunkCodec:
                                                    CompressedChunk) \
             else cc_or_shapes
         return sum(int(np.prod(s)) * bytes_per_elem for s in shapes.values())
+
+
+class WholeStateCodec:
+    """Whole-state 'chunk' codec for constant-size recurrent caches
+    (``KVSpec.state_leaves`` with no ``seq_leaves``).  The context
+    degenerates to a single blob: extract/insert move the full state
+    regardless of the requested token range, so the layers above can
+    treat the blob as one chunk covering every token.  No token
+    scatter, no quant segments — those are sequence-cache notions."""
+
+    def __init__(self, leaves, chunk_tokens: int = 16):
+        self.leaves = tuple(leaves)
+        self.cs = chunk_tokens
+        if not self.leaves:
+            raise ValueError("whole-state codec needs state leaves")
+
+    def extract(self, cache, lo: int = 0, hi: int = 0) -> Dict[str, Array]:
+        return {name: cache[name] for name in self.leaves}
+
+    def insert(self, cache, lo, blocks: Dict[str, Array]):
+        new = dict(cache)
+        for name, blk in blocks.items():
+            a = cache[name]
+            new[name] = jnp.asarray(blk).reshape(a.shape).astype(a.dtype)
+        return new
+
+    def scatter(self, cache, positions, blocks):
+        raise NotImplementedError("whole-state cache has no token scatter")
+
+    def scatter_quant(self, cache, positions, codes, scales):
+        raise NotImplementedError("whole-state cache has no quant segments")
 
 
 @dataclass

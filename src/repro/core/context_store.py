@@ -9,7 +9,7 @@ the surviving token tail back to the caller for re-encoding.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 
@@ -59,17 +59,25 @@ class Context:
 class ContextStore:
     """Registry of contexts + chunk/payload/density bookkeeping."""
 
-    def __init__(self, mem: MemoryManager, store: DiskStore, s_work: int):
+    def __init__(self, mem: MemoryManager, store: DiskStore, s_work: int,
+                 cid_alloc: Optional[Callable[[], int]] = None):
         self.mem = mem
         self.store = store
         self.s_work = s_work
         self.contexts: Dict[int, Context] = {}
         self._next_cid = 0
+        # multi-executor zoo (DESIGN.md §4): stores sharing one DiskStore
+        # must not collide on cid, so the ZooService injects one shared
+        # allocator; standalone stores keep the private counter.
+        self._cid_alloc = cid_alloc
 
     @requires_serialized
     def create(self) -> Context:
-        cid = self._next_cid
-        self._next_cid += 1
+        if self._cid_alloc is not None:
+            cid = self._cid_alloc()
+        else:
+            cid = self._next_cid
+            self._next_cid += 1
         ctx = Context(
             cid=cid, tokens=np.zeros(self.s_work, np.int32),
             density_sum=np.zeros(self.s_work, np.float64),

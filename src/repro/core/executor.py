@@ -11,9 +11,17 @@ Everything above (residency, scheduler) treats this layer as "run the
 model on these tokens/positions"; nothing here knows about
 chunks-on-disk, budgets, or apps.
 
+Every capability decision here is driven by the family's declarative
+``KVSpec`` (``model.kv_spec()``): which codec slices the cache
+(``ChunkCodec`` over ``spec.seq_leaves`` vs. ``WholeStateCodec`` over
+``spec.state_leaves``), whether prompts may be bucket-padded
+(``spec.pad_safe`` — recurrent state folds pad tokens into the carry,
+so those families extend at exact length), and the
+batched/quant/paged/recompute gates.  No family string dispatch.
+
 ``extend`` (prefill) and ``decode`` (one token, one slot) are the
 stepwise slot-cache entry points; when the paged KV pool is enabled
-(``cfg.paged_pool``, dense family) the ``paged_extend``/``paged_decode``
+(``cfg.paged_pool`` + ``spec.paged``) the ``paged_extend``/``paged_decode``
 entries run the same computations directly over the global page arenas
 — per-slot page-table rows gather each context's chunks into the dense
 layout inside the jitted step, so batch membership changes cost a
@@ -36,7 +44,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.chunks import ChunkCodec
+from repro.core.chunks import ChunkCodec, WholeStateCodec
+from repro.models.kvspec import LAYOUT_MIXED, LAYOUT_WINDOW
 
 Array = jax.Array
 
@@ -115,19 +124,29 @@ class ModelExecutor:
         self.params = params
         self.cfg = cfg
         mc = model.cfg
+        spec = model.kv_spec()
+        self.spec = spec
+        if not spec.servable:
+            raise ValueError(
+                f"family {spec.family!r} is not servable: its KVSpec "
+                "declares no text-only prefill/extend entry")
         self.cs = cfg.chunk_tokens
         self.n_slots = math.ceil(cfg.max_ctx_len / self.cs) * self.cs
-        self.codec = ChunkCodec(mc.family, self.cs)
-        self.recomputable = mc.family in ("dense", "mla_moe")
+        self.chunked_cache = spec.chunkable
+        if spec.chunkable:
+            self.codec = ChunkCodec(spec.seq_leaves, self.cs)
+        else:
+            self.codec = WholeStateCodec(spec.state_leaves, self.cs)
+        self.recomputable = spec.recomputable
+        self.pad_safe = spec.pad_safe
 
         # quant-resident working cache: bf16 recent window + int8 chunk
         # segments the fused decode-attention kernels read in place
         self.quant_resident = bool(getattr(cfg, "quant_resident", False))
-        if self.quant_resident and not getattr(
-                model, "supports_quant_resident", False):
+        if self.quant_resident and not spec.quant_resident:
             raise ValueError(
-                f"family {mc.family!r} does not support the quant-resident "
-                "working cache (models opt in via supports_quant_resident)")
+                f"family {spec.family!r} does not support the quant-resident "
+                "working cache (families opt in via KVSpec.quant_resident)")
 
         # working cache: decode_batch independent slot caches (the
         # paper's working-set lock generalized to a slot table); each
@@ -135,18 +154,15 @@ class ModelExecutor:
         # paged mode the slots are page-table views into the pool and
         # decode runs one [B, 1] jitted step over gathered page rows.
         self.decode_slots = max(1, int(getattr(cfg, "decode_batch", 1) or 1))
-        self.can_batch_decode = bool(
-            getattr(model, "supports_batched_decode", False))
+        self.can_batch_decode = spec.batched_decode
         self.tok_buckets = _pow2_buckets(self.cs, self.n_slots)
         self.io_buckets = _pow2_buckets(1, max(self.n_slots // self.cs, 1))
         self.batch_buckets = _pow2_buckets(1, self.decode_slots)
         self.s_work = self.n_slots + self.tok_buckets[-1]
         self.pad_slot = self.s_work - 1
-        if self.quant_resident:
-            self.work_cache = model.init_cache(1, self.s_work,
-                                               mixed_quant=True)
-        else:
-            self.work_cache = model.init_cache(1, self.s_work)
+        self.work_cache = model.init_cache(
+            1, self.s_work,
+            layout=LAYOUT_MIXED if self.quant_resident else LAYOUT_WINDOW)
         self._zero_cache = self.work_cache
 
         self._fp = model_fingerprint(model, params)
@@ -183,23 +199,16 @@ class ModelExecutor:
                   if k in self.codec.leaves}
         self.leaf_shapes = shapes
         self.n_layers = next(iter(shapes.values()))[0]
-        if "k" in self.codec.leaves:
-            self.leaf_dims = {"k": (mc.n_kv_heads, mc.head_dim),
-                              "v": (mc.n_kv_heads, mc.head_dim)}
-        else:
-            self.leaf_dims = {"ckv": (mc.mla.kv_lora_rank,),
-                              "kpe": (mc.mla.qk_rope_head_dim,)}
+        self.leaf_dims = dict(spec.leaf_dims)
 
-        # paged KV pool: dense-family contexts decode as views into one
-        # global page arena instead of owning slot caches.  Other
-        # families (rwkv6, encdec, vlm, mla_moe) keep the slot path —
-        # their cache layouts either aren't chunk-paged (recurrent
-        # state) or override the dense decode entry points.
+        # paged KV pool: contexts whose spec declares ``paged`` decode
+        # as views into one global page arena instead of owning slot
+        # caches.  Families without the capability (recurrent state,
+        # overridden decode entries) keep the slot path.
         self.paged = (
             bool(getattr(cfg, "paged_pool", False))
             and bool(getattr(cfg, "chunked", False))
-            and mc.family == "dense"
-            and bool(getattr(model, "supports_paged_pool", False))
+            and spec.paged
             and self.can_batch_decode
             and self.s_work % self.cs == 0)
         self.pages_per_ctx = self.s_work // self.cs
@@ -319,8 +328,13 @@ class ModelExecutor:
         logits, per-position density mass)."""
         M = len(prompt)
         pos = np.arange(n0, n0 + M, dtype=np.int32)
-        pos_b = self.bucket_pad(pos, self.pad_slot)
-        toks_b = self.bucket_pad(prompt, 0)
+        if self.pad_safe:
+            pos_b = self.bucket_pad(pos, self.pad_slot)
+            toks_b = self.bucket_pad(np.asarray(prompt, np.int32), 0)
+        else:
+            # recurrent carry: a pad token would fold into the state —
+            # run at exact length (one retrace per distinct length)
+            pos_b, toks_b = pos, np.asarray(prompt, np.int32)
         cache, hidden, dens = self.extend_fn(
             self.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
             cache, jnp.int32(n0 + M))

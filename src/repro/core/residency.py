@@ -133,6 +133,12 @@ class ResidencyEngine:
         self.profile = PipelineProfile()
         self.profiled = False
         self.epoch = 0                      # bumped on any eviction
+        # multi-family routing hook (core/zoo.py): when several engines
+        # share one MemoryManager/LCTRUQueue, a reclaim started by one
+        # member may pick a victim chunk owned by another.  Keys whose
+        # context is unknown HERE are forwarded to the owner through
+        # this callable instead of being silently dropped.
+        self.route_evict: Optional[Callable[[Tuple[int, int]], None]] = None
         # contexts that may hold dirty (unflushed) chunks: the §3.4
         # prediction hook flushes ONLY these instead of scanning every
         # context (the scan was O(total contexts) per completed call —
@@ -277,7 +283,9 @@ class ResidencyEngine:
         cache = exe.fresh_cache(ctx.n_tokens)
         if ctx.n_tokens == 0:
             return cache, 0.0
-        if not self.cfg.chunked:
+        if not self.cfg.chunked or not exe.chunked_cache:
+            # whole-state families (constant-size recurrent caches)
+            # degenerate to snapshot/restore regardless of policy
             return self._restore_whole_timed(ctx, cache)
 
         # ---- assembly of resident chunks (inference-side cost) -------- #
@@ -610,7 +618,7 @@ class ResidencyEngine:
         recovered: List[int] = []            # unreadable -> recomputed
         pending_io = list(io_idx)
         did_recompute = False
-        use_pipe = (bool(re_idx) and exe.model.cfg.family == "dense")
+        use_pipe = (bool(re_idx) and exe.spec.pipelined_restore)
         if use_pipe:
             # pre-validate the feed's files: the scan reads them deep
             # inside jax io_callbacks where a corrupt file aborts the
@@ -831,8 +839,12 @@ class ResidencyEngine:
             t0 = time.perf_counter()
             self.mem.reclaim(0, self.evict, locked={ctx.cid})
             pos = np.arange(ctx.n_tokens, dtype=np.int32)
-            pos_b = exe.bucket_pad(pos, exe.pad_slot)
-            toks_b = exe.bucket_pad(ctx.tokens[:ctx.n_tokens], 0)
+            if exe.pad_safe:
+                pos_b = exe.bucket_pad(pos, exe.pad_slot)
+                toks_b = exe.bucket_pad(ctx.tokens[:ctx.n_tokens], 0)
+            else:
+                # recurrent carry: pads would fold into the state
+                pos_b, toks_b = pos, ctx.tokens[:ctx.n_tokens]
             cache, _, dens = exe.extend_fn(
                 exe.params, jnp.asarray(toks_b)[None], jnp.asarray(pos_b),
                 exe.setpos_fn(cache, jnp.int32(0)), jnp.int32(ctx.n_tokens))
@@ -851,9 +863,15 @@ class ResidencyEngine:
         return exe.setpos_fn(cache, jnp.int32(ctx.n_tokens)), t_switch
 
     def _extract_whole(self, cache, n_tokens: int) -> Dict[str, np.ndarray]:
-        hi = self.exe.bucket_len(n_tokens)
-        return {k: np.asarray(v, np.float16)
-                for k, v in self.exe.codec.extract(cache, 0, hi).items()}
+        hi = self.exe.bucket_len(max(n_tokens, 1))
+        out = {}
+        for k, v in self.exe.codec.extract(cache, 0, hi).items():
+            # 16-bit floats snapshot as fp16; fp32 state stays exact —
+            # rwkv6's wkv recurrence is fp32 by design, and halving it
+            # would perturb every continued decode
+            dt = np.float32 if v.dtype == jnp.float32 else np.float16
+            out[k] = np.asarray(v, dt)
+        return out
 
     def _whole_bytes(self, ctx) -> int:
         return sum(v.nbytes for v in (ctx.whole or {}).values())
@@ -933,7 +951,7 @@ class ResidencyEngine:
     @requires_serialized
     def compress_and_swap_out(self, ctx: Context, cache):
         cfg = self.cfg
-        if not cfg.chunked:
+        if not cfg.chunked or not self.exe.chunked_cache:
             ctx.whole = self._extract_whole(cache, ctx.n_tokens)
             ctx.whole_tokens = ctx.n_tokens
             self.mem.register((ctx.cid, -1), self._whole_bytes(ctx), 16)
@@ -951,6 +969,10 @@ class ResidencyEngine:
         else:
             D = np.zeros(n_chunks)
             bits = np.full(n_chunks, 16, np.int64)
+        # the family's Eq.-3 floor: MLA latents / VLM image chunks carry
+        # no cross-head redundancy, so the planner never drops them
+        # below KVSpec.min_bits however low their measured density
+        bits = np.maximum(bits, self.exe.spec.min_bits)
 
         for i in range(n_chunks):
             m = ctx.chunks.get(i)
@@ -1120,6 +1142,11 @@ class ResidencyEngine:
     @requires_serialized
     def evict(self, key):
         cid, idx = key
+        if self.route_evict is not None and cid not in self.ctxs.contexts:
+            # shared-budget reclaim picked another family's chunk: hand
+            # the key to its owning engine (which bumps ITS epoch)
+            self.route_evict(key)
+            return
         self.epoch += 1
         ctx = self.ctxs.contexts.get(cid)
         if ctx is None:
@@ -1185,8 +1212,8 @@ class ResidencyEngine:
     def profile_pipeline(self, n_points: Tuple[int, ...] = (1, 2, 4)):
         """Paper §3.3.i: one-shot installation-time profiling of T_re/T_IO."""
         exe = self.exe
-        if not exe.recomputable:
-            return
+        if not (exe.recomputable and exe.chunked_cache):
+            return          # pipeline planning is a chunk-restore notion
         toks = np.ones(exe.n_slots, np.int32)
         cache = exe.fresh_cache(0)
         xs, ts = [], []

@@ -106,10 +106,14 @@ class NextContextPredictor:
 class AppSession:
     """Per-app handle: all service access goes through the router."""
 
-    def __init__(self, router: "ServiceRouter", name: str, priority: int):
+    def __init__(self, router: "ServiceRouter", name: str, priority: int,
+                 family: Optional[str] = None):
         self.router = router
         self.name = name
         self.priority = priority
+        # model family this app's contexts bind to (zoo routing); None
+        # keeps the single-model service's default
+        self.family = family
 
     def new_ctx(self, system_prompt=None):
         return self.router.new_ctx(self, system_prompt=system_prompt)
@@ -224,8 +228,10 @@ class ServiceRouter:
             self._worker.start()
 
     # -- app/session management ---------------------------------------- #
-    def register_app(self, name: str, priority="foreground") -> AppSession:
-        sess = AppSession(self, name, parse_priority(priority))
+    def register_app(self, name: str, priority="foreground",
+                     family: Optional[str] = None) -> AppSession:
+        sess = AppSession(self, name, parse_priority(priority),
+                          family=family)
         self.sessions[name] = sess
         return sess
 
@@ -234,7 +240,9 @@ class ServiceRouter:
         router's dispatch path (inline, ahead of the queue) so
         ``call_records`` and the §3.4 predictor observe it."""
         with self._svc_lock:
-            stub = self.svc.newLLMCtx()
+            kw = ({"family": session.family}
+                  if getattr(session, "family", None) else {})
+            stub = self.svc.newLLMCtx(**kw)
         if system_prompt is not None and len(system_prompt):
             req = GenerationRequest(prompt=list(system_prompt),
                                     max_new_tokens=0)

@@ -71,7 +71,7 @@ class LLMSConfig:
     # kernel), instead of materializing bf16 copies at switch-in.
     # 8-bit (Eq. 3) chunks become directly decodable payloads; 4/2-bit
     # chunks stay packed and re-grid behind the same kernel.  Requires a
-    # chunked policy and a family with supports_quant_resident.
+    # chunked policy and a family whose KVSpec declares quant_resident.
     quant_resident: bool = False
     # paged, unified KV pool (DESIGN.md §1/§4): dense-family contexts
     # decode as page-table views into one global chunk-granular page
@@ -157,20 +157,38 @@ class GenerationState:
 class LLMService:
     """One shared model + per-app persistent contexts (LLMaaS)."""
 
-    def __init__(self, model: ModelBase, params, cfg: LLMSConfig):
+    def __init__(self, model: ModelBase, params, cfg: LLMSConfig, *,
+                 store: Optional[DiskStore] = None,
+                 swapper: Optional[AsyncSwapper] = None,
+                 queue: Optional[LCTRUQueue] = None,
+                 mem: Optional[MemoryManager] = None,
+                 cid_alloc: Any = None,
+                 records: Any = None):
+        # the keyword-only substrate arguments let a ZooService run
+        # several family executors against ONE disk store / swapper /
+        # LCTRU queue / byte budget / cid space / records stream
+        # (DESIGN.md §4); standalone construction builds private ones.
         self.model, self.params, self.cfg = model, params, cfg
         self.exe = ModelExecutor(model, params, cfg)
-        root = cfg.swap_dir or tempfile.mkdtemp(prefix="llms_swap_")
-        self.store = DiskStore(root)
-        self.swapper = AsyncSwapper(self.store, retries=cfg.io_retries,
-                                    retry_base_s=cfg.io_retry_base_s)
-        self.queue = LCTRUQueue(lru_only=not cfg.use_lctru)
-        self.mem = MemoryManager(cfg.memory_budget, self.queue)
-        self.ctxs = ContextStore(self.mem, self.store, self.exe.s_work)
+        if store is None:
+            root = cfg.swap_dir or tempfile.mkdtemp(prefix="llms_swap_")
+            store = DiskStore(root)
+        self.store = store
+        self._owns_swapper = swapper is None
+        self.swapper = swapper if swapper is not None else AsyncSwapper(
+            self.store, retries=cfg.io_retries,
+            retry_base_s=cfg.io_retry_base_s)
+        self.queue = (queue if queue is not None
+                      else LCTRUQueue(lru_only=not cfg.use_lctru))
+        self.mem = (mem if mem is not None
+                    else MemoryManager(cfg.memory_budget, self.queue))
+        self.ctxs = ContextStore(self.mem, self.store, self.exe.s_work,
+                                 cid_alloc=cid_alloc)
         self.res = ResidencyEngine(self.exe, self.ctxs, self.store,
                                    self.swapper, self.queue, self.mem, cfg)
-        self.records: Any = (deque(maxlen=cfg.record_limit)
-                             if cfg.record_limit else [])
+        self.records: Any = (records if records is not None
+                             else (deque(maxlen=cfg.record_limit)
+                                   if cfg.record_limit else []))
         self.total_calls = 0                  # cumulative (records may be
         self._t_switch_sum = 0.0              # a bounded window)
         # cid -> (cache, epoch) of parked decode slots: working-cache
@@ -600,7 +618,8 @@ class LLMService:
         if self._closed:
             return
         self._closed = True
-        self.swapper.shutdown(timeout=self.cfg.swap_deadline_s)
+        if self._owns_swapper:      # a zoo shuts the shared swapper once
+            self.swapper.shutdown(timeout=self.cfg.swap_deadline_s)
 
     def __enter__(self) -> "LLMService":
         return self

@@ -130,7 +130,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         return (fn, (state_struct, kwargs["batch"]),
                 (ns(s_specs), ns(b_specs)), (ns(s_specs), None)), note
     if entry == "prefill":
-        want_density = cfg.family != "rwkv6"
+        want_density = model.kv_spec().density
         fn = functools.partial(model.prefill, want_density=want_density,
                                window=window, n_sinks=sinks)
         b_specs = batch_pspecs(kwargs["batch"], dp)
@@ -143,7 +143,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     if decode_sharding == "stationary":
         p_specs = param_pspecs(cfg, params_struct, mode="decode")
     cache_struct = kwargs["cache"]
-    if kv_dtype == "int8" and cfg.family in ("dense", "moe", "vlm"):
+    if kv_dtype == "int8" and model.kv_spec().int8_serving:
         cache_struct = model.cache_specs(shape, dtype=jnp.int8)
     c_specs = cache_pspecs(cfg, cache_struct, shape, dp)
     return (fn, (params_struct, kwargs["tokens"], cache_struct),

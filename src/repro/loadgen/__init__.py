@@ -7,7 +7,8 @@ metrics/report layer (DESIGN.md "Scale harness").
              wall-clock trace replay (replay_trace)
   metrics    deterministic EventLog (sha256 probe) + report/gate JSON
 """
-from repro.loadgen.driver import (VirtualClock, build_service,  # noqa: F401
+from repro.loadgen.driver import (VirtualClock, bind_apps_by_ctx,  # noqa: F401
+                                  build_service, build_zoo_service,
                                   make_events, replay_trace, run_scenario)
 from repro.loadgen.metrics import (EventLog, build_report,  # noqa: F401
                                    gate_metrics, write_bench)

@@ -35,6 +35,7 @@ from repro.core.restore import io_counters, set_disk_throttle
 from repro.core.requests import FOREGROUND
 from repro.core.scheduler import ServiceRouter, parse_priority
 from repro.core.service import LLMSConfig, LLMService
+from repro.core.zoo import ZooService
 from repro.loadgen.metrics import EventLog, build_report
 from repro.loadgen.spec import ScenarioSpec
 from repro.trace.synth import TraceEvent, synthesize_mixed
@@ -105,7 +106,51 @@ def build_service(spec: ScenarioSpec, model, params) -> LLMService:
     return svc
 
 
-def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
+def build_zoo_service(spec: ScenarioSpec,
+                      models: Dict[str, Tuple[Any, Any]]) -> ZooService:
+    """A multi-family ``ZooService`` under test: one member per entry of
+    ``models`` (family -> (model, params)), every member configured from
+    the spec but sharing ONE byte budget / swap tier / eviction order.
+    Per-member capability knobs derive from each family's KVSpec —
+    ``quant_resident`` only lands on families that declare it."""
+    if spec.disk_bw is None:
+        set_disk_throttle(None)
+    else:
+        set_disk_throttle(spec.disk_bw, spec.disk_lat)
+    dl = spec.faults.get("swap_deadline_s") if spec.faults else None
+    members: Dict[str, Tuple[Any, Any, LLMSConfig]] = {}
+    for fam, (model, params) in models.items():
+        sc = LLMSConfig(
+            policy=spec.policy, max_ctx_len=spec.max_ctx_len,
+            chunk_tokens=spec.chunk_tokens,
+            memory_budget=spec.memory_budget,
+            decode_batch=spec.decode_batch,
+            quant_resident=(spec.quant_resident
+                            and model.kv_spec().quant_resident),
+            paged_pool=spec.paged_pool,
+            swap_deadline_s=None if dl is None else float(dl))
+        members[fam] = (model, params, sc)
+    return ZooService(members, memory_budget=spec.memory_budget,
+                      swap_dir=tempfile.mkdtemp(
+                          prefix=f"loadgen_{spec.name}_"))
+
+
+def bind_apps_by_ctx(events: List[TraceEvent],
+                     spec: ScenarioSpec) -> List[TraceEvent]:
+    """Deterministically rebind every event to the app that owns its
+    context (ctx_id modulo the app list), so each context's calls all
+    belong to ONE app — the precondition for the per-family
+    solo-vs-mixed token-identity probe (mixed_zoo gate): filtering the
+    bound events by app yields exactly that family's workload."""
+    apps = [dict(a) for a in spec.apps]
+    for ev in events:
+        a = apps[ev.ctx_id % len(apps)]
+        ev.app = str(a["name"])
+        ev.priority = str(a.get("priority", "foreground"))
+    return events
+
+
+def run_scenario(spec: ScenarioSpec, svc: Any, vocab: int, *,
                  log_keep: Optional[int] = 4096,
                  events: Optional[List[TraceEvent]] = None
                  ) -> Dict[str, Any]:
@@ -152,9 +197,11 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
                            slice_steps=spec.slice_steps, clock=clock,
                            record_limit=spec.record_limit)
     sessions = {a["name"]: router.register_app(
-        a["name"], a.get("priority", "foreground")) for a in spec.apps}
+        a["name"], a.get("priority", "foreground"),
+        family=a.get("family")) for a in spec.apps}
     stubs: Dict[int, Any] = {}
     streams: List[Any] = []
+    stream_apps: List[str] = []
     next_ev = 0
 
     def inject_due():
@@ -171,6 +218,7 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
                 streams.append(sess.stream(
                     stubs[ev.ctx_id], ev.prompt.tolist(),
                     max_new_tokens=ev.max_new, priority=ev.priority))
+            stream_apps.append(ev.app)
             log.emit("arrive", ev.time, ev.ctx_id, ev.priority, ev.app)
 
     def on_begin(job, resumed):
@@ -239,6 +287,11 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
         sha = hashlib.sha256()
         for s in streams:
             sha.update((",".join(map(str, s.tokens)) + ";").encode())
+        # per-app split of the same probe: the mixed_zoo gate compares
+        # each app's hash against the family served SOLO at the same seed
+        by_app = {a["name"]: hashlib.sha256() for a in spec.apps}
+        for s, app in zip(streams, stream_apps):
+            by_app[app].update((",".join(map(str, s.tokens)) + ";").encode())
         return build_report(
             spec, router_stats=router.stats(), svc_stats=svc.stats(),
             log=log, virtual_s=clock.t, wall_s=wall_s,
@@ -246,6 +299,8 @@ def run_scenario(spec: ScenarioSpec, svc: LLMService, vocab: int, *,
             io_written=io1["write"] - io0["write"],
             n_streams=len(streams), n_stuck=n_stuck, n_errors=n_errors,
             n_errors_fg=n_errors_fg, tokens_sha256=sha.hexdigest(),
+            tokens_sha_by_app={k: v.hexdigest()
+                               for k, v in by_app.items()},
             mem_used=svc.mem.used)
     finally:
         set_disk_full(False)

@@ -73,7 +73,9 @@ def build_report(spec, *, router_stats: Dict[str, Any],
                  io_read: int, io_written: int,
                  n_streams: int, n_stuck: int, n_errors: int,
                  mem_used: int, n_errors_fg: int = 0,
-                 tokens_sha256: Optional[str] = None) -> Dict[str, Any]:
+                 tokens_sha256: Optional[str] = None,
+                 tokens_sha_by_app: Optional[Dict[str, str]] = None
+                 ) -> Dict[str, Any]:
     """One scenario run -> the report dict written to
     BENCH_scenarios.json.  Everything except ``wall_s`` is
     deterministic in (scenario, seed) and portable across machines."""
@@ -122,6 +124,10 @@ def build_report(spec, *, router_stats: Dict[str, Any],
         # same-seed runs, and for 16-bit policies identical to the
         # fault-free run of the same workload
         report["tokens_sha256"] = tokens_sha256
+    if tokens_sha_by_app is not None:
+        # per-app split of the probe: with contexts bound to apps (zoo
+        # scenarios) each app's hash must match its family served solo
+        report["tokens_sha_by_app"] = dict(tokens_sha_by_app)
     return _round_floats(report)
 
 
@@ -144,6 +150,8 @@ def gate_metrics(report: Dict[str, Any]) -> Dict[str, Any]:
     }
     if "tokens_sha256" in report:
         out["tokens_sha256"] = report["tokens_sha256"]
+    if "tokens_sha_by_app" in report:
+        out["tokens_sha_by_app"] = report["tokens_sha_by_app"]
     fl = report.get("faults") or {}
     if fl.get("faults_injected_total") or fl.get("degraded_entries"):
         for k in ("faults_injected_total", "chunks_recovered_recompute",

@@ -33,6 +33,10 @@ LLMaaS stack is built for (paper §2: one shared model, many apps):
                     enters degraded mode (AoT off, background shed),
                     keeps serving foreground via evict+recompute, and
                     exits when the probe write succeeds.
+  mixed_zoo         three model families (dense + MLA latent + RWKV6
+                    constant state) behind ONE ServiceRouter sharing a
+                    single byte budget and swap tier (ZooService);
+                    per-family tokens must match each family solo.
   smoke_ci          reduced mixed scenario for the CI gate (seconds).
 
 ``get_scenario(name, **overrides)`` returns a (variant of a) library
@@ -168,6 +172,40 @@ _SPECS = (
         notes="ENOSPC window mid-run: enter degraded mode (AoT off, "
               "background shed, evictions drop dirty payloads), keep "
               "serving foreground via recompute, exit via the probe"),
+    ScenarioSpec(
+        name="mixed_zoo", seed=91,
+        n_contexts=9, n_calls=18,
+        arrival={"kind": "uniform", "rate_per_s": 2.0},
+        # sweep + n_calls = 2*n_contexts: every context is touched
+        # exactly twice, so the second call restores the first call's
+        # compressed state — the MLA member's quant-resident latent
+        # chunks are actually exercised, not just created.  Contexts
+        # are bound to apps by driver.bind_apps_by_ctx (ctx_id mod 3),
+        # so each app's token hash is comparable against its family
+        # served SOLO at the same seed (tokens_sha_by_app).
+        ctx_pattern="sweep",
+        prompt_len={"dist": "uniform", "lo": 4, "hi": 8},
+        output_len={"dist": "fixed", "n": 3},
+        # all-foreground: equal priority means no preemption, so every
+        # generation runs begin -> decode -> finish uninterrupted and
+        # the solo-vs-mixed identity is a statement about the zoo's
+        # shared-substrate routing, not about preemption timing
+        apps=(
+            {"name": "chat", "priority": "foreground", "weight": 1.0,
+             "family": "dense"},
+            {"name": "scholar", "priority": "foreground", "weight": 1.0,
+             "family": "mla_moe"},
+            {"name": "agent", "priority": "foreground", "weight": 1.0,
+             "family": "rwkv6"},
+        ),
+        decode_batch=2, slice_steps=8,
+        memory_budget=60_000, max_ctx_len=64,
+        quant_resident=True, paged_pool=False,
+        model_profile="reduced", profile=False,
+        notes="three families (dense + MLA latent + RWKV6 constant "
+              "state) behind ONE router against one byte budget and "
+              "one swap tier; per-family tokens must equal each family "
+              "served solo at the same seed"),
     ScenarioSpec(
         name="smoke_ci", seed=7,
         n_contexts=16, n_calls=96,

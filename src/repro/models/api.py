@@ -6,9 +6,28 @@ Every family implements:
   init(key) -> params                        (pytree of stacked-layer arrays)
   loss(params, batch) -> (scalar, metrics)   (next-token CE; remat inside)
   prefill(params, batch, want_density) -> PrefillOut
-  decode_step(params, tokens, cache) -> DecodeOut
-  init_cache(batch, seq, dtype) -> cache     (pytree incl. integer 'pos')
+  decode_step(params, tokens, cache, ..., want_density) -> DecodeOut
+  kv_spec() -> KVSpec                        (declarative cache adapter)
+  _build_cache(batch, seq, dtype, layout) -> cache  (pytree incl. 'pos')
   input_specs(shape) -> (entry_name, kwargs of ShapeDtypeStruct)
+
+**The cache adapter protocol.**  ``kv_spec()`` returns the family's
+:class:`~repro.models.kvspec.KVSpec`: cache leaf names/dims, chunkability,
+recompute/batched/paged/quant capabilities, tolerance class and
+compression floor for the Eq.-3 planner, and constant-size recurrent
+state.  The serving layers consume ONLY the spec — there is no family
+string dispatch and no per-family ``init_cache`` fork.  ``init_cache``
+is concrete here: it validates the requested ``layout`` against
+``spec.layouts`` (clean ``ValueError`` for undeclared capabilities),
+applies ``spec.clamp_to_max_seq``, and delegates the allocation to the
+family's ``_build_cache``.
+
+The legacy ``supports_batched_decode`` / ``supports_quant_resident`` /
+``supports_paged_pool`` class booleans are deprecation shims for one
+release: reading them emits ``DeprecationWarning`` and answers from the
+spec; an external family that still defines them as plain class
+attributes gets a spec synthesized from those booleans by the default
+``kv_spec()``.
 
 Layer parameters are STACKED on a leading axis and consumed by
 ``jax.lax.scan`` so the lowered HLO stays one-layer-sized regardless of
@@ -21,12 +40,14 @@ ShapeDtypeStruct cache without allocating it.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.kvspec import KVSpec, LAYOUT_MIXED, LAYOUT_WINDOW
 
 Array = jax.Array
 PyTree = Any
@@ -59,24 +80,100 @@ def cross_entropy(logits: Array, targets: Array, mask: Optional[Array] = None
     return loss, {"loss": loss, "acc": acc}
 
 
+class _LegacyCapabilityFlag:
+    """Deprecation shim: ``model.supports_*`` reads answer from the
+    KVSpec and warn.  Subclasses that still assign a plain bool shadow
+    the descriptor — the default ``kv_spec()`` picks those up."""
+
+    def __init__(self, name: str, getter):
+        self.name = name
+        self.getter = getter
+
+    def __get__(self, obj, objtype=None):
+        warnings.warn(
+            f"{self.name} is deprecated; query model.kv_spec() (or "
+            "registry.family_spec(cfg)) instead", DeprecationWarning,
+            stacklevel=2)
+        if obj is None:
+            return False
+        return self.getter(obj.kv_spec())
+
+
+def _legacy_flag(cls: type, name: str) -> bool:
+    """A plain-bool ``supports_*`` override on a subclass (pre-KVSpec
+    external family), skipping ModelBase's descriptors."""
+    for klass in cls.__mro__:
+        if klass is ModelBase:
+            break
+        val = klass.__dict__.get(name)
+        if isinstance(val, bool):
+            return val
+    return False
+
+
 class ModelBase:
     """Common plumbing; families override the layer stack."""
 
-    # True when ``decode_step`` accepts a cache whose ``pos`` leaf is a
-    # (B,) vector of per-row positions (each batch row an independent
-    # decode slot).  Families opt in once their cache update / attention
-    # handle per-row offsets; the executor falls back to a serial loop
-    # over slots otherwise.
-    supports_batched_decode = False
-
-    # True when ``init_cache(mixed_quant=True)`` builds a mixed-precision
-    # working cache (bf16 window + int8 quant-resident segments with
-    # per-(token, kv-head) scales + quant_mask) and ``decode_step`` /
-    # ``recompute`` attend through it (DESIGN.md §2 quant-resident tier).
-    supports_quant_resident = False
+    # deprecation shims (one release): reads warn and proxy to kv_spec()
+    supports_batched_decode = _LegacyCapabilityFlag(
+        "supports_batched_decode", lambda s: s.batched_decode)
+    supports_quant_resident = _LegacyCapabilityFlag(
+        "supports_quant_resident", lambda s: s.quant_resident)
+    supports_paged_pool = _LegacyCapabilityFlag(
+        "supports_paged_pool", lambda s: s.paged)
 
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+
+    # -- cache adapter ------------------------------------------------- #
+    def kv_spec(self) -> KVSpec:
+        """The family's declarative cache descriptor.  The default
+        synthesizes a dense-shaped spec from legacy ``supports_*`` class
+        booleans so external pre-KVSpec families keep working; every
+        in-tree family overrides this."""
+        cfg = self.cfg
+        return KVSpec(
+            family=cfg.family,
+            seq_leaves=("k", "v"),
+            leaf_dims={"k": (cfg.n_kv_heads, cfg.head_dim),
+                       "v": (cfg.n_kv_heads, cfg.head_dim)},
+            servable=hasattr(self, "recompute"),
+            chunkable=True,
+            recomputable=hasattr(self, "recompute"),
+            batched_decode=_legacy_flag(type(self),
+                                        "supports_batched_decode"),
+            quant_resident=_legacy_flag(type(self),
+                                        "supports_quant_resident"),
+            paged=_legacy_flag(type(self), "supports_paged_pool"),
+            layouts=((LAYOUT_WINDOW, LAYOUT_MIXED)
+                     if _legacy_flag(type(self), "supports_quant_resident")
+                     else (LAYOUT_WINDOW,)),
+        )
+
+    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16,
+                   layout: str = LAYOUT_WINDOW,
+                   mixed_quant: Optional[bool] = None) -> PyTree:
+        """Allocate a decode cache.  ``layout`` must be declared in
+        ``kv_spec().layouts``; the legacy ``mixed_quant=`` kwarg maps to
+        ``layout="mixed"`` with a DeprecationWarning."""
+        if mixed_quant is not None:
+            warnings.warn(
+                "init_cache(mixed_quant=...) is deprecated; pass "
+                "layout='mixed' / layout='window'", DeprecationWarning,
+                stacklevel=2)
+            layout = LAYOUT_MIXED if mixed_quant else LAYOUT_WINDOW
+        spec = self.kv_spec()
+        if layout not in spec.layouts:
+            raise ValueError(
+                f"family {spec.family!r} does not support cache layout "
+                f"{layout!r} (declared layouts: {spec.layouts})")
+        if spec.clamp_to_max_seq:
+            seq = min(seq, self.cfg.max_seq)
+        return self._build_cache(batch, seq, dtype, layout)
+
+    def _build_cache(self, batch: int, seq: int, dtype, layout: str
+                     ) -> PyTree:
+        raise NotImplementedError
 
     # -- entry points ------------------------------------------------- #
     def init(self, key) -> PyTree:
@@ -91,9 +188,6 @@ class ModelBase:
     def decode_step(self, params, tokens, cache) -> DecodeOut:
         raise NotImplementedError
 
-    def init_cache(self, batch: int, seq: int, dtype=jnp.bfloat16) -> PyTree:
-        raise NotImplementedError
-
     # -- dry-run specs ------------------------------------------------- #
     def batch_specs(self, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
         """ShapeDtypeStruct stand-ins for the data batch of this shape."""
@@ -102,7 +196,9 @@ class ModelBase:
         return {"tokens": tok, "targets": tok}
 
     def clamp_seq(self, seq: int) -> int:
-        return min(seq, self.cfg.max_seq) if self.cfg.family == "encdec" else seq
+        if self.kv_spec().clamp_to_max_seq:
+            return min(seq, self.cfg.max_seq)
+        return seq
 
     def decode_seq(self, shape: ShapeSpec) -> int:
         return self.clamp_seq(shape.seq_len)
@@ -133,8 +229,7 @@ class ModelBase:
     def streaming_window(self, shape: ShapeSpec) -> Tuple[int, int]:
         """(window, n_sinks) for this shape; (0, 0) = full attention."""
         cfg = self.cfg
-        if shape.name == "long_500k" and cfg.family in (
-                "dense", "moe", "mla_moe", "vlm"):
+        if shape.name == "long_500k" and self.kv_spec().streaming_long:
             return 8192, cfg.n_sink_tokens
         if cfg.sliding_window:
             return cfg.sliding_window, cfg.n_sink_tokens

@@ -23,6 +23,7 @@ from jax.experimental import io_callback
 
 from repro.models import common as C
 from repro.models.api import DecodeOut, ModelBase, PrefillOut
+from repro.models.kvspec import KVSpec, LAYOUT_MIXED, LAYOUT_WINDOW
 
 Array = jax.Array
 
@@ -94,15 +95,27 @@ def _inner_group(L: int) -> int:
 
 
 class DenseModel(ModelBase):
-    family_has_kv = True
-    supports_batched_decode = True
-    supports_quant_resident = True
-    # decode/prefill can run directly over the chunk-granular paged KV
-    # pool (executor arenas + residency page tables); requires the
-    # dense (L, B, S, KV, hd) k/v layout, so subclasses that change the
-    # cache structure are additionally gated on family == "dense" by
-    # the executor
-    supports_paged_pool = True
+
+    def kv_spec(self) -> KVSpec:
+        cfg = self.cfg
+        kv_dims = (cfg.n_kv_heads, cfg.head_dim)
+        return KVSpec(
+            family=cfg.family,
+            seq_leaves=("k", "v"),
+            leaf_dims={"k": kv_dims, "v": kv_dims},
+            servable=True,
+            chunkable=True,
+            recomputable=True,
+            batched_decode=True,
+            quant_resident=True,
+            paged=True,
+            pipelined_restore=True,
+            layouts=(LAYOUT_WINDOW, LAYOUT_MIXED),
+            tolerance_class="kv",
+            min_bits=2,
+            int8_serving=True,
+            streaming_long=True,
+        )
 
     # ------------------------------------------------------------------ #
     def init(self, key) -> Dict:
@@ -361,7 +374,7 @@ class DenseModel(ModelBase):
             return out, jnp.mean(ys["mass"], axis=0)        # (B, S)
         return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16, mixed_quant=False):
+    def _build_cache(self, batch, seq, dtype, layout):
         cfg = self.cfg
         shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.head_dim)
         cache = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
@@ -369,7 +382,7 @@ class DenseModel(ModelBase):
         if dtype == jnp.int8:       # quantized serving cache (+ scales)
             cache["k_scale"] = jnp.zeros(shape[:-1], jnp.float32)
             cache["v_scale"] = jnp.zeros(shape[:-1], jnp.float32)
-        elif mixed_quant:
+        elif layout == LAYOUT_MIXED:
             # mixed-precision working cache: bf16 recent window + int8
             # quant-resident chunk segments with per-(token, kv-head)
             # scales, selected per position by quant_mask.  The mask

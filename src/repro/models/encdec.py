@@ -20,11 +20,35 @@ from repro.configs.base import ShapeSpec
 from repro.models import common as C
 from repro.models.api import DecodeOut, ModelBase, PrefillOut
 from repro.models.dense import blockwise_ce
+from repro.models.kvspec import KVSpec
 
 Array = jax.Array
 
 
 class EncDecModel(ModelBase):
+
+    def kv_spec(self) -> KVSpec:
+        cfg = self.cfg
+        kv_dims = (cfg.n_heads, cfg.head_dim)   # MHA, not GQA
+        return KVSpec(
+            family=cfg.family,
+            # decoder self-attn K/V is token-indexed; cross K/V derives
+            # from the encoder output (audio) — a constant-size block
+            # that cannot be rebuilt from decoder text
+            seq_leaves=("k", "v"),
+            leaf_dims={"k": kv_dims, "v": kv_dims},
+            state_leaves=("xk", "xv"),
+            servable=False,           # prefill needs audio frames
+            chunkable=True,
+            recomputable=False,
+            batched_decode=False,
+            quant_resident=False,
+            paged=False,
+            pipelined_restore=False,
+            tolerance_class="kv",
+            min_bits=8,
+            clamp_to_max_seq=True,    # learned decoder positions: 448 cap
+        )
 
     def init(self, key) -> Dict:
         cfg = self.cfg
@@ -181,7 +205,8 @@ class EncDecModel(ModelBase):
             density = jnp.mean(extras["density"], axis=0)
         return PrefillOut(logits, cache, density)
 
-    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0,
+                    want_density=False):
         cfg = self.cfg
         B = tokens.shape[0]
         pos = cache["pos"]
@@ -212,12 +237,15 @@ class EncDecModel(ModelBase):
                       cache["xk"], cache["xv"]))
         x = C.layer_norm(x, params["ln_dec"], params["ln_dec_b"], cfg.norm_eps)
         logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
-        return DecodeOut(logits, {"k": k_new, "v": v_new, "xk": cache["xk"],
-                                  "xv": cache["xv"], "pos": pos + 1})
+        out = DecodeOut(logits, {"k": k_new, "v": v_new, "xk": cache["xk"],
+                                 "xv": cache["xv"], "pos": pos + 1})
+        if want_density:
+            return out, jnp.zeros((tokens.shape[0], 1), jnp.float32)
+        return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+    def _build_cache(self, batch, seq, dtype, layout):
         cfg = self.cfg
-        seq = min(seq, cfg.max_seq)
+        # base init_cache already clamped seq via spec.clamp_to_max_seq
         L, H, hd = cfg.n_layers, cfg.n_heads, cfg.head_dim
         F = cfg.encoder.n_frames
         return {

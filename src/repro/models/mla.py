@@ -19,15 +19,50 @@ import jax.numpy as jnp
 from repro.models import common as C
 from repro.models.api import DecodeOut, PrefillOut
 from repro.models.dense import DenseModel
+from repro.models.kvspec import KVSpec, LAYOUT_MIXED, LAYOUT_WINDOW
 from repro.models.moe_layer import init_moe_params, moe_ffn
 
 Array = jax.Array
 
+# mixed-precision (quant-resident) latent leaves: int8 codes + per-
+# (token, layer) scales over the whole rank vector, riding along the
+# bf16 window exactly like dense's k_q/v_q tier
+_LATENT_QUANT_LEAVES = ("ckv_q", "kpe_q", "ckv_scale", "kpe_scale")
+
+
+def _latent_select(c, q, s, qm0):
+    """Per-position select between the bf16 window and the dequantized
+    int8 resident segment.  c (B,S,r) bf16; q (B,S,r) int8; s (B,S)
+    fp32; qm0 (B,S) bool.  Matches the residency dequantize path
+    bit-for-bit at 8-bit (codes * scale, rounded once to c.dtype)."""
+    deq = (q.astype(jnp.float32) * s[..., None]).astype(c.dtype)
+    return jnp.where(qm0[..., None], deq, c)
+
 
 class MLAModel(DenseModel):
-    # overrides init_cache/decode_step/recompute without the mixed
-    # bf16+int8 cache: do not inherit the dense opt-in
-    supports_quant_resident = False
+
+    def kv_spec(self) -> KVSpec:
+        cfg, m = self.cfg, self.cfg.mla
+        return KVSpec(
+            family=cfg.family,
+            seq_leaves=("ckv", "kpe"),
+            leaf_dims={"ckv": (m.kv_lora_rank,),
+                       "kpe": (m.qk_rope_head_dim,)},
+            servable=True,
+            chunkable=True,
+            recomputable=True,
+            batched_decode=False,
+            quant_resident=True,
+            paged=False,
+            pipelined_restore=False,
+            layouts=(LAYOUT_WINDOW, LAYOUT_MIXED),
+            # the rank-512 latent carries no cross-head redundancy: the
+            # Eq.-3 planner stops at 8-bit (where dense K/V may drop to
+            # 4/2), so every swapped chunk is quant-resident eligible
+            tolerance_class="latent",
+            min_bits=8,
+            streaming_long=True,
+        )
 
     def init(self, key):
         cfg = self.cfg
@@ -138,7 +173,8 @@ class MLAModel(DenseModel):
         return PrefillOut(logits, cache, density)
 
     # -- absorbed decode ------------------------------------------------- #
-    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0,
+                    want_density=False):
         cfg, m = self.cfg, self.cfg.mla
         H = cfg.n_heads
         x = C.constrain_batch(
@@ -148,19 +184,37 @@ class MLAModel(DenseModel):
         qk_scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim
                                               + m.qk_rope_head_dim))
 
+        mixed = "ckv_q" in cache         # bf16 window + int8 latent tier
+        if mixed:
+            # the new token lands in the bf16 window: clear its
+            # quant-mask bit once (the mask is shared across layers)
+            S = cache["ckv"].shape[2]
+            s_pos = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+            idx = pos[None] if pos.ndim == 0 else pos
+            qm = cache["quant_mask"] & ~(s_pos[None, :] == idx[:, None])[None]
+
         def body(x, layer_in):
-            pl, ckv_c, kpe_c = layer_in
+            ckvq_c = kpeq_c = ckvs_c = kpes_c = None
+            if mixed:
+                pl, ckv_c, kpe_c, ckvq_c, kpeq_c, ckvs_c, kpes_c = layer_in
+            else:
+                pl, ckv_c, kpe_c = layer_in
             h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
             q_nope, q_pe = self._queries(pl, h, positions)      # (B,1,H,*)
             ckv_t, kpe_t = self._latents(pl, h, positions)
             ckv_c = C.ring_update(ckv_c, ckv_t, pos)            # (B,S,rank)
             kpe_c = C.ring_update(kpe_c, kpe_t, pos)
+            if mixed:
+                ckv_att = _latent_select(ckv_c, ckvq_c, ckvs_c, qm[0])
+                kpe_att = _latent_select(kpe_c, kpeq_c, kpes_c, qm[0])
+            else:
+                ckv_att, kpe_att = ckv_c, kpe_c
             # absorb W_uk into q:  q_abs (B,1,H,rank)
             w_uk = pl["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
             q_abs = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
-            s = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv_c,
+            s = (jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv_att,
                             preferred_element_type=jnp.float32)
-                 + jnp.einsum("bqhr,bsr->bhqs", q_pe, kpe_c,
+                 + jnp.einsum("bqhr,bsr->bhqs", q_pe, kpe_att,
                               preferred_element_type=jnp.float32)) * qk_scale
             S = ckv_c.shape[1]
             k_pos = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
@@ -170,28 +224,56 @@ class MLAModel(DenseModel):
                                  | (k_pos[None, :] < n_sinks))
             s = jnp.where(valid[:, None, None, :], s, C.NEG_INF)
             p = jax.nn.softmax(s, axis=-1)
-            ctx = jnp.einsum("bhqs,bsr->bqhr", p.astype(ckv_c.dtype), ckv_c)
+            ctx = jnp.einsum("bhqs,bsr->bqhr", p.astype(ckv_att.dtype),
+                             ckv_att)
             w_uv = pl["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
             out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)
             x = x + out.reshape(*x.shape[:2], -1) @ pl["wo"]
             x = C.constrain_batch(self._ffn(pl, x))
-            return x, (ckv_c, kpe_c)
+            ys = {"ckv": ckv_c, "kpe": kpe_c}
+            if want_density:
+                # Eq.-1 key mass at the decoded position: head-mean of
+                # the softmax row over the latent sequence
+                ys["mass"] = jnp.mean(p[:, :, 0, :], axis=1)    # (B, S)
+            return x, ys
 
-        x, (ckv_new, kpe_new) = jax.lax.scan(
-            body, x, (params["layers"], cache["ckv"], cache["kpe"]))
+        xs = (params["layers"], cache["ckv"], cache["kpe"])
+        if mixed:
+            xs = xs + tuple(cache[n] for n in _LATENT_QUANT_LEAVES)
+        x, ys = jax.lax.scan(body, x, xs)
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
-        return DecodeOut(logits,
-                         {"ckv": ckv_new, "kpe": kpe_new, "pos": pos + 1})
+        new_cache = {"ckv": ys["ckv"], "kpe": ys["kpe"], "pos": pos + 1}
+        if mixed:
+            for n in _LATENT_QUANT_LEAVES:
+                new_cache[n] = cache[n]
+            new_cache["quant_mask"] = qm
+        out = DecodeOut(logits, new_cache)
+        if want_density:
+            return out, jnp.mean(ys["mass"], axis=0)            # (B, S)
+        return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+    def _build_cache(self, batch, seq, dtype, layout):
         cfg, m = self.cfg, self.cfg.mla
-        return {
-            "ckv": jnp.zeros((cfg.n_layers, batch, seq, m.kv_lora_rank), dtype),
-            "kpe": jnp.zeros((cfg.n_layers, batch, seq, m.qk_rope_head_dim),
-                             dtype),
+        L = cfg.n_layers
+        cache = {
+            "ckv": jnp.zeros((L, batch, seq, m.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((L, batch, seq, m.qk_rope_head_dim), dtype),
             "pos": jnp.int32(0),
         }
+        if layout == LAYOUT_MIXED:
+            # mixed-precision working cache: bf16 latent window + int8
+            # quant-resident segments with per-(token, layer) scales
+            # over the whole rank vector, selected by quant_mask (dummy
+            # leading axis: axis 1 stays the batch axis on every leaf)
+            cache["ckv_q"] = jnp.zeros((L, batch, seq, m.kv_lora_rank),
+                                       jnp.int8)
+            cache["kpe_q"] = jnp.zeros((L, batch, seq, m.qk_rope_head_dim),
+                                       jnp.int8)
+            cache["ckv_scale"] = jnp.zeros((L, batch, seq), jnp.float32)
+            cache["kpe_scale"] = jnp.zeros((L, batch, seq), jnp.float32)
+            cache["quant_mask"] = jnp.zeros((1, batch, seq), bool)
+        return cache
 
     # -- Fig. 7 recompute over latent chunks ----------------------------- #
     def recompute(self, params, miss_tokens, miss_pos, cache, seq_len,
@@ -201,17 +283,32 @@ class MLAModel(DenseModel):
             params["embed"][miss_tokens].astype(jnp.bfloat16))
         S = cache["ckv"].shape[2]
         k_pos_all = jax.lax.broadcasted_iota(jnp.int32, (S,), 0)
+        mixed = "ckv_q" in cache
+        if mixed:
+            # recomputed positions land in the bf16 window; resident
+            # quant latents are read THROUGH during attention
+            qm = cache["quant_mask"] & ~jnp.any(
+                k_pos_all[None, :] == miss_pos[:, None], axis=0)[None, None]
 
         def body(x, layer_in):
-            pl, ckv_c, kpe_c = layer_in
+            ckvq_c = kpeq_c = ckvs_c = kpes_c = None
+            if mixed:
+                pl, ckv_c, kpe_c, ckvq_c, kpeq_c, ckvs_c, kpes_c = layer_in
+            else:
+                pl, ckv_c, kpe_c = layer_in
             h = C.rms_norm(x, pl["ln_attn"], cfg.norm_eps)
             q_nope, q_pe = self._queries(pl, h, miss_pos)
             q = jnp.concatenate([q_nope, q_pe], axis=-1)
             ckv_t, kpe_t = self._latents(pl, h, miss_pos)
             ckv_c = ckv_c.at[:, miss_pos].set(ckv_t.astype(ckv_c.dtype))
             kpe_c = kpe_c.at[:, miss_pos].set(kpe_t.astype(kpe_c.dtype))
-            k, v = self._expand_kv(pl, ckv_c.astype(x.dtype),
-                                   kpe_c.astype(x.dtype))
+            if mixed:
+                ckv_att = _latent_select(ckv_c, ckvq_c, ckvs_c, qm[0])
+                kpe_att = _latent_select(kpe_c, kpeq_c, kpes_c, qm[0])
+            else:
+                ckv_att, kpe_att = ckv_c, kpe_c
+            k, v = self._expand_kv(pl, ckv_att.astype(x.dtype),
+                                   kpe_att.astype(x.dtype))
             mask = C.causal_window_mask(miss_pos, k_pos_all, window, n_sinks)
             mask = mask & (k_pos_all < seq_len)[None, :]
             ao = C.gqa_attention(q, k, v, mask, want_density=want_density)
@@ -222,9 +319,15 @@ class MLAModel(DenseModel):
                 ys["density"] = ao.key_density
             return x, ys
 
-        x, ys = jax.lax.scan(
-            body, x, (params["layers"], cache["ckv"], cache["kpe"]))
+        xs = (params["layers"], cache["ckv"], cache["kpe"])
+        if mixed:
+            xs = xs + tuple(cache[n] for n in _LATENT_QUANT_LEAVES)
+        x, ys = jax.lax.scan(body, x, xs)
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         density = jnp.mean(ys["density"], axis=0) if want_density else None
-        return ({"ckv": ys["ckv"], "kpe": ys["kpe"], "pos": cache["pos"]},
-                x, density)
+        new_cache = {"ckv": ys["ckv"], "kpe": ys["kpe"], "pos": cache["pos"]}
+        if mixed:
+            for n in _LATENT_QUANT_LEAVES:
+                new_cache[n] = cache[n]
+            new_cache["quant_mask"] = qm
+        return new_cache, x, density

@@ -7,14 +7,25 @@ only ``init`` and ``_ffn`` change.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.models import common as C
 from repro.models.dense import DenseModel
+from repro.models.kvspec import KVSpec
 from repro.models.moe_layer import init_moe_params, moe_ffn
 
 
 class MoEModel(DenseModel):
+
+    def kv_spec(self) -> KVSpec:
+        # dense attention cache, but recompute replays expert routing —
+        # too expensive for restore planning / paged recovery until the
+        # expert-aware switch-in lands (ROADMAP follow-on)
+        return dataclasses.replace(super().kv_spec(),
+                                   recomputable=False, paged=False,
+                                   pipelined_restore=False)
 
     def init(self, key):
         cfg = self.cfg

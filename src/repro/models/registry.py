@@ -1,9 +1,14 @@
 """Family -> model-class registry.  ``build_model(cfg)`` is the single
-construction point used by the trainer, server, dry-run and tests."""
+construction point used by the trainer, server, dry-run and tests, and
+``family_spec(cfg)`` the single capability-query surface: anything that
+needs to know what a family's cache can do asks for its KVSpec here
+instead of string-matching ``cfg.family`` (the analysis ``familycheck``
+pass bans family-string dispatch everywhere else)."""
 from __future__ import annotations
 
 from repro.configs.base import ModelConfig
 from repro.models.api import ModelBase
+from repro.models.kvspec import KVSpec
 from repro.models.dense import DenseModel
 from repro.models.encdec import EncDecModel
 from repro.models.mla import MLAModel
@@ -23,5 +28,14 @@ FAMILY_CLASSES = {
 }
 
 
+FAMILIES = tuple(FAMILY_CLASSES)
+
+
 def build_model(cfg: ModelConfig) -> ModelBase:
     return FAMILY_CLASSES[cfg.family](cfg)
+
+
+def family_spec(cfg: ModelConfig) -> KVSpec:
+    """The family's declarative cache adapter for this config.  Cheap:
+    model construction allocates no parameters."""
+    return build_model(cfg).kv_spec()

@@ -28,6 +28,7 @@ from repro.configs.base import ModelConfig
 from repro.models import common as C
 from repro.models.api import DecodeOut, ModelBase, PrefillOut
 from repro.models.dense import blockwise_ce
+from repro.models.kvspec import KVSpec
 
 Array = jax.Array
 RG_C = 8.0
@@ -54,6 +55,29 @@ def block_diag_apply(x: Array, w: Array, b: Array) -> Array:
 
 
 class RGLRUModel(ModelBase):
+
+    def kv_spec(self) -> KVSpec:
+        cfg = self.cfg
+        kv_dims = (cfg.n_kv_heads, cfg.head_dim)
+        return KVSpec(
+            family=cfg.family,
+            # hybrid: local-MQA K/V is token-indexed (leading axis is
+            # n_attn, not n_layers, but the codec only slices along
+            # TOKEN_AXIS); conv/lru recurrence is constant-size state
+            seq_leaves=("k", "v"),
+            leaf_dims={"k": kv_dims, "v": kv_dims},
+            state_leaves=("conv", "lru"),
+            servable=False,           # no incremental append entry yet
+            chunkable=True,
+            recomputable=False,
+            batched_decode=False,
+            quant_resident=False,
+            paged=False,
+            pipelined_restore=False,
+            pad_safe=False,           # pads fold into the recurrence
+            tolerance_class="state",
+            min_bits=16,
+        )
 
     def init(self, key) -> Dict:
         cfg = self.cfg
@@ -276,7 +300,8 @@ class RGLRUModel(ModelBase):
                  "lru": out["lru"], "pos": jnp.int32(tokens.shape[1])}
         return PrefillOut(logits, cache, out.get("density"))
 
-    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0,
+                    want_density=False):
         cfg = self.cfg
         g = cfg.rglru
         n_rec, n_attn, n_tri, n_trail = _block_counts(cfg)
@@ -341,10 +366,14 @@ class RGLRUModel(ModelBase):
             lrus = jnp.concatenate([lrus, jnp.stack(trail_lr)])
         x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
         logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
-        return DecodeOut(logits, {"k": ys["k"], "v": ys["v"], "conv": convs,
-                                  "lru": lrus, "pos": pos + 1})
+        out = DecodeOut(logits, {"k": ys["k"], "v": ys["v"], "conv": convs,
+                                 "lru": lrus, "pos": pos + 1})
+        if want_density:
+            # density tracked at prefill granularity for the hybrid
+            return out, jnp.zeros((tokens.shape[0], 1), jnp.float32)
+        return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+    def _build_cache(self, batch, seq, dtype, layout):
         cfg = self.cfg
         g = cfg.rglru
         n_rec, n_attn, _, _ = _block_counts(cfg)

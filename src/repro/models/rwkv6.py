@@ -28,12 +28,33 @@ import jax.numpy as jnp
 from repro.models import common as C
 from repro.models.api import DecodeOut, ModelBase, PrefillOut
 from repro.models.dense import blockwise_ce
+from repro.models.kvspec import KVSpec
 
 Array = jax.Array
 LOG_DECAY_FLOOR = -5.0
 
 
 class RWKV6Model(ModelBase):
+
+    def kv_spec(self) -> KVSpec:
+        return KVSpec(
+            family=self.cfg.family,
+            seq_leaves=(),
+            state_leaves=("wkv", "tm", "cm"),
+            servable=True,
+            chunkable=False,          # constant-size state: one blob
+            recomputable=True,        # state rebuilds from resident text
+            batched_decode=False,
+            quant_resident=False,
+            paged=False,
+            pipelined_restore=False,
+            # a pad token folds into the carried recurrence — extends
+            # must run at exact length, never bucket-padded
+            pad_safe=False,
+            tolerance_class="state",
+            min_bits=16,              # fp16 snapshot only; never chunk-quant
+            density=False,            # attention-free: no Eq.-1 statistic
+        )
 
     def init(self, key) -> Dict:
         cfg = self.cfg
@@ -231,7 +252,8 @@ class RWKV6Model(ModelBase):
                  "pos": jnp.int32(tokens.shape[1])}
         return PrefillOut(logits, cache, None)   # attention-free: no Eq.-1
 
-    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0,
+                    want_density=False):
         cfg, rw = self.cfg, self.cfg.rwkv
         H, hd, d = cfg.n_heads, rw.head_dim, cfg.d_model
         x = C.constrain_batch(
@@ -260,12 +282,35 @@ class RWKV6Model(ModelBase):
                                        cache["tm"], cache["cm"]))
         x = C.layer_norm(x, params["ln_f"], params["ln_f_b"], cfg.norm_eps)
         logits = (x[:, 0] @ self.head_weight(params)).astype(jnp.float32)
-        return DecodeOut(logits, {"wkv": ys["wkv"], "tm": ys["tm"],
-                                  "cm": ys["cm"], "pos": cache["pos"] + 1})
+        out = DecodeOut(logits, {"wkv": ys["wkv"], "tm": ys["tm"],
+                                 "cm": ys["cm"], "pos": cache["pos"] + 1})
+        if want_density:
+            # attention-free: no Eq.-1 key mass; the accumulator is
+            # length-tolerant, so a (B, 1) zero row is a clean no-op
+            return out, jnp.zeros((tokens.shape[0], 1), jnp.float32)
+        return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+    def recompute(self, params, miss_tokens, miss_pos, cache, seq_len,
+                  window=0, n_sinks=0, want_density=False):
+        """Constant-state 'recompute': run the text through the
+        recurrence continuing from the state carried in ``cache`` (a
+        zero state rebuilds from scratch).  ``miss_pos`` must be the
+        contiguous append range — recurrent state has no random access,
+        so there are no mid-sequence hole fills."""
+        x, ys = self._forward_full(params, miss_tokens,
+                                   state={"wkv": cache["wkv"],
+                                          "tm": cache["tm"],
+                                          "cm": cache["cm"]})
+        new_cache = {"wkv": ys["wkv"], "tm": ys["tm"], "cm": ys["cm"],
+                     "pos": cache["pos"]}
+        density = (jnp.zeros(miss_tokens.shape, jnp.float32)
+                   if want_density else None)
+        return new_cache, x, density
+
+    def _build_cache(self, batch, seq, dtype, layout):
         cfg, rw = self.cfg, self.cfg.rwkv
         L, H, hd, d = cfg.n_layers, cfg.n_heads, rw.head_dim, cfg.d_model
+        # seq-independent: the state is one constant-size blob
         return {
             "wkv": jnp.zeros((L, batch, H, hd, hd), jnp.float32),
             "tm": jnp.zeros((L, batch, d), jnp.bfloat16),

@@ -23,14 +23,38 @@ from repro.configs.base import ShapeSpec
 from repro.models import common as C
 from repro.models.api import DecodeOut, PrefillOut
 from repro.models.dense import DenseModel, blockwise_ce
+from repro.models.kvspec import KVSpec
 
 Array = jax.Array
 
 
 class VLMModel(DenseModel):
-    # overrides init_cache/decode_step without the mixed bf16+int8
-    # cache: do not inherit the dense opt-in
-    supports_quant_resident = False
+
+    def kv_spec(self) -> KVSpec:
+        cfg = self.cfg
+        kv_dims = (cfg.n_kv_heads, cfg.head_dim)
+        return KVSpec(
+            family=cfg.family,
+            # self-attn K/V is token-indexed and chunkable; the
+            # cross-attn image blocks (xk/xv) are constant-size state —
+            # derived from image embeddings, NOT recomputable from text
+            seq_leaves=("k", "v"),
+            leaf_dims={"k": kv_dims, "v": kv_dims},
+            state_leaves=("xk", "xv"),
+            servable=False,           # prefill needs patches: no text-only
+            chunkable=True,           # recompute/extend path in the executor
+            recomputable=False,
+            batched_decode=False,
+            quant_resident=False,
+            paged=False,
+            pipelined_restore=False,
+            # image-conditioned chunks carry no cross-head redundancy
+            # the Eq.-3 planner can exploit: floor at 8-bit
+            tolerance_class="image",
+            min_bits=8,
+            int8_serving=True,
+            streaming_long=True,
+        )
 
     def _counts(self):
         cfg = self.cfg
@@ -173,7 +197,8 @@ class VLMModel(DenseModel):
             density = jnp.mean(ys["density"], axis=(0, 1))
         return PrefillOut(logits, cache, density)
 
-    def decode_step(self, params, tokens, cache, window=0, n_sinks=0):
+    def decode_step(self, params, tokens, cache, window=0, n_sinks=0,
+                    want_density=False):
         cfg = self.cfg
         n_self, n_cross, per = self._counts()
         x = C.constrain_batch(params["embed"][tokens].astype(jnp.bfloat16))
@@ -214,9 +239,14 @@ class VLMModel(DenseModel):
             "v": v_new.reshape(n_self, *cache["v"].shape[1:]),
             "xk": cache["xk"], "xv": cache["xv"], "pos": pos + 1,
         }
-        return DecodeOut(logits, cache_out)
+        out = DecodeOut(logits, cache_out)
+        if want_density:
+            # density is tracked at prefill granularity for VLM; the
+            # accumulator tolerates a short zero row
+            return out, jnp.zeros((tokens.shape[0], 1), jnp.float32)
+        return out
 
-    def init_cache(self, batch, seq, dtype=jnp.bfloat16):
+    def _build_cache(self, batch, seq, dtype, layout):
         cfg = self.cfg
         n_self, n_cross, _ = self._counts()
         vis = cfg.vision

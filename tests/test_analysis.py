@@ -138,6 +138,25 @@ def test_pr3_deadlock_fixture_flagged():
     assert "lock/blocking-in-worker" in rules(analyze_source(src))
 
 
+def test_family_dispatch_fixture_flagged():
+    src = (FIXDIR / "family_dispatch.py").read_text()
+    flagged = [f for f in analyze_source(src)
+               if f.checker == "family" and f.rule == "string-dispatch"]
+    # the two old executor gates + the != fork; the `fam not in` local
+    # alias is deliberately out of reach (name-based, no dataflow)
+    assert len(flagged) >= 3
+    assert {f.scope for f in flagged} == {"OldExecutor.init_cache"}
+
+
+def test_family_dispatch_registry_allowlisted():
+    # the registry IS the dispatch point: scanning the real tree must
+    # not flag it (covered by the repo-clean gate below, but assert the
+    # allowlist explicitly so a rename breaks loudly)
+    from repro.analysis import config as acfg
+    assert "src/repro/models/registry.py" in \
+        acfg.FAMILY_DISPATCH_ALLOWED_FILES
+
+
 def test_pr6_restore_race_fixture_flagged():
     src = (FIXDIR / "pr6_restore_race.py").read_text()
     fs = analyze_source(src)

@@ -158,16 +158,24 @@ def test_quant_resident_requires_chunked_policy():
 
 
 def test_quant_resident_capability_gating():
-    """Families that override the dense cache/decode entry points
-    without mixed-precision support must refuse quant_resident at
-    construction — not crash inside init_cache (MLA/VLM inherit from
-    DenseModel but do not inherit the opt-in)."""
-    for arch in ("deepseek-v2-lite-16b", "llama-3.2-vision-90b"):
-        cfg, model, params = tiny_model(arch)
-        sc = LLMSConfig(policy="llms", quant_resident=True, max_ctx_len=128,
-                        swap_dir=tempfile.mkdtemp())
-        with pytest.raises(ValueError, match="quant-resident"):
-            LLMService(model, params, sc)
+    """quant_resident is an opt-in bit on the family's KVSpec: a
+    servable family that does not declare it refuses at construction —
+    not crash inside init_cache (rwkv6's constant state has no int8
+    chunk segments) — while MLA's latent (ckv, kpe) chunks DO carry
+    the opt-in, so the same config constructs cleanly there."""
+    _, model, params = tiny_model("rwkv6-1.6b")
+    sc = LLMSConfig(policy="llms", quant_resident=True, max_ctx_len=128,
+                    swap_dir=tempfile.mkdtemp())
+    assert not model.kv_spec().quant_resident
+    with pytest.raises(ValueError, match="quant-resident"):
+        LLMService(model, params, sc)
+
+    _, model, params = tiny_model("deepseek-v2-lite-16b")
+    assert model.kv_spec().quant_resident
+    sc = LLMSConfig(policy="llms", quant_resident=True, max_ctx_len=128,
+                    swap_dir=tempfile.mkdtemp())
+    with LLMService(model, params, sc):
+        pass
 
 
 # --------------------------------------------------------------------- #

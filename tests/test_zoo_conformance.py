@@ -1,0 +1,240 @@
+"""Per-family conformance suite for the KVSpec cache-adapter protocol
+(DESIGN.md §2): every family in the registry must honor the contract
+its spec declares — layout validation, chunk/whole-state round-trips,
+the executor servable gate, batched-decode token identity — and the
+one-release deprecation shims must warn.  Plus a ZooService routing
+unit test (the heterogeneous zoo behind one budget, DESIGN.md §4)."""
+import tempfile
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import make_batch, tiny_model
+from repro.configs import REGISTRY, get_config, reduced
+from repro.core.chunks import ChunkCodec, WholeStateCodec
+from repro.core.service import LLMSConfig
+from repro.models.kvspec import LAYOUT_MIXED, LAYOUT_WINDOW
+from repro.models.registry import FAMILIES, family_spec
+
+# one representative arch per family; zoo families pinned to the
+# benchmark's members, the rest take the first registry entry
+FAMILY_ARCH = {"dense": "smollm-360m",
+               "mla_moe": "deepseek-v2-lite-16b",
+               "rwkv6": "rwkv6-1.6b"}
+for _name in sorted(REGISTRY):
+    FAMILY_ARCH.setdefault(REGISTRY[_name].family, _name)
+
+ALL_FAMILIES = sorted(FAMILY_ARCH)
+
+
+def spec_only(family):
+    """(cfg, spec) without touching params — the registry query path."""
+    cfg = reduced(get_config(FAMILY_ARCH[family]))
+    return cfg, family_spec(cfg)
+
+
+def test_registry_covers_every_family():
+    assert set(FAMILY_ARCH) == set(FAMILIES)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_spec_declares_a_coherent_cache(family):
+    cfg, spec = spec_only(family)
+    assert spec.family == cfg.family == family
+    # KVSpec.__post_init__ enforces the cross-field invariants; assert
+    # the repo-level expectations on top
+    assert spec.seq_leaves or spec.state_leaves
+    assert spec.tolerance_class in ("kv", "latent", "image", "state")
+    assert spec.min_bits in (2, 4, 8, 16)
+    assert LAYOUT_WINDOW in spec.layouts
+    if spec.quant_resident:
+        assert LAYOUT_MIXED in spec.layouts
+    if spec.state_leaves:
+        # recurrent state is never chunk-quantized below 16 bits and
+        # never pad-extended
+        if not spec.seq_leaves:
+            assert spec.min_bits == 16 and not spec.pad_safe
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_undeclared_layout_is_a_clean_error(family):
+    _, model, _ = tiny_model(FAMILY_ARCH[family])
+    spec = model.kv_spec()
+    with pytest.raises(ValueError, match="does not support cache layout"):
+        model.init_cache(1, 32, layout="bogus")
+    if LAYOUT_MIXED not in spec.layouts:
+        with pytest.raises(ValueError,
+                           match="does not support cache layout"):
+            model.init_cache(1, 32, layout=LAYOUT_MIXED)
+    else:
+        model.init_cache(1, 32, layout=LAYOUT_MIXED)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_supports_flags_warn_and_answer_from_spec(family):
+    _, model, _ = tiny_model(FAMILY_ARCH[family])
+    spec = model.kv_spec()
+    for attr, field in (("supports_batched_decode", "batched_decode"),
+                        ("supports_quant_resident", "quant_resident"),
+                        ("supports_paged_pool", "paged")):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            assert getattr(model, attr) == getattr(spec, field)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_mixed_quant_kwarg_warns_and_maps_to_layout(family):
+    _, model, _ = tiny_model(FAMILY_ARCH[family])
+    spec = model.kv_spec()
+    want_mixed = spec.quant_resident
+    with pytest.warns(DeprecationWarning, match="mixed_quant"):
+        legacy = model.init_cache(2, 32, mixed_quant=want_mixed)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        new = model.init_cache(
+            2, 32, layout=LAYOUT_MIXED if want_mixed else LAYOUT_WINDOW)
+    assert jax.tree.structure(legacy) == jax.tree.structure(new)
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_declared_leaves_round_trip(family):
+    """The codec contract: every declared leaf extracts to a canonical
+    block and inserts back bit-exactly (chunk codec over seq_leaves,
+    whole-state codec over state_leaves)."""
+    _, model, _ = tiny_model(FAMILY_ARCH[family])
+    spec = model.kv_spec()
+    cache = model.init_cache(2, 32)
+    key = jax.random.PRNGKey(3)
+    filled = dict(cache)
+    for name in spec.seq_leaves + spec.state_leaves:
+        a = cache[name]
+        key, sub = jax.random.split(key)
+        filled[name] = jax.random.normal(sub, a.shape).astype(a.dtype)
+    if spec.seq_leaves:
+        codec = ChunkCodec(spec.seq_leaves, 16)
+        blocks = codec.extract(filled, 0, 16)
+        assert set(blocks) == set(spec.seq_leaves)
+        back = codec.extract(codec.insert(cache, 0, blocks), 0, 16)
+        for name in blocks:
+            np.testing.assert_array_equal(np.asarray(blocks[name]),
+                                          np.asarray(back[name]))
+    if spec.state_leaves:
+        codec = WholeStateCodec(spec.state_leaves, 16)
+        blocks = codec.extract(filled)
+        assert set(blocks) == set(spec.state_leaves)
+        back = codec.extract(codec.insert(cache, 0, blocks))
+        for name in blocks:
+            np.testing.assert_array_equal(np.asarray(blocks[name]),
+                                          np.asarray(back[name]))
+
+
+@pytest.mark.parametrize("family", ALL_FAMILIES)
+def test_executor_honors_servable_gate(family):
+    from repro.core.executor import ModelExecutor
+    _, model, params = tiny_model(FAMILY_ARCH[family])
+    sc = LLMSConfig(policy="llms", max_ctx_len=64, chunk_tokens=16)
+    if model.kv_spec().servable:
+        exe = ModelExecutor(model, params, sc)
+        assert exe.spec is not None
+        assert exe.chunked_cache == model.kv_spec().chunkable
+    else:
+        with pytest.raises(ValueError, match="not servable"):
+            ModelExecutor(model, params, sc)
+
+
+@pytest.mark.parametrize(
+    "family", [f for f in ALL_FAMILIES
+               if family_spec(reduced(get_config(FAMILY_ARCH[f])))
+               .batched_decode])
+def test_batched_decode_is_token_identical_to_serial(family):
+    """The spec bit is a PROMISE: [B, 1] batched decode must pick the
+    same tokens as B serial batch-1 decodes."""
+    cfg, model, params = tiny_model(FAMILY_ARCH[family])
+    B, S = 2, 8
+    batch = make_batch(cfg, B, S, seed=11)
+    dec = jax.jit(model.decode_step)
+    cb = model.init_cache(B, 16)
+    for i in range(S):
+        out = dec(params, batch["tokens"][:, i:i + 1], cb)
+        cb = out.cache
+    serial = []
+    for b in range(B):
+        c1 = model.init_cache(1, 16)
+        for i in range(S):
+            o = dec(params, batch["tokens"][b:b + 1, i:i + 1], c1)
+            c1 = o.cache
+        serial.append(np.asarray(o.logits))
+    batched = np.asarray(out.logits)
+    serial = np.concatenate(serial, axis=0)
+    np.testing.assert_array_equal(batched.argmax(-1), serial.argmax(-1))
+    np.testing.assert_allclose(batched, serial, rtol=2e-2, atol=2e-2)
+
+
+# --------------------------------------------------------------------- #
+# ZooService: many families, one budget
+# --------------------------------------------------------------------- #
+
+def _zoo(fams=("dense", "rwkv6"), budget=500_000):
+    members = {}
+    for fam in fams:
+        _, model, params = tiny_model(FAMILY_ARCH[fam])
+        members[fam] = (model, params,
+                        LLMSConfig(policy="llms", max_ctx_len=64,
+                                   chunk_tokens=16, memory_budget=budget))
+    from repro.core.zoo import ZooService
+    return ZooService(members, memory_budget=budget,
+                      swap_dir=tempfile.mkdtemp(prefix="zoo_test_"))
+
+
+def test_zoo_routes_by_context_ownership():
+    with _zoo() as zoo:
+        with pytest.raises(ValueError, match="unknown family"):
+            zoo.newLLMCtx(family="nope")
+        s_d = zoo.newLLMCtx(family="dense")
+        s_r = zoo.newLLMCtx(family="rwkv6")
+        # one cid space across members
+        assert s_d.ctx_id != s_r.ctx_id
+        assert zoo.family_of(s_d.ctx_id) == "dense"
+        assert zoo.family_of(s_r.ctx_id) == "rwkv6"
+        _, toks_d = zoo.callLLM(s_d, [1, 2, 3, 4], max_new_tokens=3)
+        _, toks_r = zoo.callLLM(s_r, [5, 6, 7, 8], max_new_tokens=3)
+        assert len(toks_d) == 3 and len(toks_r) == 3
+        st = zoo.stats()
+        assert set(st["families"]) == {"dense", "rwkv6"}
+        assert st["families"]["dense"]["total_calls"] == 1
+        assert st["families"]["rwkv6"]["total_calls"] == 1
+        assert st["total_calls"] == 2
+        # both families' bytes are charged to the ONE budget
+        assert st["families"]["dense"]["resident_bytes"] > 0
+        assert st["families"]["rwkv6"]["resident_bytes"] > 0
+        assert st["mem_used"] <= 500_000
+        zoo.delLLMCtx(s_d)
+        assert s_d.ctx_id not in zoo._owner
+
+
+def test_zoo_default_family_is_first_member():
+    with _zoo() as zoo:
+        stub = zoo.newLLMCtx()
+        assert zoo.family_of(stub.ctx_id) == "dense"
+
+
+def test_zoo_tokens_match_solo_service():
+    """The shared substrate must not change what a member generates:
+    the same prompt to the same family, solo vs zoo, same tokens."""
+    from repro.core.service import LLMService
+    prompt = [9, 10, 11, 12]
+    with _zoo() as zoo:
+        stub = zoo.newLLMCtx(family="dense")
+        _, zoo_toks = zoo.callLLM(stub, prompt, max_new_tokens=4)
+    _, model, params = tiny_model(FAMILY_ARCH["dense"])
+    sc = LLMSConfig(policy="llms", max_ctx_len=64, chunk_tokens=16,
+                    memory_budget=500_000,
+                    swap_dir=tempfile.mkdtemp(prefix="solo_test_"))
+    svc = LLMService(model, params, sc)
+    try:
+        stub = svc.newLLMCtx()
+        _, solo_toks = svc.callLLM(stub, prompt, max_new_tokens=4)
+    finally:
+        svc.close()
+    assert zoo_toks == solo_toks
